@@ -1,0 +1,68 @@
+"""Competitor baselines from the paper's evaluation (§4.1 Algorithms).
+
+* PSCAN       — core/search.py::pscan_knn (optimized parallel scan).
+* DSTree*     — Hercules with SAX filtering disabled (EAPCA tree + LB_EAPCA
+                pruning + refinement), the paper's "NoSAX"-equivalent of a
+                DSTree-style index. Same exact results.
+* ParIS+/VA+file-like — a flat quantization-filter index: LB_SAX (iSAX 16x256
+                summaries, the ParIS+ filter; swap in DFT for VA+file) over
+                the whole collection, then chunked skip-sequential
+                refinement ordered by lower bound. No clustering tree, which
+                is exactly the structural difference the paper credits for
+                Hercules's win on hard workloads.
+
+All baselines return exact kNN (the paper's ground rule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lower_bounds as LB
+from repro.core import summaries as S
+from repro.core.search import INF, _merge_topk
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def flat_sax_knn(data: jax.Array, codes: jax.Array, queries: jax.Array,
+                 k: int = 1, chunk: int = 1024):
+    """ParIS+-style skip-sequential: LB_SAX filter + BSF-pruned refinement."""
+    n, dim = data.shape
+    n_pad = -(-n // chunk) * chunk
+    if n_pad != n:
+        data = jnp.concatenate(
+            [data, jnp.zeros((n_pad - n, dim), data.dtype)], axis=0)
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((n_pad - n, codes.shape[1]), codes.dtype)], axis=0)
+
+    def one(q):
+        q_paa = S.paa(q[None], codes.shape[1])[0]
+        lb = LB.lb_sax(q_paa, codes, dim)
+        lb = jnp.where(jnp.arange(n_pad) < n, lb, INF)
+        order = jnp.argsort(lb).astype(jnp.int32)
+        sorted_lb = lb[order]
+        n_chunks = n_pad // chunk
+
+        def cond(st):
+            c, d_top, p_top, acc = st
+            return (c < n_chunks) & (sorted_lb[c * chunk] < d_top[k - 1])
+
+        def body(st):
+            c, d_top, p_top, acc = st
+            idx = jax.lax.dynamic_slice(order, (c * chunk,), (chunk,))
+            lbs = jax.lax.dynamic_slice(sorted_lb, (c * chunk,), (chunk,))
+            d = jnp.sum(jnp.square(data[idx] - q[None]), axis=1)
+            live = lbs < d_top[k - 1]
+            d = jnp.where(live, d, INF)
+            d_top, p_top = _merge_topk(d_top, p_top, d, idx, k)
+            return (c + 1, d_top, p_top, acc + jnp.sum(live.astype(jnp.int32)))
+
+        d0 = jnp.full((k,), INF)
+        p0 = jnp.full((k,), -1, jnp.int32)
+        _, d_top, p_top, acc = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), d0, p0, jnp.int32(0)))
+        return d_top, p_top, acc
+
+    return jax.lax.map(one, queries)

@@ -1,0 +1,186 @@
+"""One benchmark per paper table/figure (DESIGN.md §7).
+
+Every function prints ``name,us_per_call,derived`` CSV rows. Sizes are scaled
+to CPU (1 core) but preserve the paper's comparisons: method orderings and
+pruning ratios are the reproduced claims; absolute wall-clock is directional.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.baselines import flat_sax_knn
+from benchmarks.common import emit, time_call
+from repro.core import (BuildConfig, HerculesIndex, IndexConfig, SearchConfig,
+                        brute_force_knn, pscan_knn)
+from repro.core import summaries as S
+from repro.data import DIFFICULTY_LEVELS, make_query_workload, random_walks
+
+_SEARCH = dict(l_max=8, chunk=512, scan_block=2048)
+
+
+def _build(data, tau=128, **kw):
+    cfg = IndexConfig(build=BuildConfig(leaf_capacity=tau),
+                      search=SearchConfig(**{**_SEARCH, **kw}))
+    return HerculesIndex.build(data, cfg)
+
+
+def _check_exact(res_d, data, q, k):
+    bf, _ = brute_force_knn(data, q, k)
+    if not np.allclose(np.asarray(res_d), np.asarray(bf), rtol=1e-3, atol=1e-3):
+        raise AssertionError("benchmark answer mismatch vs brute force")
+
+
+# --------------------------------------------------------------------------
+# Fig 6/7: scalability with dataset size (index build + query answering)
+# --------------------------------------------------------------------------
+
+def bench_scalability_size(sizes=(2048, 8192, 32768), n=128, nq=16):
+    key = jax.random.PRNGKey(0)
+    for num in sizes:
+        data = random_walks(key, num, n)
+        q = make_query_workload(jax.random.PRNGKey(1), data, nq, "5%")
+        codes = S.isax(data, 16)
+
+        t_build = time_call(lambda d=data: _build(d), warmup=0, iters=1)
+        idx = _build(data)
+        res = idx.knn(q, k=1)
+        _check_exact(res.dists, data, q, 1)
+        t_herc = time_call(lambda: idx.knn(q, k=1))
+        t_scan = time_call(lambda: pscan_knn(data, q, k=1))
+        t_flat = time_call(lambda: flat_sax_knn(data, codes, q, k=1))
+        t_nosax = time_call(lambda: idx.knn(q, k=1, use_sax=False))
+        emit(f"fig6_size{num}_build_hercules", t_build,
+             f"leaves={idx.stats()['num_leaves']}")
+        emit(f"fig6_size{num}_query_hercules", t_herc / nq,
+             f"accessed={float(res.accessed.mean()) / num:.3f}")
+        emit(f"fig6_size{num}_query_pscan", t_scan / nq, "accessed=1.0")
+        emit(f"fig6_size{num}_query_parisplus_like", t_flat / nq, "")
+        emit(f"fig6_size{num}_query_dstree_like", t_nosax / nq, "")
+
+
+# --------------------------------------------------------------------------
+# Fig 8: scalability with series length
+# --------------------------------------------------------------------------
+
+def bench_series_length(lengths=(64, 128, 256, 512), num=8192, nq=8):
+    for n in lengths:
+        data = random_walks(jax.random.PRNGKey(2), num, n)
+        q = make_query_workload(jax.random.PRNGKey(3), data, nq, "5%")
+        idx = _build(data)
+        res = idx.knn(q, k=1)
+        _check_exact(res.dists, data, q, 1)
+        t_herc = time_call(lambda: idx.knn(q, k=1))
+        t_scan = time_call(lambda: pscan_knn(data, q, k=1))
+        emit(f"fig8_len{n}_query_hercules", t_herc / nq,
+             f"speedup_vs_scan={t_scan / max(t_herc, 1e-9):.2f}x")
+        emit(f"fig8_len{n}_query_pscan", t_scan / nq, "")
+
+
+# --------------------------------------------------------------------------
+# Fig 9/10: query difficulty (time + % data accessed)
+# --------------------------------------------------------------------------
+
+def bench_difficulty(num=16384, n=128, nq=16):
+    data = random_walks(jax.random.PRNGKey(4), num, n)
+    idx = _build(data)
+    codes = S.isax(data, 16)
+    for diff in DIFFICULTY_LEVELS:
+        q = make_query_workload(jax.random.PRNGKey(5), data, nq, diff)
+        res = idx.knn(q, k=1)
+        _check_exact(res.dists, data, q, 1)
+        t_herc = time_call(lambda: idx.knn(q, k=1))
+        t_scan = time_call(lambda: pscan_knn(data, q, k=1))
+        t_flat = time_call(lambda: flat_sax_knn(data, codes, q, k=1))
+        acc = float(res.accessed.mean()) / num
+        paths = np.bincount(np.asarray(res.path), minlength=4)
+        emit(f"fig10_{diff}_hercules", t_herc / nq,
+             f"accessed={acc:.3f};paths={'/'.join(map(str, paths))}")
+        emit(f"fig10_{diff}_pscan", t_scan / nq, "accessed=1.0")
+        emit(f"fig10_{diff}_parisplus_like", t_flat / nq, "")
+
+
+# --------------------------------------------------------------------------
+# Fig 11: scalability with k
+# --------------------------------------------------------------------------
+
+def bench_k(num=16384, n=128, nq=8, ks=(1, 5, 25, 100)):
+    data = random_walks(jax.random.PRNGKey(6), num, n)
+    q = make_query_workload(jax.random.PRNGKey(7), data, nq, "5%")
+    idx = _build(data)
+    for k in ks:
+        res = idx.knn(q, k=k)
+        _check_exact(res.dists, data, q, k)
+        t = time_call(lambda: idx.knn(q, k=k))
+        emit(f"fig11_k{k}_hercules", t / nq,
+             f"accessed={float(res.accessed.mean()) / num:.3f}")
+
+
+# --------------------------------------------------------------------------
+# Fig 12: ablation (NoSAX / NoThresh / NoPara analogue)
+# --------------------------------------------------------------------------
+
+def bench_ablation(num=16384, n=128, nq=16):
+    data = random_walks(jax.random.PRNGKey(8), num, n)
+    idx = _build(data)
+    # NoPara analogue: narrow vectorization (chunk/scan_block 64) — the
+    # vector lanes play the role of the paper's threads+SIMD
+    idx_narrow = _build(data, chunk=64, scan_block=64)
+    for diff in ("1%", "5%", "ood"):
+        q = make_query_workload(jax.random.PRNGKey(9), data, nq, diff)
+        variants = {
+            "hercules": lambda: idx.knn(q, k=1),
+            "nosax": lambda: idx.knn(q, k=1, use_sax=False),
+            "nothresh": lambda: idx.knn(q, k=1, adaptive=False),
+            "nopara": lambda: idx_narrow.knn(q, k=1),
+        }
+        for name, fn in variants.items():
+            res = fn()
+            _check_exact(res.dists, data, q, 1)
+            t = time_call(fn)
+            emit(f"fig12_{diff}_{name}", t / nq,
+                 f"accessed={float(res.accessed.mean()) / num:.3f}")
+
+
+# --------------------------------------------------------------------------
+# kernel/throughput microbenches (XLA paths; Pallas validated in tests)
+# --------------------------------------------------------------------------
+
+def bench_kernels(num=32768, n=128, nq=64):
+    data = random_walks(jax.random.PRNGKey(10), num, n)
+    q = data[:nq] + 0.01
+    codes = S.isax(data, 16)
+    q_paa = S.paa(q, 16)
+
+    t = time_call(lambda: pscan_knn(data, q, k=1))
+    flops = 3.0 * nq * num * n
+    emit("kern_pscan_ed_scan", t, f"GFLOPs={flops / t / 1e3:.2f}")
+
+    from repro.core.lower_bounds import lb_sax_pairwise
+    t = time_call(lambda: lb_sax_pairwise(q_paa, codes, n))
+    emit("kern_lb_sax_matrix", t,
+         f"Gseries/s={nq * num / t / 1e3:.3f}")
+
+    t = time_call(lambda: _build(data), warmup=0, iters=1)
+    emit("kern_index_build", t, f"Mseries/s={num / t:.3f}")
+
+
+# --------------------------------------------------------------------------
+# approximate answering (paper §5 future work): recall/time vs l_max
+# --------------------------------------------------------------------------
+
+def bench_approx(num=16384, n=128, nq=16):
+    data = random_walks(jax.random.PRNGKey(12), num, n)
+    idx = _build(data)
+    q = make_query_workload(jax.random.PRNGKey(13), data, nq, "5%")
+    bf_d, bf_i = brute_force_knn(data, q, 10)
+    for l_max in (1, 4, 16):
+        d, ids = idx.knn_approx(q, k=10, l_max=l_max)
+        t = time_call(lambda: idx.knn_approx(q, k=10, l_max=l_max))
+        recall = float(np.mean([
+            len(set(np.asarray(ids)[i]) & set(np.asarray(bf_i)[i])) / 10
+            for i in range(nq)]))
+        emit(f"approx_lmax{l_max}", t / nq, f"recall@10={recall:.3f}")

@@ -1,0 +1,33 @@
+"""Benchmark harness utilities. Output contract: ``name,us_per_call,derived``.
+
+CPU numbers are *directional* (the paper's wall-clock claims are validated as
+ordering/pruning behaviour here; TPU-targeted absolutes live in the §Roofline
+terms from the dry-run artifacts).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time of fn(*args) in microseconds (blocks on jax arrays)."""
+    def run():
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        return out
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

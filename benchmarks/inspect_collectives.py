@@ -1,0 +1,63 @@
+"""Hillclimb profiler: list the largest collective ops in a compiled cell.
+
+    PYTHONPATH=src python -m benchmarks.inspect_collectives \
+        --arch llama3-405b --shape train_4k [--multi]
+
+(Runs in its own process: sets the 512-device XLA flag before importing jax.)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import _compile_cell
+    from repro.launch.hlo_analysis import _SHAPE_RE, _DTYPE_BYTES
+    from repro.launch.mesh import make_production_mesh
+    from repro.distributed.sharding import install_activation_hook
+    from repro.models import SHAPES
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi)
+    install_activation_hook(mesh)
+    compiled, _ = _compile_cell(cfg, args.arch, SHAPES[args.shape], mesh)
+
+    ops = []
+    for line in compiled.as_text().splitlines():
+        m = re.match(r"\s*%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        if not any(op.startswith(k) for k in
+                   ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")):
+            continue
+        nbytes = 0
+        for dtype, dims in _SHAPE_RE.findall(shape_str):
+            if dtype in _DTYPE_BYTES:
+                n = 1
+                for d in (dims.split(",") if dims else []):
+                    n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dtype]
+        meta = re.search(r'op_name="([^"]+)"', line)
+        ops.append((nbytes, op, shape_str[:60],
+                    (meta.group(1)[-80:] if meta else "")))
+    ops.sort(reverse=True)
+    print(f"top {args.top} collectives (per-device result bytes, one HLO "
+          f"occurrence each — scan bodies execute x trip_count):")
+    for nbytes, op, shape_str, src in ops[: args.top]:
+        print(f"{nbytes / 2**20:10.1f} MiB  {op:20s} {shape_str:60s} {src}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline report generator: reads artifacts/dryrun/*.json -> markdown table.
+
+Used to produce EXPERIMENTS.md §Roofline; also callable standalone:
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+_DEF_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = _DEF_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
+            "MODEL_FLOPS | useful ratio | state GiB/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR | — | — | — |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4g} | "
+            f"{rf['memory_s']:.4g} | {rf['collective_s']:.4g} | "
+            f"{rf['dominant']} | {r['model_flops']:.3g} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['state_bytes_per_chip'] / 2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def summarize(recs: list[dict]) -> dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    sk = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    return {"ok": len(ok), "skipped": len(sk), "errors": len(err)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=_DEF_DIR)
+    args = ap.parse_args(argv)
+    recs = load_records(args.dir)
+    print(summarize(recs))
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(fmt_table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+Prints ``name,us_per_call,derived`` CSV (benchmarks verify exactness of every
+answer against brute force before timing).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import bench_suite as B
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI-friendly)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    if args.quick:
+        B.bench_scalability_size(sizes=(2048, 8192), nq=8)
+        B.bench_series_length(lengths=(64, 128), num=4096, nq=4)
+        B.bench_difficulty(num=8192, nq=8)
+        B.bench_k(num=8192, nq=4, ks=(1, 10))
+        B.bench_ablation(num=8192, nq=8)
+        B.bench_approx(num=8192, nq=8)
+        B.bench_kernels(num=16384, nq=32)
+    else:
+        B.bench_scalability_size()
+        B.bench_series_length()
+        B.bench_difficulty()
+        B.bench_k()
+        B.bench_ablation()
+        B.bench_approx()
+        B.bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver (the paper's kind: a query-serving system).
+
+Builds a disk-persisted Hercules index over a large synthetic collection and
+serves batched kNN query workloads of every difficulty level, reporting
+latency, access-path selection and pruning — then validates exactness
+against the optimized parallel scan (PSCAN).
+
+    PYTHONPATH=src python examples/serve_index.py [--num-series 100000]
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (BuildConfig, HerculesIndex, IndexConfig, SearchConfig,
+                        pscan_knn)
+from repro.data import DIFFICULTY_LEVELS, make_query_workload, random_walks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--num-series", type=int, default=100_000)
+    ap.add_argument("--length", type=int, default=128)
+    ap.add_argument("--queries", type=int, default=20)
+    args = ap.parse_args()
+
+    print(f"=== index construction: {args.num_series} x {args.length} ===")
+    data = random_walks(jax.random.PRNGKey(0), args.num_series, args.length)
+    t0 = time.time()
+    # geometry per EXPERIMENTS.md §Perf iteration 2: small leaves + few
+    # phase-1 visits suit memory-resident collections
+    idx = HerculesIndex.build(data, IndexConfig(
+        build=BuildConfig(leaf_capacity=256),
+        search=SearchConfig(k=1, l_max=8)))
+    print(f"built in {time.time() - t0:.1f}s  {idx.stats()}")
+
+    # persist + reload (the HTree/LRDFile/LSDFile artifact, checkpoint story)
+    path = os.path.join(tempfile.gettempdir(), "hercules_demo.npz")
+    idx.save(path)
+    idx = HerculesIndex.load(path)
+    print(f"persisted + reloaded {os.path.getsize(path) / 2**20:.1f} MiB")
+
+    print("\n=== query answering stage ===")
+    for diff in DIFFICULTY_LEVELS:
+        q = make_query_workload(jax.random.PRNGKey(1), data, args.queries, diff)
+        res = idx.knn(q)                       # warm (compile once)
+        jax.block_until_ready(res.dists)
+        t0 = time.time()
+        res = idx.knn(q)
+        jax.block_until_ready(res.dists)
+        dt = (time.time() - t0) / args.queries
+        paths = np.bincount(np.asarray(res.path), minlength=4)
+        print(f"[{diff:>4}] {dt * 1e3:7.1f} ms/query  "
+              f"accessed {float(res.accessed.mean()) / args.num_series:6.2%}  "
+              f"paths scan/pruned = {paths[0] + paths[1]}/{paths[2]}")
+
+    print("\n=== exactness + speedup vs optimized scan (hard workload) ===")
+    q = make_query_workload(jax.random.PRNGKey(2), data, args.queries, "ood")
+    d_idx = idx.knn(q).dists
+    t0 = time.time(); d_idx = idx.knn(q).dists; jax.block_until_ready(d_idx)
+    t_idx = time.time() - t0
+    d_scan, _ = pscan_knn(data, q, k=1)
+    t0 = time.time(); d_scan, _ = pscan_knn(data, q, k=1); jax.block_until_ready(d_scan)
+    t_scan = time.time() - t0
+    assert np.allclose(np.asarray(d_idx), np.asarray(d_scan), rtol=1e-3, atol=1e-3)
+    print(f"exact ✓   hercules {t_idx:.2f}s vs pscan {t_scan:.2f}s "
+          f"({t_scan / max(t_idx, 1e-9):.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

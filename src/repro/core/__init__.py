@@ -1,0 +1,11 @@
+# The paper's primary contribution: the Hercules index — dual-summarization
+# (EAPCA + iSAX) exact similarity search with adaptive access-path selection.
+from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
+from repro.core.layout import HerculesLayout, build_layout  # noqa: F401
+from repro.core.search import (  # noqa: F401
+    KnnResult, SearchConfig, approx_knn, brute_force_knn, exact_knn,
+    pscan_knn,
+)
+from repro.core.tree import (  # noqa: F401
+    BuildConfig, HerculesTree, build_tree, route_to_leaf, tree_stats,
+)

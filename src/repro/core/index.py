@@ -1,0 +1,136 @@
+"""HerculesIndex — build / persist / query facade (the paper's full pipeline).
+
+``HerculesIndex.build`` = index construction + index writing (paper §3.3):
+tree build, synopsis finalization, LRD/LSD materialization. ``save``/``load``
+persist the three artifacts the paper names — HTree (tree arrays), LRDFile
+(raw series, leaf in-order), LSDFile (iSAX sidecar) — as one .npz plus a JSON
+settings header (Alg. 6 line 2). ``knn`` is the §3.4 query pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import summaries as S
+from repro.core.layout import HerculesLayout, build_layout
+from repro.core.search import KnnResult, SearchConfig, approx_knn, exact_knn
+from repro.core.tree import BuildConfig, HerculesTree, build_tree, tree_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    build: BuildConfig = dataclasses.field(default_factory=BuildConfig)
+    search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    sax_segments: int = S.NUM_SAX_SEGMENTS
+
+
+class HerculesIndex:
+    """An in-memory (HBM-resident) Hercules index over one series collection."""
+
+    def __init__(self, tree: HerculesTree, layout: HerculesLayout,
+                 config: IndexConfig, max_depth: int):
+        self.tree = tree
+        self.layout = layout
+        self.config = config
+        self.max_depth = max_depth
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(cls, data: jax.Array, config: IndexConfig | None = None) -> "HerculesIndex":
+        config = config or IndexConfig()
+        if data.shape[1] % config.sax_segments:
+            raise ValueError(
+                f"series length {data.shape[1]} must be divisible by "
+                f"{config.sax_segments} iSAX segments")
+        tree, node_of = build_tree(data, config.build)
+        layout = build_layout(
+            tree, node_of, data, sax_segments=config.sax_segments,
+            pad_series_to_multiple=config.search.pad_multiple())
+        max_depth = tree_stats(tree)["max_depth"]
+        return cls(tree, layout, config, max_depth)
+
+    # -- query answering ------------------------------------------------------
+
+    def knn(self, queries: jax.Array, k: int | None = None,
+            **overrides: Any) -> KnnResult:
+        cfg = self.config.search
+        if k is not None or overrides:
+            cfg = dataclasses.replace(cfg, **({"k": k} if k is not None else {}),
+                                      **overrides)
+        if cfg.pad_multiple() != self.config.search.pad_multiple():
+            raise ValueError("chunk/scan_block overrides must preserve padding; "
+                             "rebuild the index with the target SearchConfig")
+        return exact_knn(self.tree, self.layout, queries, cfg, self.max_depth)
+
+    def knn_approx(self, queries: jax.Array, k: int | None = None,
+                   l_max: int | None = None):
+        """Approximate kNN (phase 1 only; paper §5 future work). Returns
+        (dists, ids) — never better than exact, recall measured in
+        benchmarks/bench_suite.py::bench_approx."""
+        cfg = self.config.search
+        upd = {}
+        if k is not None:
+            upd["k"] = k
+        if l_max is not None:
+            upd["l_max"] = l_max
+        if upd:
+            cfg = dataclasses.replace(cfg, **upd)
+        return approx_knn(self.tree, self.layout, queries, cfg, self.max_depth)
+
+    def stats(self) -> dict:
+        return tree_stats(self.tree)
+
+    # -- persistence (checkpoint/restart story for the index itself) ---------
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        arrays = {}
+        for name, val in self.tree._asdict().items():
+            arrays[f"tree.{name}"] = np.asarray(val)
+        for name, val in self.layout._asdict().items():
+            if isinstance(val, (int, float)):
+                continue
+            arrays[f"layout.{name}"] = np.asarray(val)
+        meta = {
+            "max_depth": self.max_depth,
+            "layout_static": {
+                "series_len": self.layout.series_len,
+                "max_leaf": self.layout.max_leaf,
+                "num_leaves": self.layout.num_leaves,
+                "num_series": self.layout.num_series,
+            },
+            "build": dataclasses.asdict(self.config.build),
+            "search": dataclasses.asdict(self.config.search),
+            "sax_segments": self.config.sax_segments,
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, __meta__=json.dumps(meta), **arrays)
+        os.replace(tmp, path)  # atomic publish (fault-tolerant checkpointing)
+
+    @classmethod
+    def load(cls, path: str) -> "HerculesIndex":
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"]))
+            tree = HerculesTree(**{
+                name: jnp.asarray(z[f"tree.{name}"])
+                for name in HerculesTree._fields})
+            lay_kw = {}
+            for field in dataclasses.fields(HerculesLayout):
+                key = f"layout.{field.name}"
+                if key in z:
+                    lay_kw[field.name] = jnp.asarray(z[key])
+            lay_kw.update(meta["layout_static"])
+            layout = HerculesLayout(**lay_kw)
+        config = IndexConfig(
+            build=BuildConfig(**meta["build"]),
+            search=SearchConfig(**meta["search"]),
+            sax_segments=meta["sax_segments"])
+        return cls(tree, layout, config, meta["max_depth"])

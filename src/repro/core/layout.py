@@ -1,0 +1,140 @@
+"""Materialized index layout — the LRDFile / LSDFile analogue (paper §3.3).
+
+The paper's index-writing phase stores all raw series **contiguously in leaf
+in-order** (LRDFile) so that query-time leaf reads and skip-sequential scans
+are sequential I/O, with a position-aligned iSAX sidecar (LSDFile). On TPU the
+same layout turns candidate-leaf reads into contiguous HBM block loads
+(dynamic_slice of a leaf extent) instead of per-series gathers, and the dense
+scan into a streaming matmul.
+
+``HerculesLayout`` is a pytree of device arrays:
+  * ``lrd``        (N, n)  — raw series, leaf in-order ("LRDFile")
+  * ``lsd``        (N, m)  — uint8 iSAX codes, same order ("LSDFile")
+  * ``perm``/``inv_perm``  — original <-> layout position maps
+  * ``leaf_rank``  (max_nodes,) — in-order rank of each leaf node (-1 internal)
+  * ``leaf_start``/``leaf_count`` (num_leaves_padded,) — extents in lrd
+  * ``leaf_node``  (num_leaves_padded,) — tree node id per in-order rank
+  * ``leaf_synopsis``/``leaf_endpoints``/``leaf_nsegs`` — per-rank leaf data,
+    densely packed so phase-2 pruning is one vectorized pass over leaves
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import summaries as S
+from repro.core.tree import HerculesTree, inorder_leaves
+
+_LAYOUT_DATA = ("lrd", "lsd", "perm", "inv_perm", "leaf_rank", "leaf_node",
+                "leaf_start", "leaf_count", "leaf_synopsis", "leaf_endpoints",
+                "leaf_seg_lens", "series_leaf_rank")
+_LAYOUT_META = ("series_len", "max_leaf", "num_leaves", "num_series")
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=list(_LAYOUT_DATA), meta_fields=list(_LAYOUT_META))
+@dataclasses.dataclass(frozen=True)
+class HerculesLayout:
+    """Materialized index. Array fields are pytree leaves; the int fields are
+    static metadata (jit recompiles if they change — they are shape-like)."""
+    lrd: jax.Array            # (N_pad, n) float32 (rows >= num_series are pad)
+    lsd: jax.Array            # (N_pad, m_sax) uint8
+    perm: jax.Array           # (N,) layout pos -> original id
+    inv_perm: jax.Array       # (N,) original id -> layout pos
+    leaf_rank: jax.Array      # (max_nodes,) int32
+    leaf_node: jax.Array      # (L,) int32 node id per rank
+    leaf_start: jax.Array     # (L,) int32
+    leaf_count: jax.Array     # (L,) int32
+    leaf_synopsis: jax.Array  # (L, M, 4) float32
+    leaf_endpoints: jax.Array # (L, M) int32
+    leaf_seg_lens: jax.Array  # (L, M) float32
+    series_leaf_rank: jax.Array  # (N_pad,) int32, L for pad rows
+    series_len: int
+    max_leaf: int             # static upper bound on leaf extent
+    num_leaves: int           # true number of leaves (L may be padded)
+    num_series: int           # real N (before padding)
+
+    def _asdict(self):
+        return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+
+
+def build_layout(tree: HerculesTree, node_of: jax.Array, data: jax.Array,
+                 sax_segments: int = S.NUM_SAX_SEGMENTS,
+                 pad_leaves_to: int | None = None,
+                 pad_series_to_multiple: int = 1) -> HerculesLayout:
+    """Materialize the leaf in-order layout from a built tree.
+
+    Host-side orchestration (tree is small); the heavy reorders stay on device.
+    ``pad_series_to_multiple`` rounds the series axis up (pad rows are zeros
+    with sentinel leaf rank L) so blocked scans never need clamped slices.
+    """
+    num, n = data.shape
+    order = inorder_leaves(tree)                    # (num_leaves,)
+    num_leaves = len(order)
+    L = pad_leaves_to or num_leaves
+
+    leaf_rank_np = np.full((tree.max_nodes,), -1, np.int32)
+    leaf_rank_np[order] = np.arange(num_leaves, dtype=np.int32)
+    leaf_rank = jnp.asarray(leaf_rank_np)
+
+    # stable sort series by (leaf rank, original id) -> layout order
+    ranks = leaf_rank[node_of]
+    perm = jnp.argsort(ranks, stable=True).astype(jnp.int32)
+    inv_perm = jnp.argsort(perm).astype(jnp.int32)
+
+    counts_np = np.zeros((L,), np.int32)
+    cnt_by_node = np.asarray(
+        jax.ops.segment_sum(jnp.ones_like(node_of), node_of,
+                            num_segments=tree.max_nodes))
+    counts_np[:num_leaves] = cnt_by_node[order]
+    starts_np = np.zeros((L,), np.int32)
+    starts_np[:num_leaves] = np.concatenate(
+        [[0], np.cumsum(counts_np[:num_leaves])[:-1]])
+    # padded (empty) leaf slots point at the end with count 0
+    starts_np[num_leaves:] = num
+    max_leaf = int(counts_np.max(initial=1))
+
+    lrd = data[perm]
+    lsd = S.isax(lrd, sax_segments)
+    srank = ranks[perm]
+
+    # pad the series axis so (a) blocked scans need no clamped slices and
+    # (b) every leaf extent [start, start+max_leaf) stays in bounds
+    blk = max(1, pad_series_to_multiple)
+    n_pad = -(-(num + max_leaf) // blk) * blk
+    if n_pad != num:
+        pad = n_pad - num
+        lrd = jnp.concatenate([lrd, jnp.zeros((pad, n), lrd.dtype)], axis=0)
+        lsd = jnp.concatenate([lsd, jnp.zeros((pad, lsd.shape[1]), lsd.dtype)], axis=0)
+        srank = jnp.concatenate([srank, jnp.full((pad,), L, srank.dtype)], axis=0)
+
+    leaf_node_np = np.zeros((L,), np.int32)
+    leaf_node_np[:num_leaves] = order
+
+    syn = tree.synopsis[jnp.asarray(leaf_node_np)]
+    ep = tree.endpoints[jnp.asarray(leaf_node_np)]
+    seg_lens = S.segment_lengths(ep)
+    # zero out padded slots so their LB is 0 (never pruned incorrectly; they
+    # have count 0 and contribute nothing)
+    pad_mask = jnp.arange(L) >= num_leaves
+    syn = jnp.where(pad_mask[:, None, None], 0.0, syn)
+
+    return HerculesLayout(
+        lrd=lrd, lsd=lsd, perm=perm, inv_perm=inv_perm,
+        leaf_rank=leaf_rank,
+        leaf_node=jnp.asarray(leaf_node_np),
+        leaf_start=jnp.asarray(starts_np),
+        leaf_count=jnp.asarray(counts_np),
+        leaf_synopsis=syn,
+        leaf_endpoints=ep,
+        leaf_seg_lens=seg_lens,
+        series_leaf_rank=srank.astype(jnp.int32),
+        series_len=n,
+        max_leaf=max_leaf,
+        num_leaves=num_leaves,
+        num_series=num,
+    )

@@ -1,0 +1,107 @@
+"""Lower-bounding distances LB_EAPCA and LB_SAX (paper §2, §3.4).
+
+Both bounds are *guaranteed* lower bounds on the squared Euclidean distance —
+the no-false-dismissal property the paper's exactness rests on. The tests
+(tests/test_lower_bounds.py) check this as a hypothesis property.
+
+Math (LB_EAPCA, per DSTree [64]): for a segment of length l with candidate
+mean/std (mu_s, sd_s) and query mean/std (mu_q, sd_q),
+
+    sum_j (x_j - q_j)^2  =  l (mu_s - mu_q)^2 + ||x~ - q~||^2
+                         >= l (mu_s - mu_q)^2 + (||x~|| - ||q~||)^2
+                         =  l [ (mu_s - mu_q)^2 + (sd_s - sd_q)^2 ]
+
+(the cross term vanishes because centered segments sum to zero; Cauchy-Schwarz
+bounds the centered part; sd is the population std so ||x~|| = sqrt(l) sd).
+At node granularity, (mu_s, sd_s) are relaxed to the node-synopsis intervals.
+
+Math (LB_SAX / MINDIST [37]): per PAA segment of length l, the candidate's PAA
+value lies in its iSAX cell [lo, hi]; the distance from the query's PAA value
+p to the cell, d = max(lo - p, p - hi, 0), gives   LB^2 = l * sum_i d_i^2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import summaries as S
+
+
+# ---------------------------------------------------------------------------
+# LB_EAPCA
+# ---------------------------------------------------------------------------
+
+def lb_eapca_node(q_means: jax.Array, q_stds: jax.Array,
+                  synopsis: jax.Array, seg_lens: jax.Array) -> jax.Array:
+    """Squared LB_EAPCA between query segment stats and a node synopsis.
+
+    ``q_means``/``q_stds``: (..., M) query stats under the *node's* segmentation.
+    ``synopsis``: (..., M, 4) [mu_min, mu_max, sd_min, sd_max].
+    ``seg_lens``: (..., M) float segment lengths (0 for padding).
+    Returns (...,) squared lower bound. Broadcasts over leading dims.
+    """
+    mu_lo, mu_hi = synopsis[..., 0], synopsis[..., 1]
+    sd_lo, sd_hi = synopsis[..., 2], synopsis[..., 3]
+    dmu = jnp.maximum(jnp.maximum(mu_lo - q_means, q_means - mu_hi), 0.0)
+    dsd = jnp.maximum(jnp.maximum(sd_lo - q_stds, q_stds - sd_hi), 0.0)
+    per_seg = seg_lens * (jnp.square(dmu) + jnp.square(dsd))
+    return jnp.sum(per_seg, axis=-1)
+
+
+def lb_eapca_series(q_means: jax.Array, q_stds: jax.Array,
+                    s_means: jax.Array, s_stds: jax.Array,
+                    seg_lens: jax.Array) -> jax.Array:
+    """Squared LB_EAPCA between query and an individual series' EAPCA stats.
+
+    All stats (..., M) under a shared segmentation; returns (...,).
+    """
+    per_seg = seg_lens * (jnp.square(s_means - q_means) + jnp.square(s_stds - q_stds))
+    return jnp.sum(per_seg, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LB_SAX (MINDIST)
+# ---------------------------------------------------------------------------
+
+def lb_sax(q_paa: jax.Array, codes: jax.Array, series_len: int,
+           alphabet: int = S.SAX_ALPHABET) -> jax.Array:
+    """Squared LB_SAX between query PAA and candidate iSAX codes.
+
+    ``q_paa``: (..., m) query PAA values.
+    ``codes``: (..., m) uint8 iSAX codes (broadcast-compatible with q_paa).
+    Returns broadcast shape minus the last axis, squared lower bound.
+    """
+    m = q_paa.shape[-1]
+    lo, hi = S.isax_cell_bounds(codes, alphabet)
+    d = jnp.maximum(jnp.maximum(lo - q_paa, q_paa - hi), 0.0)
+    seg_len = series_len / m
+    return seg_len * jnp.sum(jnp.square(d), axis=-1)
+
+
+def lb_sax_pairwise(q_paa: jax.Array, codes: jax.Array, series_len: int,
+                    alphabet: int = S.SAX_ALPHABET) -> jax.Array:
+    """All-pairs squared LB_SAX: queries (Q, m) x codes (N, m) -> (Q, N)."""
+    return lb_sax(q_paa[:, None, :], codes[None, :, :], series_len, alphabet)
+
+
+# ---------------------------------------------------------------------------
+# True distances (reference path; the Pallas kernel in kernels/ed.py is the
+# production scan)
+# ---------------------------------------------------------------------------
+
+def squared_ed(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact squared Euclidean distance along the last axis (broadcasting)."""
+    return jnp.sum(jnp.square(a - b), axis=-1)
+
+
+def squared_ed_matrix(queries: jax.Array, series: jax.Array) -> jax.Array:
+    """(Q, n) x (N, n) -> (Q, N) squared ED via the matmul identity.
+
+    ||q - s||^2 = ||q||^2 + ||s||^2 - 2 q.s  — the MXU-friendly form used by
+    the dense-scan access path (the PSCAN analogue). fp32 accumulation.
+    """
+    qn = jnp.sum(jnp.square(queries), axis=-1, dtype=jnp.float32)
+    sn = jnp.sum(jnp.square(series), axis=-1, dtype=jnp.float32)
+    dot = jnp.dot(queries, series.T, preferred_element_type=jnp.float32)
+    d = qn[:, None] + sn[None, :] - 2.0 * dot
+    return jnp.maximum(d, 0.0)

@@ -1,0 +1,402 @@
+"""Exact kNN query answering (paper §3.4, Algorithms 10–14), TPU-native.
+
+Phase map (DESIGN.md §2):
+
+  1. *Approximate search* (Alg. 11): route the query to its home leaf, rank
+     all leaves by LB_EAPCA (the vectorized fixpoint of the paper's priority
+     queue) and visit the best ``l_max``; exact distances over those leaf
+     extents seed the best-so-far BSF_k.
+  2. *Candidate leaves* (Alg. 12): vectorized LB_EAPCA test over every leaf;
+     pruning ratio ``eapca_pr``.
+  3. *Candidate series* (Alg. 13): LB_SAX over the LSD sidecar, masked to
+     candidate leaves; pruning ratio ``sax_pr``.
+  4. *Exact refinement* (Alg. 14): candidates sorted by LB ascending are
+     processed in fixed-size chunks inside ``lax.while_loop``; the loop exits
+     when the chunk's smallest LB exceeds BSF_k — the same no-false-dismissal
+     argument as the paper, with a static shape budget.
+
+Adaptive access-path selection (Alg. 10 lines 10/15): when ``eapca_pr`` <
+EAPCA_TH or ``sax_pr`` < SAX_TH, fall back to the *dense scan* — a blocked
+streaming pass over the leaf-ordered LRD array (the skip-sequential-scan
+analogue; on the MXU this is the high-arithmetic-intensity path). Queries run
+through ``lax.map`` so the ``lax.cond`` branches stay real branches (the
+paper's "queries run asynchronously"; parallelism lives *inside* a query).
+
+Everything here is exact: all paths return the true k nearest neighbors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lower_bounds as LB
+from repro.core import summaries as S
+from repro.core.layout import HerculesLayout
+from repro.core.tree import HerculesTree, route_to_leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Static query-answering settings (paper §4.2 Parameterization)."""
+    k: int = 1
+    l_max: int = 80              # approximate-phase leaf visits (paper: 80)
+    eapca_th: float = 0.25       # paper: 0.25
+    sax_th: float = 0.50         # paper: 0.50
+    chunk: int = 1024            # phase-4 refinement chunk (static budget)
+    scan_block: int = 4096       # dense-scan block
+    use_sax: bool = True         # False -> NoSAX ablation (EAPCA-only LBs)
+    adaptive: bool = True        # False -> NoThresh ablation (always prune path)
+    force_scan: bool = False     # True -> PSCAN baseline behaviour
+    lb_slack: float = 1e-5       # fp32 guard: treat lb*(1-slack) as the bound
+    unroll_visits: bool = False  # unroll the phase-1 leaf-visit loop (dry-run
+                                 # probes: XLA counts scan bodies once)
+    refine_select: str = "argsort"   # 'argsort' (full sort) | 'topk'
+    topk_budget_chunks: int = 32     # candidate budget C = chunks * chunk
+
+    def pad_multiple(self) -> int:
+        import math
+        return math.lcm(self.chunk, self.scan_block)
+
+
+class KnnResult(NamedTuple):
+    dists: jax.Array       # (Q, k) squared ED, ascending
+    positions: jax.Array   # (Q, k) layout (LRD) positions
+    ids: jax.Array         # (Q, k) original series ids
+    path: jax.Array        # (Q,) 0=scan(eapca) 1=scan(sax) 2=pruned 3=forced
+    eapca_pr: jax.Array    # (Q,) leaf-level pruning ratio
+    sax_pr: jax.Array      # (Q,) series-level pruning ratio
+    accessed: jax.Array    # (Q,) exact-distance computations performed
+    visited_leaves: jax.Array  # (Q,)
+
+
+INF = jnp.float32(jnp.inf)
+
+
+def _merge_topk(d0, p0, d1, p1, k: int):
+    """Merge (d1, p1) candidates into the running top-k (d0, p0).
+
+    The paper's Results array is a *set* of series; a position already present
+    in the running top-k must not enter twice (phase 1 may visit a leaf that
+    refinement later re-reads). New candidates are distinct among themselves
+    by construction (leaf extents / argsort chunks / scan blocks), so checking
+    against the carry is sufficient.
+    """
+    dup = jnp.any(p1[None, :] == p0[:, None], axis=0)
+    d1 = jnp.where(dup, INF, d1)
+    d = jnp.concatenate([d0, d1])
+    p = jnp.concatenate([p0, p1])
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, p[idx]
+
+
+def _query_seg_stats(qp, qp2, endpoints):
+    """Query stats under many segmentations. qp/qp2 (n+1,), endpoints (L, M)."""
+    starts = jnp.concatenate(
+        [jnp.zeros((endpoints.shape[0], 1), endpoints.dtype), endpoints[:, :-1]],
+        axis=1)
+    lens = jnp.maximum((endpoints - starts).astype(jnp.float32), 1.0)
+    s1 = qp[endpoints] - qp[starts]
+    s2 = qp2[endpoints] - qp2[starts]
+    mean = s1 / lens
+    var = jnp.maximum(s2 / lens - jnp.square(mean), 0.0)
+    empty = (endpoints - starts) <= 0
+    return (jnp.where(empty, 0.0, mean), jnp.where(empty, 0.0, jnp.sqrt(var)))
+
+
+def _leaf_lbs(q, layout: HerculesLayout):
+    """(L,) squared LB_EAPCA of the query to every leaf (+inf for empty/pad)."""
+    qp, qp2 = S.prefix_sums(q[None])
+    qp, qp2 = qp[0], qp2[0]
+    qm, qs = _query_seg_stats(qp, qp2, layout.leaf_endpoints)
+    lb = LB.lb_eapca_node(qm, qs, layout.leaf_synopsis, layout.leaf_seg_lens)
+    # empty/padded leaf slots carry count 0 (works under distributed stacking
+    # where the padded leaf count varies per shard)
+    dead = layout.leaf_count <= 0
+    return jnp.where(dead, INF, lb)
+
+
+def _leaf_block_ed(q, layout: HerculesLayout, rank, *, max_leaf: int):
+    """Exact squared ED of q to every series of leaf ``rank`` (masked block)."""
+    start = layout.leaf_start[rank]
+    cnt = layout.leaf_count[rank]
+    block = jax.lax.dynamic_slice(
+        layout.lrd, (start, 0), (max_leaf, layout.lrd.shape[1]))
+    d = jnp.sum(jnp.square(block - q[None, :]), axis=1)
+    pos = start + jnp.arange(max_leaf, dtype=jnp.int32)
+    d = jnp.where(jnp.arange(max_leaf) < cnt, d, INF)
+    return d, pos
+
+
+# ---------------------------------------------------------------------------
+# Dense scan path (the PSCAN / skip-sequential analogue)
+# ---------------------------------------------------------------------------
+
+def _scan_path(q, layout: HerculesLayout, d0, p0, cfg: SearchConfig):
+    """Blocked streaming exact scan over the leaf-ordered LRD array."""
+    n_pad = layout.lrd.shape[0]
+    blocks = n_pad // cfg.scan_block
+    lrd3 = layout.lrd.reshape(blocks, cfg.scan_block, layout.lrd.shape[1])
+
+    def body(carry, blk):
+        d_top, p_top, base = carry
+        d = jnp.sum(jnp.square(blk - q[None, :]), axis=1)
+        pos = base + jnp.arange(cfg.scan_block, dtype=jnp.int32)
+        d = jnp.where(pos < layout.num_series, d, INF)
+        d_top, p_top = _merge_topk(d_top, p_top, d, pos, cfg.k)
+        return (d_top, p_top, base + cfg.scan_block), None
+
+    (d_top, p_top, _), _ = jax.lax.scan(body, (d0, p0, jnp.int32(0)), lrd3)
+    return d_top, p_top, jnp.int32(layout.num_series)
+
+
+# ---------------------------------------------------------------------------
+# Pruned refinement path (phases 3-4)
+# ---------------------------------------------------------------------------
+
+def _refine_path(q, layout: HerculesLayout, cand_lb, d0, p0, cfg: SearchConfig):
+    """Chunked exact refinement of candidates ordered by lower bound.
+
+    ``cand_lb``: (N_pad,) lower bound per layout position, +inf for pruned.
+    Exits when the next chunk's best LB can no longer improve BSF_k.
+
+    Candidate ordering (EXPERIMENTS.md §Perf iteration 5): ``argsort`` fully
+    sorts all N_pad bounds; ``topk`` selects only the C = budget smallest
+    (lax.top_k returns them sorted) — cheaper when C << N. Exactness under
+    ``topk``: the caller falls back to the dense scan if the budget is
+    exhausted while the BSF could still improve (returned ``exhausted``).
+    """
+    n_pad = cand_lb.shape[0]
+    if cfg.refine_select == "topk":
+        c_budget = min(n_pad, cfg.topk_budget_chunks * cfg.chunk)
+        neg_lb, order = jax.lax.top_k(-cand_lb, c_budget)
+        sorted_lb = -neg_lb
+        order = order.astype(jnp.int32)
+        n_chunks = c_budget // cfg.chunk
+    else:
+        order = jnp.argsort(cand_lb).astype(jnp.int32)
+        sorted_lb = cand_lb[order]
+        n_chunks = n_pad // cfg.chunk
+    slack = jnp.float32(1.0 - cfg.lb_slack)
+
+    def cond(state):
+        c, d_top, p_top, acc = state
+        bsf = d_top[cfg.k - 1]
+        head = sorted_lb[c * cfg.chunk]
+        return (c < n_chunks) & (head * slack < bsf)
+
+    def body(state):
+        c, d_top, p_top, acc = state
+        bsf = d_top[cfg.k - 1]
+        idx = jax.lax.dynamic_slice(order, (c * cfg.chunk,), (cfg.chunk,))
+        lbs = jax.lax.dynamic_slice(sorted_lb, (c * cfg.chunk,), (cfg.chunk,))
+        rows = layout.lrd[idx]                       # (chunk, n) gather
+        d = jnp.sum(jnp.square(rows - q[None, :]), axis=1)
+        live = lbs * slack < bsf                     # Alg. 14 line 4 re-check
+        d = jnp.where(live, d, INF)
+        d_top, p_top = _merge_topk(d_top, p_top, d, idx, cfg.k)
+        return (c + 1, d_top, p_top, acc + jnp.sum(live.astype(jnp.int32)))
+
+    c, d_top, p_top, acc = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), d0, p0, jnp.int32(0)))
+    # budget exhausted while the tail could still improve? (topk mode only)
+    exhausted = (c >= n_chunks) & (sorted_lb[-1] * slack < d_top[cfg.k - 1])
+    return d_top, p_top, acc, exhausted
+
+
+# ---------------------------------------------------------------------------
+# Full per-query pipeline
+# ---------------------------------------------------------------------------
+
+def _query_one(q, tree: HerculesTree, layout: HerculesLayout,
+               cfg: SearchConfig, max_depth: int):
+    n = layout.series_len
+    L = layout.leaf_start.shape[0]
+    l_max = min(cfg.l_max, layout.num_leaves)
+    slack = jnp.float32(1.0 - cfg.lb_slack)
+
+    # ---- Phase 1: approximate search (Alg. 11) ----------------------------
+    leaf_lb = _leaf_lbs(q, layout)                   # (L,)
+    home = layout.leaf_rank[route_to_leaf(tree, q[None], max_depth)[0]]
+    _, best_ranks = jax.lax.top_k(-leaf_lb, l_max)
+    visit = jnp.concatenate([home[None].astype(jnp.int32),
+                             best_ranks.astype(jnp.int32)])
+
+    d_top = jnp.full((cfg.k,), INF)
+    p_top = jnp.full((cfg.k,), -1, jnp.int32)
+
+    def visit_body(carry, rank):
+        d_top, p_top, acc = carry
+        d, pos = _leaf_block_ed(q, layout, rank, max_leaf=layout.max_leaf)
+        d_top, p_top = _merge_topk(d_top, p_top, d, pos, cfg.k)
+        return (d_top, p_top, acc + layout.leaf_count[rank]), None
+
+    if cfg.unroll_visits:
+        carry = (d_top, p_top, jnp.int32(0))
+        for i in range(l_max + 1):
+            carry, _ = visit_body(carry, visit[i])
+        d_top, p_top, accessed = carry
+    else:
+        (d_top, p_top, accessed), _ = jax.lax.scan(
+            visit_body, (d_top, p_top, jnp.int32(0)), visit)
+    bsf = d_top[cfg.k - 1]
+
+    # ---- Phase 2: candidate leaves (Alg. 12) -------------------------------
+    cand_leaf = leaf_lb * slack < bsf                # (L,)
+    n_cand_leaves = jnp.sum(cand_leaf.astype(jnp.int32))
+    n_alive = jnp.maximum(jnp.sum((layout.leaf_count > 0).astype(jnp.int32)), 1)
+    eapca_pr = 1.0 - n_cand_leaves.astype(jnp.float32) / n_alive.astype(jnp.float32)
+
+    # ---- Phase 3: candidate series (Alg. 13) -------------------------------
+    leaf_mask_pad = jnp.concatenate([cand_leaf, jnp.zeros((1,), bool)])
+    series_in_cand = leaf_mask_pad[layout.series_leaf_rank]  # (N_pad,)
+
+    q_paa = S.paa(q[None], layout.lsd.shape[1])[0]
+    lb_s = LB.lb_sax(q_paa, layout.lsd, n)           # (N_pad,)
+    leaf_lb_pad = jnp.concatenate([leaf_lb, jnp.full((1,), INF)])
+    lb_leaf_series = leaf_lb_pad[layout.series_leaf_rank]
+
+    if cfg.use_sax:
+        cand_lb = jnp.where(series_in_cand,
+                            jnp.maximum(lb_s, lb_leaf_series), INF)
+    else:
+        cand_lb = jnp.where(series_in_cand, lb_leaf_series, INF)
+    n_cand = jnp.sum((cand_lb * slack < bsf).astype(jnp.int32))
+    sax_pr = 1.0 - n_cand.astype(jnp.float32) / layout.num_series
+
+    # ---- Adaptive access-path selection (Alg. 10) ---------------------------
+    def do_scan(_):
+        d, p, acc = _scan_path(q, layout, d_top, p_top, cfg)
+        return d, p, accessed + acc
+
+    def do_refine(_):
+        d, p, acc, exhausted = _refine_path(q, layout, cand_lb, d_top, p_top, cfg)
+        if cfg.refine_select == "topk":
+            # exactness fallback: finish with a dense scan when the candidate
+            # budget ran out before the bound crossed BSF_k
+            return jax.lax.cond(
+                exhausted,
+                lambda _: (lambda r: (r[0], r[1], acc + accessed + r[2]))(
+                    _scan_path(q, layout, d, p, cfg)),
+                lambda _: (d, p, accessed + acc), None)
+        return d, p, accessed + acc
+
+    if cfg.force_scan:
+        d_f, p_f, acc_f = do_scan(None)
+        path = jnp.int32(3)
+    elif not cfg.adaptive:
+        d_f, p_f, acc_f = do_refine(None)
+        path = jnp.int32(2)
+    else:
+        use_scan = (eapca_pr < cfg.eapca_th) | (
+            jnp.asarray(cfg.use_sax) & (sax_pr < cfg.sax_th))
+        d_f, p_f, acc_f = jax.lax.cond(use_scan, do_scan, do_refine, None)
+        path = jnp.where(eapca_pr < cfg.eapca_th, 0,
+                         jnp.where(sax_pr < cfg.sax_th, 1, 2)).astype(jnp.int32)
+
+    return (d_f, p_f, path, eapca_pr, sax_pr, acc_f,
+            jnp.int32(l_max + 1))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_depth"))
+def exact_knn(tree: HerculesTree, layout: HerculesLayout, queries: jax.Array,
+              cfg: SearchConfig, max_depth: int) -> KnnResult:
+    """Exact kNN for a workload of queries (Q, n). See module docstring."""
+
+    def one(q):
+        return _query_one(q, tree, layout, cfg, max_depth)
+
+    d, p, path, e_pr, s_pr, acc, vis = jax.lax.map(one, queries)
+    safe_p = jnp.clip(p, 0, layout.perm.shape[0] - 1)
+    ids = jnp.where(p >= 0, layout.perm[safe_p], -1)
+    return KnnResult(dists=d, positions=p, ids=ids, path=path,
+                     eapca_pr=e_pr, sax_pr=s_pr, accessed=acc,
+                     visited_leaves=vis)
+
+
+# ---------------------------------------------------------------------------
+# Approximate search (paper §5 future work: approximate answering — here the
+# phase-1 prefix of the exact pipeline, with recall measured in benchmarks)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_depth"))
+def approx_knn(tree: HerculesTree, layout: HerculesLayout, queries: jax.Array,
+               cfg: SearchConfig, max_depth: int):
+    """Phase-1-only kNN: visit the home leaf + the l_max best leaves by
+    LB_EAPCA and return the best-so-far — the paper's Approx-kNN (Alg. 11)
+    as a standalone answering mode. Returns (dists, ids)."""
+
+    def one(q):
+        leaf_lb = _leaf_lbs(q, layout)
+        home = layout.leaf_rank[route_to_leaf(tree, q[None], max_depth)[0]]
+        l_max = min(cfg.l_max, layout.num_leaves)
+        _, best = jax.lax.top_k(-leaf_lb, l_max)
+        visit = jnp.concatenate([home[None].astype(jnp.int32),
+                                 best.astype(jnp.int32)])
+        d_top = jnp.full((cfg.k,), INF)
+        p_top = jnp.full((cfg.k,), -1, jnp.int32)
+
+        def body(carry, rank):
+            d_top, p_top = carry
+            d, pos = _leaf_block_ed(q, layout, rank, max_leaf=layout.max_leaf)
+            return _merge_topk(d_top, p_top, d, pos, cfg.k), None
+
+        (d_top, p_top), _ = jax.lax.scan(body, (d_top, p_top), visit)
+        return d_top, p_top
+
+    d, p = jax.lax.map(one, queries)
+    safe = jnp.clip(p, 0, layout.perm.shape[0] - 1)
+    ids = jnp.where(p >= 0, layout.perm[safe], -1)
+    return d, ids
+
+
+# ---------------------------------------------------------------------------
+# Standalone baselines
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def pscan_knn(data: jax.Array, queries: jax.Array, k: int = 1,
+              block: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """PSCAN baseline (paper §4.1): optimized parallel scan.
+
+    Batched across all queries (the double-buffer analogue is XLA streaming);
+    blocked matmul-identity distances on the MXU. Returns (Q,k) dists + ids.
+    ``data`` may be unpadded; handles the ragged tail by masking.
+    """
+    qn = queries.shape[0]
+    num = data.shape[0]
+    n_pad = -(-num // block) * block
+    if n_pad != num:
+        data = jnp.concatenate(
+            [data, jnp.zeros((n_pad - num, data.shape[1]), data.dtype)], axis=0)
+    blocks = data.reshape(n_pad // block, block, data.shape[1])
+    q_norm = jnp.sum(jnp.square(queries), axis=1)
+
+    d0 = jnp.full((qn, k), INF)
+    p0 = jnp.full((qn, k), -1, jnp.int32)
+
+    def body(carry, xs):
+        d_top, p_top, base = carry
+        blk = xs
+        s_norm = jnp.sum(jnp.square(blk), axis=1)
+        dot = jnp.dot(queries, blk.T, preferred_element_type=jnp.float32)
+        d = jnp.maximum(q_norm[:, None] + s_norm[None, :] - 2.0 * dot, 0.0)
+        pos = base + jnp.arange(block, dtype=jnp.int32)
+        d = jnp.where((pos < num)[None, :], d, INF)
+        dd = jnp.concatenate([d_top, d], axis=1)
+        pp = jnp.concatenate([p_top, jnp.broadcast_to(pos, (qn, block))], axis=1)
+        neg, idx = jax.lax.top_k(-dd, k)
+        return (-neg, jnp.take_along_axis(pp, idx, axis=1), base + block), None
+
+    (d_top, p_top, _), _ = jax.lax.scan(body, (d0, p0, jnp.int32(0)), blocks)
+    return d_top, p_top
+
+
+def brute_force_knn(data: jax.Array, queries: jax.Array, k: int = 1):
+    """Reference oracle: full ED matrix + top_k (tests only)."""
+    d = LB.squared_ed_matrix(queries, data)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx

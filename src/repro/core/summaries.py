@@ -1,0 +1,182 @@
+"""Data-series summarizations: PAA, iSAX, EAPCA (paper §2, Fig. 1).
+
+All functions are pure jnp, jit-safe, and operate on batches of series with
+static shapes. Throughout the framework a *series collection* is an array of
+shape ``(N, n)`` float32 — N series of length n (the paper's dimensionality).
+
+Conventions
+-----------
+* Distances are **squared** Euclidean everywhere (the paper's own optimization,
+  §4.1 "squared distances"); square roots are taken only for display.
+* iSAX uses ``NUM_SAX_SEGMENTS = 16`` segments and ``SAX_ALPHABET = 256``
+  symbols (8 bits), the paper's settings (§2, following [21] and [58]).
+* Standard deviations are population (ddof=0) — required for the EAPCA lower
+  bound to be a true lower bound (see lower_bounds.py).
+* Variable-length segmentations (EAPCA) are encoded as a fixed-width array of
+  *right endpoints* padded by repeating ``n``; a repeated endpoint denotes an
+  empty segment contributing nothing. This keeps every node's segmentation a
+  static ``(max_segments,)`` int32 array, the TPU-friendly equivalent of the
+  paper's per-node variable segmentation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+NUM_SAX_SEGMENTS = 16
+SAX_ALPHABET = 256
+SAX_CARD_BITS = 8  # log2(SAX_ALPHABET)
+
+
+# ---------------------------------------------------------------------------
+# z-normalization
+# ---------------------------------------------------------------------------
+
+def znormalize(series: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Z-normalize each series (zero mean, unit variance). Shape-preserving."""
+    mu = jnp.mean(series, axis=-1, keepdims=True)
+    sd = jnp.std(series, axis=-1, keepdims=True)
+    return (series - mu) / jnp.maximum(sd, eps)
+
+
+# ---------------------------------------------------------------------------
+# PAA + iSAX
+# ---------------------------------------------------------------------------
+
+def paa(series: jax.Array, num_segments: int = NUM_SAX_SEGMENTS) -> jax.Array:
+    """Piecewise Aggregate Approximation.
+
+    ``series``: (..., n) with n divisible by num_segments.
+    Returns (..., num_segments) segment means.
+    """
+    n = series.shape[-1]
+    if n % num_segments:
+        raise ValueError(f"series length {n} not divisible by {num_segments}")
+    seg = n // num_segments
+    return jnp.mean(series.reshape(*series.shape[:-1], num_segments, seg), axis=-1)
+
+
+def sax_breakpoints(alphabet: int = SAX_ALPHABET) -> jax.Array:
+    """(alphabet-1,) ascending breakpoints: standard-normal quantiles.
+
+    Cell ``c`` covers [bp[c-1], bp[c]) with bp[-1] = -inf, bp[a-1] = +inf.
+    NOTE: deliberately NOT cached — a cached traced/committed array leaks
+    across mesh contexts (shard_map under different meshes rejects it).
+    """
+    qs = jnp.arange(1, alphabet, dtype=jnp.float32) / alphabet
+    return ndtri(qs).astype(jnp.float32)
+
+
+def isax_from_paa(paa_vals: jax.Array, alphabet: int = SAX_ALPHABET) -> jax.Array:
+    """Discretize PAA values to iSAX symbols. Returns uint8 codes (alphabet<=256)."""
+    bps = sax_breakpoints(alphabet)
+    codes = jnp.searchsorted(bps, paa_vals, side="right")
+    return codes.astype(jnp.uint8)
+
+
+def isax(series: jax.Array,
+         num_segments: int = NUM_SAX_SEGMENTS,
+         alphabet: int = SAX_ALPHABET) -> jax.Array:
+    """iSAX summary of each series: (..., num_segments) uint8 symbol codes."""
+    return isax_from_paa(paa(series, num_segments), alphabet)
+
+
+def isax_cell_bounds(codes: jax.Array,
+                     alphabet: int = SAX_ALPHABET) -> tuple[jax.Array, jax.Array]:
+    """Per-symbol cell [lo, hi] bounds for iSAX codes.
+
+    Returns (lo, hi) arrays, same shape as ``codes``, float32. Open ends use
+    +-LARGE (not inf, so arithmetic stays finite under masking).
+    """
+    big = jnp.float32(3.0e38)
+    bps = sax_breakpoints(alphabet)
+    c = codes.astype(jnp.int32)
+    lo = jnp.where(c == 0, -big, bps[jnp.maximum(c - 1, 0)])
+    hi = jnp.where(c == alphabet - 1, big, bps[jnp.minimum(c, alphabet - 2)])
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# Prefix sums + variable-segment (EAPCA) statistics
+# ---------------------------------------------------------------------------
+
+def prefix_sums(series: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Inclusive-zero prefix sums of values and squares.
+
+    ``series``: (N, n). Returns (P, P2) each (N, n+1) float32 with P[:,0]=0 so
+    sum over [a,b) = P[:,b]-P[:,a]. This is the batched analogue of the
+    paper's per-series incremental statistics, computed once per build.
+    """
+    z = jnp.zeros((*series.shape[:-1], 1), dtype=jnp.float32)
+    p = jnp.concatenate([z, jnp.cumsum(series.astype(jnp.float32), axis=-1)], axis=-1)
+    p2 = jnp.concatenate([z, jnp.cumsum(jnp.square(series.astype(jnp.float32)), axis=-1)], axis=-1)
+    return p, p2
+
+
+def segment_stats_from_prefix(p: jax.Array, p2: jax.Array,
+                              endpoints: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-segment (mean, std) from prefix sums under a *per-row* segmentation.
+
+    ``p``, ``p2``: (N, n+1) prefix sums.  ``endpoints``: (N, M) int32 right
+    endpoints (padded by repeating n → empty segments).
+    Returns (means, stds), each (N, M); empty segments yield 0.
+    """
+    starts = jnp.concatenate(
+        [jnp.zeros((*endpoints.shape[:-1], 1), endpoints.dtype), endpoints[..., :-1]],
+        axis=-1)
+    lens = (endpoints - starts).astype(jnp.float32)
+    safe = jnp.maximum(lens, 1.0)
+    s1 = jnp.take_along_axis(p, endpoints, axis=-1) - jnp.take_along_axis(p, starts, axis=-1)
+    s2 = jnp.take_along_axis(p2, endpoints, axis=-1) - jnp.take_along_axis(p2, starts, axis=-1)
+    mean = s1 / safe
+    var = jnp.maximum(s2 / safe - jnp.square(mean), 0.0)
+    std = jnp.sqrt(var)
+    empty = lens <= 0
+    return jnp.where(empty, 0.0, mean), jnp.where(empty, 0.0, std)
+
+
+def eapca(series: jax.Array, endpoints: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """EAPCA summary (per-segment mean and std) of each series.
+
+    ``series``: (N, n); ``endpoints``: (M,) or (N, M) right endpoints.
+    Returns (means, stds) each (N, M).
+    """
+    p, p2 = prefix_sums(series)
+    if endpoints.ndim == 1:
+        endpoints = jnp.broadcast_to(endpoints, (series.shape[0], endpoints.shape[0]))
+    return segment_stats_from_prefix(p, p2, endpoints)
+
+
+def segment_lengths(endpoints: jax.Array) -> jax.Array:
+    """Segment lengths from right endpoints (same padding convention)."""
+    starts = jnp.concatenate(
+        [jnp.zeros((*endpoints.shape[:-1], 1), endpoints.dtype), endpoints[..., :-1]],
+        axis=-1)
+    return (endpoints - starts).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Node synopsis (paper §3.2): per-segment [mu_min, mu_max, sd_min, sd_max]
+# ---------------------------------------------------------------------------
+
+def synopsis_from_stats(means: jax.Array, stds: jax.Array) -> jax.Array:
+    """Synopsis of a *set* of series sharing one segmentation.
+
+    ``means``/``stds``: (N, M). Returns (M, 4) = [mu_min, mu_max, sd_min, sd_max].
+    """
+    return jnp.stack([
+        jnp.min(means, axis=0), jnp.max(means, axis=0),
+        jnp.min(stds, axis=0), jnp.max(stds, axis=0),
+    ], axis=-1)
+
+
+def merge_synopses(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge two (M,4) synopses over the same segmentation (H-split parent rule,
+    Algorithm 9: parent synopsis derivable entirely from its children)."""
+    return jnp.stack([
+        jnp.minimum(a[..., 0], b[..., 0]), jnp.maximum(a[..., 1], b[..., 1]),
+        jnp.minimum(a[..., 2], b[..., 2]), jnp.maximum(a[..., 3], b[..., 3]),
+    ], axis=-1)

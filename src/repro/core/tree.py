@@ -1,0 +1,444 @@
+"""The Hercules index tree (paper §3.2–3.3), built level-synchronously in JAX.
+
+The paper builds an unbalanced binary EAPCA tree with many threads inserting
+concurrently under per-leaf locks (Algorithms 1–5). Pointer-chasing insertions
+with locks have no XLA analogue; the TPU-native equivalent (DESIGN.md §2) is a
+**level-synchronous batched build**: each round, *every* over-capacity leaf
+picks its best split policy (the DSTree-style QoS heuristic, Alg. 5 line 10)
+and all member series are re-partitioned in one data-parallel step. The
+resulting tree is identical in kind — same node synopses, same H/V split
+semantics, same routing — and the build is deterministic.
+
+Tree encoding: structure-of-arrays with static capacity ``max_nodes``.
+Segmentations are fixed-width right-endpoint arrays padded by repeating ``n``
+(see summaries.py). A node's split is encoded *positionally* as a point range
+``[split_lo, split_hi)`` plus a mean/std selector and a threshold — this makes
+routing segmentation-index-free (V-splits shift indices, not point ranges).
+
+Round structure (one jit'd ``_build_round`` per round, Python-driven loop —
+the idiomatic JAX pattern for data-dependent iteration counts; every round
+reuses the same compiled step):
+
+  1. per-series segment stats under the *current leaf's* segmentation
+     (via the (N, n+1) prefix sums computed once),
+  2. per-leaf synopsis ranges via ``segment_min/max``,
+  3. QoS scores for every candidate policy (H-split x {mean, std} per segment;
+     V-split per splittable segment with best half x stat),
+  4. children allocation + scatter of node metadata,
+  5. series re-partition by the chosen policy.
+
+Split policy scoring (documented reconstruction of DSTree's QoS heuristic):
+``QoS(segment) = len * (range_mu^2 + range_sd^2)`` is an upper-bound proxy for
+the intra-node squared diameter contributed by that segment. An H-split at the
+range midpoint halves the chosen range, so its benefit is
+``len * range^2 / 2``. A V-split's benefit is the segmentation-refinement gain
+``QoS(segment) - sum_h QoS(half_h)`` plus the best H-benefit among halves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import summaries as S
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    """Static build-time settings (the paper's Idx.Settings, Alg. 6 line 2)."""
+    leaf_capacity: int = 256          # tau: paper uses 100K on disk; scale down on CPU
+    max_segments: int = 16            # M: V-splits may refine up to this many
+    init_segments: int = 4            # root segmentation (equal-length)
+    max_nodes: int = 0                # 0 -> auto: 8 * ceil(N / tau) + 64
+    max_rounds: int = 64              # safety bound on build rounds
+
+    def resolve_max_nodes(self, num_series: int) -> int:
+        if self.max_nodes:
+            return self.max_nodes
+        return 8 * max(1, -(-num_series // self.leaf_capacity)) + 64
+
+
+class HerculesTree(NamedTuple):
+    """Structure-of-arrays binary tree. All arrays have leading dim max_nodes
+    (+1 drop slot where noted). Valid node ids are [0, num_nodes)."""
+    parent: jax.Array        # (max_nodes,) int32, -1 for root
+    left: jax.Array          # (max_nodes,) int32, -1 if leaf
+    right: jax.Array         # (max_nodes,) int32, -1 if leaf
+    is_leaf: jax.Array       # (max_nodes,) bool
+    no_split: jax.Array      # (max_nodes,) bool: leaf proven unsplittable
+    depth: jax.Array         # (max_nodes,) int32
+    endpoints: jax.Array     # (max_nodes, M) int32 right endpoints (pad = n)
+    num_segs: jax.Array      # (max_nodes,) int32
+    split_lo: jax.Array      # (max_nodes,) int32 routing range start
+    split_hi: jax.Array      # (max_nodes,) int32 routing range end (excl)
+    split_use_std: jax.Array # (max_nodes,) bool: route on sd instead of mean
+    split_value: jax.Array   # (max_nodes,) float32 threshold (range midpoint)
+    synopsis: jax.Array      # (max_nodes, M, 4) [mu_min, mu_max, sd_min, sd_max]
+    count: jax.Array         # (max_nodes,) int32 series at/below node
+    num_nodes: jax.Array     # () int32
+
+    @property
+    def max_nodes(self) -> int:
+        return self.parent.shape[0]
+
+    @property
+    def max_segments(self) -> int:
+        return self.endpoints.shape[1]
+
+
+def _empty_tree(max_nodes: int, m: int, n: int, init_segments: int) -> HerculesTree:
+    ep0 = np.full((m,), n, dtype=np.int32)
+    for j in range(init_segments):
+        ep0[j] = round(n * (j + 1) / init_segments)
+    endpoints = jnp.zeros((max_nodes, m), jnp.int32).at[0].set(jnp.asarray(ep0))
+    return HerculesTree(
+        parent=jnp.full((max_nodes,), -1, jnp.int32),
+        left=jnp.full((max_nodes,), -1, jnp.int32),
+        right=jnp.full((max_nodes,), -1, jnp.int32),
+        is_leaf=jnp.zeros((max_nodes,), bool).at[0].set(True),
+        no_split=jnp.zeros((max_nodes,), bool),
+        depth=jnp.zeros((max_nodes,), jnp.int32),
+        endpoints=endpoints,
+        num_segs=jnp.zeros((max_nodes,), jnp.int32).at[0].set(init_segments),
+        split_lo=jnp.zeros((max_nodes,), jnp.int32),
+        split_hi=jnp.zeros((max_nodes,), jnp.int32),
+        split_use_std=jnp.zeros((max_nodes,), bool),
+        split_value=jnp.zeros((max_nodes,), jnp.float32),
+        synopsis=jnp.zeros((max_nodes, m, 4), jnp.float32),
+        count=jnp.zeros((max_nodes,), jnp.int32),
+        num_nodes=jnp.asarray(1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-round primitives
+# ---------------------------------------------------------------------------
+
+def _range_stat(p: jax.Array, p2: jax.Array, lo: jax.Array, hi: jax.Array,
+                use_std: jax.Array) -> jax.Array:
+    """Mean or population-std of each series over its own [lo, hi) range.
+
+    ``p``/``p2``: (N, n+1); ``lo``/``hi``/``use_std``: (N,). Returns (N,).
+    """
+    lo = lo[:, None]
+    hi = hi[:, None]
+    ln = jnp.maximum((hi - lo).astype(jnp.float32), 1.0)
+    s1 = jnp.take_along_axis(p, hi, axis=1) - jnp.take_along_axis(p, lo, axis=1)
+    s2 = jnp.take_along_axis(p2, hi, axis=1) - jnp.take_along_axis(p2, lo, axis=1)
+    mean = (s1 / ln)[:, 0]
+    var = jnp.maximum((s2 / ln)[:, 0] - jnp.square(mean), 0.0)
+    return jnp.where(use_std, jnp.sqrt(var), mean)
+
+
+def _seg_minmax(vals: jax.Array, seg_ids: jax.Array, num_segments: int):
+    """segment_min/max with a drop slot; vals (N, ...), seg_ids (N,)."""
+    mn = jax.ops.segment_min(vals, seg_ids, num_segments=num_segments)
+    mx = jax.ops.segment_max(vals, seg_ids, num_segments=num_segments)
+    return mn, mx
+
+
+@functools.partial(jax.jit, static_argnames=("tau",), donate_argnums=(0, 1))
+def _build_round(tree: HerculesTree, node_of: jax.Array,
+                 p: jax.Array, p2: jax.Array, *, tau: int):
+    """One level-synchronous split round. Returns (tree, node_of, num_split)."""
+    max_nodes = tree.max_nodes
+    m = tree.max_segments
+    n = p.shape[1] - 1
+    num = p.shape[0]
+
+    # ---- 1. per-series segment geometry under the current leaf ------------
+    ep = tree.endpoints[node_of]                       # (N, M)
+    starts = jnp.concatenate([jnp.zeros((num, 1), jnp.int32), ep[:, :-1]], axis=1)
+    lens = ep - starts                                  # (N, M) int32
+    mids = starts + lens // 2                           # V-split half boundary
+
+    means, stds = S.segment_stats_from_prefix(p, p2, ep)          # (N, M)
+    h1m, h1s = S.segment_stats_from_prefix(p, p2, mids)           # halves [s,mid)
+    # halves [mid, e): stats via difference of sums
+    ln2 = jnp.maximum((ep - mids).astype(jnp.float32), 1.0)
+    s1b = jnp.take_along_axis(p, ep, 1) - jnp.take_along_axis(p, mids, 1)
+    s2b = jnp.take_along_axis(p2, ep, 1) - jnp.take_along_axis(p2, mids, 1)
+    h2m = s1b / ln2
+    h2s = jnp.sqrt(jnp.maximum(s2b / ln2 - jnp.square(h2m), 0.0))
+
+    # ---- 2. which leaves split this round ---------------------------------
+    counts = jax.ops.segment_sum(jnp.ones((num,), jnp.int32), node_of,
+                                 num_segments=max_nodes)
+    want = tree.is_leaf & ~tree.no_split & (counts > tau)
+    budget = (max_nodes - tree.num_nodes) // 2
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1      # (max_nodes,)
+    splitting = want & (rank < budget)
+
+    # ---- 3. per-leaf synopsis ranges + QoS policy scores -------------------
+    drop = jnp.where(splitting[node_of], node_of, max_nodes)  # reduce only for
+    mu_mn, mu_mx = _seg_minmax(means, drop, max_nodes + 1)    # splitting leaves
+    sd_mn, sd_mx = _seg_minmax(stds, drop, max_nodes + 1)
+    h1m_mn, h1m_mx = _seg_minmax(h1m, drop, max_nodes + 1)
+    h1s_mn, h1s_mx = _seg_minmax(h1s, drop, max_nodes + 1)
+    h2m_mn, h2m_mx = _seg_minmax(h2m, drop, max_nodes + 1)
+    h2s_mn, h2s_mx = _seg_minmax(h2s, drop, max_nodes + 1)
+
+    node_ep = tree.endpoints                            # (max_nodes, M)
+    node_st = jnp.concatenate(
+        [jnp.zeros((max_nodes, 1), jnp.int32), node_ep[:, :-1]], axis=1)
+    node_len = (node_ep - node_st).astype(jnp.float32)  # (max_nodes[+1 via :max], M)
+
+    def rng(mx, mn):
+        return jnp.maximum(mx[:max_nodes] - mn[:max_nodes], 0.0)
+
+    r_mu, r_sd = rng(mu_mx, mu_mn), rng(sd_mx, sd_mn)
+    r1_mu, r1_sd = rng(h1m_mx, h1m_mn), rng(h1s_mx, h1s_mn)
+    r2_mu, r2_sd = rng(h2m_mx, h2m_mn), rng(h2s_mx, h2s_mn)
+
+    valid_seg = node_len >= 1.0
+    l1 = jnp.floor(node_len / 2.0)
+    l2 = node_len - l1
+
+    score_h_mu = jnp.where(valid_seg, node_len * jnp.square(r_mu) / 2.0, -1.0)
+    score_h_sd = jnp.where(valid_seg, node_len * jnp.square(r_sd) / 2.0, -1.0)
+
+    qos_full = node_len * (jnp.square(r_mu) + jnp.square(r_sd))
+    qos_halves = (l1 * (jnp.square(r1_mu) + jnp.square(r1_sd))
+                  + l2 * (jnp.square(r2_mu) + jnp.square(r2_sd)))
+    h_gain = jnp.stack([l1 * jnp.square(r1_mu) / 2.0,   # (max_nodes, M, 4)
+                        l1 * jnp.square(r1_sd) / 2.0,
+                        l2 * jnp.square(r2_mu) / 2.0,
+                        l2 * jnp.square(r2_sd) / 2.0], axis=-1)
+    best_half = jnp.argmax(h_gain, axis=-1)             # (max_nodes, M)
+    best_half_gain = jnp.max(h_gain, axis=-1)
+    can_v = (node_len >= 2.0) & (tree.num_segs < m)[:, None]
+    score_v = jnp.where(can_v, qos_full - qos_halves + best_half_gain, -1.0)
+
+    # candidate tensor: (max_nodes, M, 3) -> [h_mu, h_sd, v]
+    cand = jnp.stack([score_h_mu, score_h_sd, score_v], axis=-1)
+    flat = cand.reshape(max_nodes, m * 3)
+    best_idx = jnp.argmax(flat, axis=1)
+    best_score = jnp.take_along_axis(flat, best_idx[:, None], axis=1)[:, 0]
+    seg_idx = best_idx // 3                             # (max_nodes,)
+    kind = best_idx % 3                                 # 0 h_mu, 1 h_sd, 2 v
+
+    degenerate = splitting & (best_score <= 0.0)
+    splitting = splitting & (best_score > 0.0)
+    # re-rank after dropping degenerates so child ids stay dense
+    rank = jnp.cumsum(splitting.astype(jnp.int32)) - 1
+    splitting = splitting & (rank < budget)
+
+    # ---- 4. resolve the chosen policy per splitting node -------------------
+    ar = jnp.arange(max_nodes)
+    sel = lambda a: a[ar, seg_idx]                      # (max_nodes,)
+    g_st, g_ep = sel(node_st), sel(node_ep)
+    g_mid = g_st + (g_ep - g_st) // 2
+    g_half = sel(best_half)                             # 0..3 for V splits
+    v_use_h2 = g_half >= 2
+    v_use_std = (g_half % 2) == 1
+
+    lo_h, hi_h = g_st, g_ep
+    lo_v = jnp.where(v_use_h2, g_mid, g_st)
+    hi_v = jnp.where(v_use_h2, g_ep, g_mid)
+    is_v = kind == 2
+    new_lo = jnp.where(is_v, lo_v, lo_h)
+    new_hi = jnp.where(is_v, hi_v, hi_h)
+    new_std = jnp.where(is_v, v_use_std, kind == 1)
+
+    def mid_of(mn, mx):
+        return (sel(mn[:max_nodes]) + sel(mx[:max_nodes])) / 2.0
+
+    thr_h = jnp.where(kind == 1, mid_of(sd_mn, sd_mx), mid_of(mu_mn, mu_mx))
+    thr_v = jnp.where(v_use_h2,
+                      jnp.where(v_use_std, mid_of(h2s_mn, h2s_mx), mid_of(h2m_mn, h2m_mx)),
+                      jnp.where(v_use_std, mid_of(h1s_mn, h1s_mx), mid_of(h1m_mn, h1m_mx)))
+    new_value = jnp.where(is_v, thr_v, thr_h)
+
+    # child segmentation: V-split inserts g_mid (pad slot M-1 is always n)
+    child_ep = jnp.where(is_v[:, None],
+                         jnp.sort(node_ep.at[:, m - 1].set(
+                             jnp.where(is_v, g_mid, node_ep[:, m - 1])), axis=1),
+                         node_ep)
+    child_nsegs = tree.num_segs + is_v.astype(jnp.int32)
+
+    # ---- 5. allocate children + scatter metadata ---------------------------
+    left_id = jnp.where(splitting, tree.num_nodes + 2 * rank, max_nodes)
+    right_id = jnp.where(splitting, left_id + 1, max_nodes)
+
+    def sc(arr, idx, val):
+        return arr.at[idx].set(val, mode="drop")
+
+    self_idx = jnp.where(splitting, ar, max_nodes)
+    tree = tree._replace(
+        left=sc(tree.left, self_idx, left_id.astype(jnp.int32)),
+        right=sc(tree.right, self_idx, right_id.astype(jnp.int32)),
+        is_leaf=sc(sc(sc(tree.is_leaf, self_idx, False), left_id, True), right_id, True),
+        no_split=sc(tree.no_split, jnp.where(degenerate, ar, max_nodes), True),
+        split_lo=sc(tree.split_lo, self_idx, new_lo),
+        split_hi=sc(tree.split_hi, self_idx, new_hi),
+        split_use_std=sc(tree.split_use_std, self_idx, new_std),
+        split_value=sc(tree.split_value, self_idx, new_value),
+        parent=sc(sc(tree.parent, left_id, ar.astype(jnp.int32)),
+                  right_id, ar.astype(jnp.int32)),
+        depth=sc(sc(tree.depth, left_id, tree.depth + 1), right_id, tree.depth + 1),
+        endpoints=sc(sc(tree.endpoints, left_id, child_ep), right_id, child_ep),
+        num_segs=sc(sc(tree.num_segs, left_id, child_nsegs), right_id, child_nsegs),
+        num_nodes=tree.num_nodes + 2 * jnp.sum(splitting.astype(jnp.int32)),
+    )
+
+    # ---- 6. re-partition member series -------------------------------------
+    moved = splitting[node_of]
+    stat = _range_stat(p, p2, tree.split_lo[node_of], tree.split_hi[node_of],
+                       tree.split_use_std[node_of])
+    go_right = stat >= tree.split_value[node_of]
+    new_node = jnp.where(go_right, tree.right[node_of], tree.left[node_of])
+    node_of = jnp.where(moved, new_node, node_of).astype(jnp.int32)
+
+    counts = jax.ops.segment_sum(jnp.ones((num,), jnp.int32), node_of,
+                                 num_segments=max_nodes)
+    tree = tree._replace(count=jnp.where(tree.is_leaf, counts, tree.count))
+    return tree, node_of, jnp.sum(splitting.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _synopsis_level(tree: HerculesTree, anc: jax.Array,
+                    p: jax.Array, p2: jax.Array):
+    """Fold every series' stats (under ancestor ``anc``'s segmentation) into
+    that ancestor's synopsis, then step ancestors one level up.
+
+    This is the batched analogue of the paper's index-writing synopsis pass
+    (Algorithms 7–9): instead of per-leaf worker threads walking up with
+    locks, one vectorized reduction per tree level.
+    """
+    max_nodes = tree.max_nodes
+    ep = tree.endpoints[jnp.maximum(anc, 0)]
+    means, stds = S.segment_stats_from_prefix(p, p2, ep)
+    ids = jnp.where(anc >= 0, anc, max_nodes)
+    mu_mn, mu_mx = _seg_minmax(means, ids, max_nodes + 1)
+    sd_mn, sd_mx = _seg_minmax(stds, ids, max_nodes + 1)
+    old = tree.synopsis
+    # fold with min/max identities: untouched slots keep their +-big init
+    syn = jnp.stack([jnp.minimum(old[..., 0], mu_mn[:max_nodes]),
+                     jnp.maximum(old[..., 1], mu_mx[:max_nodes]),
+                     jnp.minimum(old[..., 2], sd_mn[:max_nodes]),
+                     jnp.maximum(old[..., 3], sd_mx[:max_nodes])], axis=-1)
+    anc = jnp.where(anc >= 0, tree.parent[jnp.maximum(anc, 0)], -1)
+    return tree._replace(synopsis=syn), anc
+
+
+_SYN_BIG = 3.0e38
+
+
+def compute_synopses(tree: HerculesTree, node_of: jax.Array,
+                     p: jax.Array, p2: jax.Array, max_depth: int) -> HerculesTree:
+    """Exact synopses for every node (leaf + internal), level-vectorized.
+
+    Every series folds its per-segment stats into each of its ancestors
+    (including its leaf), one tree level per step — the index-writing phase
+    of the paper without locks.
+    """
+    init = jnp.stack([jnp.full(tree.synopsis.shape[:-1], _SYN_BIG, jnp.float32),
+                      jnp.full(tree.synopsis.shape[:-1], -_SYN_BIG, jnp.float32),
+                      jnp.full(tree.synopsis.shape[:-1], _SYN_BIG, jnp.float32),
+                      jnp.full(tree.synopsis.shape[:-1], -_SYN_BIG, jnp.float32)],
+                     axis=-1)
+    tree = tree._replace(synopsis=init)
+    anc = node_of
+    for _ in range(max_depth + 1):
+        tree, anc = _synopsis_level(tree, anc, p, p2)
+    # zero out untouched (empty) nodes so downstream arithmetic stays finite
+    untouched = tree.synopsis[..., 0] >= _SYN_BIG
+    syn = jnp.where(untouched[..., None], 0.0, tree.synopsis)
+    return tree._replace(synopsis=syn)
+
+
+# ---------------------------------------------------------------------------
+# Build driver
+# ---------------------------------------------------------------------------
+
+def build_tree(data: jax.Array, config: BuildConfig) -> tuple[HerculesTree, jax.Array]:
+    """Build the Hercules tree over ``data`` (N, n).
+
+    Returns (tree, node_of) where node_of maps each series to its leaf.
+    Python-driven round loop over a single compiled round step; the number of
+    rounds equals the final tree depth (level-synchronous).
+    """
+    num, n = data.shape
+    max_nodes = config.resolve_max_nodes(num)
+    if config.init_segments > config.max_segments:
+        raise ValueError("init_segments > max_segments")
+    tree = _empty_tree(max_nodes, config.max_segments, n, config.init_segments)
+    node_of = jnp.zeros((num,), jnp.int32)
+    p, p2 = S.prefix_sums(data)
+    tree = tree._replace(count=tree.count.at[0].set(num))
+
+    for _ in range(config.max_rounds):
+        tree, node_of, n_split = _build_round(tree, node_of, p, p2,
+                                              tau=config.leaf_capacity)
+        if int(n_split) == 0:
+            break
+
+    max_depth = int(jnp.max(jnp.where(jnp.arange(max_nodes) < tree.num_nodes,
+                                      tree.depth, 0)))
+    tree = compute_synopses(tree, node_of, p, p2, max_depth)
+    return tree, node_of
+
+
+# ---------------------------------------------------------------------------
+# Routing (query-time descent, paper Alg. 5 line 1 / RouteToLeaf)
+# ---------------------------------------------------------------------------
+
+def route_to_leaf(tree: HerculesTree, series: jax.Array, max_depth: int) -> jax.Array:
+    """Route each series (Q, n) to its home leaf id. Returns (Q,) int32."""
+    p, p2 = S.prefix_sums(series)
+    node = jnp.zeros((series.shape[0],), jnp.int32)
+
+    def step(_, node):
+        leaf = tree.is_leaf[node]
+        stat = _range_stat(p, p2, tree.split_lo[node], tree.split_hi[node],
+                           tree.split_use_std[node])
+        go_right = stat >= tree.split_value[node]
+        nxt = jnp.where(go_right, tree.right[node], tree.left[node])
+        return jnp.where(leaf, node, nxt).astype(jnp.int32)
+
+    return jax.lax.fori_loop(0, max_depth + 1, step, node)
+
+
+# ---------------------------------------------------------------------------
+# Host-side inspection helpers (small-tree operations; numpy)
+# ---------------------------------------------------------------------------
+
+def inorder_leaves(tree: HerculesTree) -> np.ndarray:
+    """Leaf ids in in-order traversal — the LRDFile layout order (§3.3.1).
+
+    For leaves, in-order == left-to-right DFS order (internal nodes interleave
+    but are not materialized in LRDFile).
+    """
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    is_leaf = np.asarray(tree.is_leaf)
+    order: list[int] = []
+    stack: list[int] = [0]
+    while stack:
+        node = stack.pop()
+        if node < 0:
+            continue
+        if is_leaf[node]:
+            order.append(node)
+        else:
+            stack.append(right[node])
+            stack.append(left[node])
+    return np.asarray(order, dtype=np.int32)
+
+
+def tree_stats(tree: HerculesTree) -> dict:
+    nn = int(tree.num_nodes)
+    leaf = np.asarray(tree.is_leaf[:nn])
+    cnt = np.asarray(tree.count[:nn])
+    return {
+        "num_nodes": nn,
+        "num_leaves": int(leaf.sum()),
+        "max_depth": int(np.asarray(tree.depth[:nn]).max(initial=0)),
+        "max_leaf": int(cnt[leaf].max(initial=0)),
+        "min_leaf": int(cnt[leaf].min(initial=0)),
+        "total_in_leaves": int(cnt[leaf].sum()),
+    }

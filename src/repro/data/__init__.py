@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    random_walks, make_query_workload, DIFFICULTY_LEVELS,
+)

@@ -1,0 +1,48 @@
+"""Double-buffered host->device data pipeline (the paper's DBuffer, §3.3).
+
+The paper overlaps disk reads with tree inserts via a two-slot buffer and a
+coordinator thread. The JAX analogue overlaps host batch generation with
+device compute: while the device works on batch t, the host prepares and
+transfers batch t+1 (``jax.device_put`` is async). State is (seed, step) so
+a restarted worker regenerates exactly the same stream (the fault-tolerance
+contract used by launch/train.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+
+class DoubleBufferedLoader:
+    """Prefetching loader over a deterministic batch function.
+
+    ``make_batch(step) -> pytree of np/jnp arrays`` must be pure in ``step``.
+    """
+
+    def __init__(self, make_batch: Callable[[int], dict], start_step: int = 0,
+                 device=None):
+        self._make = make_batch
+        self._step = start_step
+        self._device = device or jax.devices()[0]
+        self._next = self._stage(self._step)
+
+    def _stage(self, step: int):
+        host = self._make(step)
+        # async transfer: returns immediately, compute overlaps the copy
+        return jax.tree.map(lambda x: jax.device_put(x, self._device), host)
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        batch = self._next
+        self._step += 1
+        self._next = self._stage(self._step)   # prefetch t+1 while t runs
+        return batch
+
+    @property
+    def state(self) -> int:
+        """Checkpointable pipeline state: the next step index."""
+        return self._step

@@ -1,0 +1,51 @@
+"""Synthetic data-series generation (paper §4.1 Datasets/Queries).
+
+* ``random_walks`` — the paper's *Synth* generator: cumulative sum of i.i.d.
+  Gaussian(0, 1) steps, modelling financial series [23]; widely used in the
+  data-series indexing literature [10, 23, 70].
+* ``make_query_workload`` — the paper's query hardness protocol [69]: pick
+  dataset series and perturb with Gaussian noise of variance sigma^2 in
+  {0.01 .. 0.10} ("1%".."10%"), or draw fresh walks for *ood* queries.
+
+All generators are pure functions of a PRNG key (restart-exact for the fault
+tolerance story: pipeline state = (step, key)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DIFFICULTY_LEVELS = ("1%", "2%", "5%", "10%", "ood")
+
+
+def random_walks(key: jax.Array, num: int, length: int,
+                 znorm: bool = True) -> jax.Array:
+    """(num, length) float32 random-walk series (paper's Synth)."""
+    steps = jax.random.normal(key, (num, length), dtype=jnp.float32)
+    walks = jnp.cumsum(steps, axis=-1)
+    if znorm:
+        mu = jnp.mean(walks, axis=-1, keepdims=True)
+        sd = jnp.maximum(jnp.std(walks, axis=-1, keepdims=True), 1e-8)
+        walks = (walks - mu) / sd
+    return walks
+
+
+def make_query_workload(key: jax.Array, dataset: jax.Array, num_queries: int,
+                        difficulty: str = "5%") -> jax.Array:
+    """Queries of a given hardness from/against ``dataset`` (N, n).
+
+    ``difficulty``: one of DIFFICULTY_LEVELS. Noise workloads select dataset
+    series at random and add N(0, sigma^2) noise; *ood* draws independent
+    random walks (the paper excludes ood queries from indexing — for synthetic
+    data a fresh seed is the same thing).
+    """
+    if difficulty not in DIFFICULTY_LEVELS:
+        raise ValueError(f"difficulty {difficulty!r} not in {DIFFICULTY_LEVELS}")
+    n = dataset.shape[-1]
+    if difficulty == "ood":
+        return random_walks(key, num_queries, n)
+    sigma2 = float(difficulty.rstrip("%")) / 100.0
+    k_sel, k_noise = jax.random.split(key)
+    idx = jax.random.randint(k_sel, (num_queries,), 0, dataset.shape[0])
+    noise = jax.random.normal(k_noise, (num_queries, n)) * jnp.sqrt(sigma2)
+    return dataset[idx] + noise.astype(jnp.float32)

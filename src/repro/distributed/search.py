@@ -1,0 +1,182 @@
+"""Distributed Hercules search: series-sharded local indexes + top-k merge.
+
+The paper is single-node (§2 excludes TARDIS/DPiSAX); this layer is the
+beyond-paper scaling story (DESIGN.md §2): the collection is split into one
+contiguous range per device, each device builds its own Hercules index over
+its shard (embarrassingly parallel — the paper's InsertWorkers become
+devices), and a query answers as:
+
+    local exact top-k on every shard  ->  all_gather((k,) per shard)
+    ->  merge to global exact top-k        [O(devices * k) floats on ICI]
+
+Exactness: the global kNN set is the k smallest of the union of per-shard
+exact kNN sets (each shard returns its k best, and any global top-k member is
+within the top-k of its own shard). The collective term is tiny by
+construction — this search is compute/memory bound at any scale, which is
+what EXPERIMENTS.md §Roofline shows for the hercules rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.index import HerculesIndex, IndexConfig
+from repro.core.layout import HerculesLayout
+from repro.core.search import SearchConfig, _query_one
+from repro.core.tree import HerculesTree
+
+
+@dataclasses.dataclass
+class StackedIndex:
+    """D per-shard indexes stacked leaf-wise (leading shard dim on arrays)."""
+    tree: HerculesTree              # arrays (D, ...)
+    layout: HerculesLayout          # arrays (D, ...); static fields unified
+    shard_offsets: jax.Array        # (D,) global id offset per shard
+    max_depth: int
+    config: IndexConfig
+    num_shards: int
+
+
+def build_distributed_index(data: jax.Array, num_shards: int,
+                            config: IndexConfig | None = None) -> StackedIndex:
+    """Split ``data`` into contiguous shards and build one index per shard.
+
+    Host-driven (builds are independent); static metadata (padded leaf count,
+    max leaf extent, padded series count) is unified across shards so one
+    compiled search program serves every shard under shard_map.
+    """
+    config = config or IndexConfig()
+    n = data.shape[0]
+    if n % num_shards:
+        raise ValueError(f"{n} series not divisible into {num_shards} shards")
+    per = n // num_shards
+    sub = [HerculesIndex.build(data[i * per:(i + 1) * per], config)
+           for i in range(num_shards)]
+
+    # unify static shapes
+    max_nodes = max(s.tree.max_nodes for s in sub)
+    L = max(s.layout.leaf_start.shape[0] for s in sub)
+    n_pad = max(s.layout.lrd.shape[0] for s in sub)
+    max_leaf = max(s.layout.max_leaf for s in sub)
+    max_depth = max(s.max_depth for s in sub)
+
+    def pad_to(arr, target_rows, fill=0):
+        pad = target_rows - arr.shape[0]
+        if pad <= 0:
+            return arr
+        padding = jnp.full((pad, *arr.shape[1:]), fill, arr.dtype)
+        return jnp.concatenate([arr, padding], axis=0)
+
+    trees = []
+    layouts = []
+    for s in sub:
+        t = s.tree
+        trees.append(HerculesTree(*[
+            pad_to(getattr(t, f), max_nodes) if getattr(t, f).ndim else getattr(t, f)
+            for f in HerculesTree._fields]))
+        l = s.layout
+        layouts.append(HerculesLayout(
+            lrd=pad_to(l.lrd, n_pad), lsd=pad_to(l.lsd, n_pad),
+            perm=pad_to(l.perm, n_pad, fill=-1),
+            inv_perm=pad_to(l.inv_perm, n_pad, fill=-1),
+            leaf_rank=pad_to(l.leaf_rank, max_nodes, fill=-1),
+            leaf_node=pad_to(l.leaf_node, L),
+            leaf_start=pad_to(l.leaf_start, L, fill=l.num_series),
+            leaf_count=pad_to(l.leaf_count, L, fill=0),
+            leaf_synopsis=pad_to(l.leaf_synopsis, L),
+            leaf_endpoints=pad_to(l.leaf_endpoints, L),
+            leaf_seg_lens=pad_to(l.leaf_seg_lens, L),
+            series_leaf_rank=pad_to(l.series_leaf_rank, n_pad, fill=L),
+            series_len=l.series_len, max_leaf=max_leaf,
+            num_leaves=l.num_leaves, num_series=per))
+
+    tree = HerculesTree(*[jnp.stack([getattr(t, f) for t in trees])
+                          for f in HerculesTree._fields])
+    lay0 = layouts[0]
+    layout = HerculesLayout(
+        **{f: jnp.stack([getattr(l, f) for l in layouts])
+           for f in ("lrd", "lsd", "perm", "inv_perm", "leaf_rank", "leaf_node",
+                     "leaf_start", "leaf_count", "leaf_synopsis",
+                     "leaf_endpoints", "leaf_seg_lens", "series_leaf_rank")},
+        series_len=lay0.series_len, max_leaf=max_leaf,
+        num_leaves=L, num_series=per)
+    offsets = jnp.arange(num_shards, dtype=jnp.int32) * per
+    return StackedIndex(tree=tree, layout=layout, shard_offsets=offsets,
+                        max_depth=max_depth, config=config,
+                        num_shards=num_shards)
+
+
+def _unstack(tree_or_layout, cls):
+    """Strip the leading shard dim (size 1 inside each shard_map program)."""
+    if cls is HerculesTree:
+        return HerculesTree(*[getattr(tree_or_layout, f)[0]
+                              for f in HerculesTree._fields])
+    kw = {f: getattr(tree_or_layout, f)[0]
+          for f in ("lrd", "lsd", "perm", "inv_perm", "leaf_rank", "leaf_node",
+                    "leaf_start", "leaf_count", "leaf_synopsis",
+                    "leaf_endpoints", "leaf_seg_lens", "series_leaf_rank")}
+    for f in ("series_len", "max_leaf", "num_leaves", "num_series"):
+        kw[f] = getattr(tree_or_layout, f)
+    return HerculesLayout(**kw)
+
+
+def make_distributed_search(mesh: Mesh, cfg: SearchConfig, max_depth: int,
+                            tree_template, layout_template):
+    """Build the jitted shard_map search program (also lowered by the
+    dry-run with ShapeDtypeStruct templates)."""
+    axes = tuple(mesh.axis_names)
+    shard_spec = P(axes)
+    repl = P()
+    tree_specs = jax.tree.map(lambda _: shard_spec, tree_template)
+    lay_specs = jax.tree.map(lambda _: shard_spec, layout_template)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(tree_specs, lay_specs, shard_spec, repl),
+        out_specs=(repl, repl),
+        check_vma=False)
+    def run(tree_s, lay_s, offset, q):
+        tree = _unstack(tree_s, HerculesTree)
+        layout = _unstack(lay_s, HerculesLayout)
+
+        def one(qi):
+            d, p, *_ = _query_one(qi, tree, layout, cfg, max_depth)
+            safe = jnp.clip(p, 0, layout.perm.shape[0] - 1)
+            gid = jnp.where(p >= 0, layout.perm[safe] + offset[0], -1)
+            return d, gid
+
+        d, gid = jax.lax.map(one, q)                   # (Q, k) local
+        all_d = jax.lax.all_gather(d, axes, axis=0, tiled=False)
+        all_g = jax.lax.all_gather(gid, axes, axis=0, tiled=False)
+        # all_gather over multiple axes stacks per axis: flatten to (D, Q, k)
+        all_d = all_d.reshape(-1, *d.shape)
+        all_g = all_g.reshape(-1, *gid.shape)
+        dd = jnp.moveaxis(all_d, 0, 1).reshape(q.shape[0], -1)
+        gg = jnp.moveaxis(all_g, 0, 1).reshape(q.shape[0], -1)
+        neg, idx = jax.lax.top_k(-dd, cfg.k)
+        return -neg, jnp.take_along_axis(gg, idx, axis=1)
+
+    return jax.jit(run)
+
+
+def distributed_knn(index: StackedIndex, queries: jax.Array, mesh: Mesh,
+                    cfg: SearchConfig | None = None):
+    """Exact global kNN under ``mesh``. All mesh axes shard the series dim.
+
+    Returns (dists (Q, k), global ids (Q, k)).
+    """
+    cfg = cfg or index.config.search
+    axes = tuple(mesh.axis_names)
+    ndev = int(np.prod([mesh.shape[a] for a in axes]))
+    if index.num_shards != ndev:
+        raise ValueError(f"index has {index.num_shards} shards, mesh {ndev} devices")
+    run = make_distributed_search(mesh, cfg, index.max_depth,
+                                  index.tree, index.layout)
+    return run(index.tree, index.layout,
+               index.shard_offsets.reshape(ndev, 1), queries)

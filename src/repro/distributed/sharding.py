@@ -1,0 +1,226 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP over the production mesh.
+
+Parameters get 2-D shardings (Megatron-style TP on the contraction-adjacent
+dim + ZeRO-3/FSDP on the other), experts shard on the model axis (EP), decode
+KV caches shard sequence on the model axis (SP) so 32k-context caches fit.
+Dims that do not divide evenly by the mesh axis are left unsharded (the
+production fallback; noted per-arch in EXPERIMENTS.md).
+
+The rules are *path-pattern based* over the flattened param tree, covering
+every arch in the zoo. Activation shardings are installed as the
+``maybe_shard`` hook (logical names -> PartitionSpec).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models import common as C
+
+# (path regex, spec per trailing dims) — first match wins. "fsdp" resolves to
+# the mesh's data axes, "model" to the TP axis. Specs are for the LOGICAL
+# (unstacked) rank; stacked layer params (leading L dim from scan) get None
+# prepended automatically.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"(^|/)embed$",                ("model", "fsdp")),     # (V, d)
+    (r"(^|/)lm_head$",              ("fsdp", "model")),     # (d, V)
+    (r"(^|/)patch_proj$",           (None, "fsdp")),
+    (r"(^|/)pos_(enc|dec)$",        (None, None)),
+    (r"/attn/w[qkv]$",              ("fsdp", "model")),
+    (r"/attn/wo$",                  ("model", "fsdp")),
+    (r"/(self|cross)_attn/w[qkv]$", ("fsdp", "model")),
+    (r"/(self|cross)_attn/wo$",     ("model", "fsdp")),
+    (r"/moe/router$",               ("fsdp", None)),
+    (r"/moe/w_(gate|up)$",          ("model", "fsdp", None)),   # (E, d, ff)
+    (r"/moe/w_down$",               ("model", None, "fsdp")),   # (E, ff, d)
+    (r"/mlp/w_(gate|up)$",          ("fsdp", "model")),
+    (r"/mlp/w_down$",               ("model", "fsdp")),
+    (r"/mlp/b_up$",                 ("model",)),
+    (r"/mlp/b_down$",               (None,)),
+    # rwkv6 time-mix (d,d) and output
+    (r"/tm/w_[rkvg]$",              ("fsdp", "model")),
+    (r"/tm/w_o$",                   ("model", "fsdp")),
+    (r"/tm/w_lora_[ab]$",           (None, None)),
+    # rwkv6 channel-mix
+    (r"/cm/w_k$",                   ("fsdp", "model")),
+    (r"/cm/w_v$",                   ("model", "fsdp")),
+    (r"/cm/w_r$",                   ("fsdp", "model")),
+    # recurrentgemma RG-LRU block
+    (r"/rec/w_(x|gate)$",           ("fsdp", "model")),
+    (r"/rec/w_out$",                ("model", "fsdp")),
+    (r"/rec/w_(input|rec)_gate$",   (None, "model")),
+    (r"/rec/b_(input|rec)_gate$",   ("model",)),
+    (r"/rec/conv_w$",               (None, "model")),
+    (r"/rec/conv_b$",               ("model",)),
+    (r"/rec/lambda$",               ("model",)),
+]
+
+
+def _resolve(axis, mesh: Mesh):
+    if axis == "fsdp":
+        ax = data_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    return axis
+
+
+def _fits(dim: int, axis, mesh: Mesh) -> bool:
+    if axis is None:
+        return True
+    names = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return dim % size == 0 and dim >= size
+
+
+def _spec_for_shape(shape, spec, mesh: Mesh):
+    """Adapt a rule spec to an actual shape: prepend None for stacked dims,
+    drop axes that don't divide."""
+    spec = tuple(spec)
+    if len(shape) == len(spec) + 1:          # stacked layers (scan)
+        spec = (None, *spec)
+    elif len(shape) != len(spec):
+        return P()                           # rank mismatch: replicate
+    out = []
+    for dim, axis in zip(shape, spec):
+        axis = _resolve(axis, mesh)
+        out.append(axis if _fits(dim, axis, mesh) else None)
+    return P(*out)
+
+
+def param_spec(path: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one param (mesh only consulted for axis sizes)."""
+    for pattern, spec in _PARAM_RULES:
+        if re.search(pattern, path):
+            return _spec_for_shape(shape, spec, mesh)
+    return P()                               # norms, scalars, mus: replicate
+
+
+def param_sharding(path: str, arr, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, param_spec(path, arr.shape, mesh))
+
+
+def _flatten_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_paths(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten_paths(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def shard_params_tree(params, mesh: Mesh):
+    """NamedSharding pytree matching ``params`` (for in_shardings / device_put)."""
+    flat = _flatten_paths(params)
+    shardings = {p: param_sharding(p, a, mesh) for p, a in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}{i}/")
+                              for i, v in enumerate(tree))
+        return shardings[prefix.rstrip("/")]
+
+    return rebuild(params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_sharding(batch_specs: dict, mesh: Mesh) -> dict:
+    """tokens/labels (B, S) -> batch on data axes; frontend embeds likewise."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(spec):
+        b = spec.shape[0]
+        axes = [dp if _fits(b, dp, mesh) else None]
+        axes += [None] * (len(spec.shape) - 1)
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, batch_specs,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def cache_sharding(cache_specs, mesh: Mesh):
+    """KV caches: batch on data axes, sequence on model (SP) so 32k-context
+    caches fit HBM; recurrent states: width on model."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(spec):
+        shape = spec.shape
+        if len(shape) == 5:      # (L, B, S, G, hd) stacked KV
+            axes = [None,
+                    dp if _fits(shape[1], dp, mesh) else None,
+                    "model" if _fits(shape[2], "model", mesh) else None,
+                    None, None]
+        elif len(shape) == 4:    # (B, S, G, hd) per-layer KV
+            axes = [dp if _fits(shape[0], dp, mesh) else None,
+                    "model" if _fits(shape[1], "model", mesh) else None,
+                    None, None]
+        elif len(shape) == 3:    # (L, B, d) token-shift / (B, W, rnn) conv
+            axes = [None,
+                    dp if _fits(shape[1], dp, mesh) else None,
+                    "model" if _fits(shape[2], "model", mesh) else None]
+            if shape[0] <= 256:  # heuristic: leading dim is L for (L,B,d)
+                pass
+        elif len(shape) == 2:    # (B, rnn) state / (B,) pos is 1D
+            axes = [dp if _fits(shape[0], dp, mesh) else None,
+                    "model" if _fits(shape[1], "model", mesh) else None]
+        elif len(shape) == 1:
+            axes = [None]
+        else:                    # (L, B, H, K, V) wkv state — shard H
+            axes = [None] * len(shape)
+            if len(shape) >= 3:
+                axes[1] = dp if _fits(shape[1], dp, mesh) else None
+                axes[2] = "model" if _fits(shape[2], "model", mesh) else None
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, cache_specs,
+                        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, (list, dict)))
+
+
+# ---------------------------------------------------------------------------
+# activation annotations (the maybe_shard hook)
+# ---------------------------------------------------------------------------
+
+def install_activation_hook(mesh: Mesh) -> None:
+    dp = data_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+    table = {
+        "act_btd": P(dp_ax, None, None),
+        "act_ff": P(dp_ax, None, "model"),
+        "act_heads": P(dp_ax, None, "model", None),
+        "moe_dispatch": P(dp_ax, "model", None, None),   # (B, E, C, d)
+        "moe_hidden": P(dp_ax, "model", None, None),     # (B, E, C, ff)
+        "kv_seq": P(dp_ax, "model", None, None),         # (B, S, H, hd)
+        "decode_scores": P(dp_ax, None, None, "model"),  # (B, H, 1, S)
+    }
+
+    def hook(x, logical):
+        spec = table.get(logical)
+        if spec is None:
+            return x
+        # drop axes that don't divide the actual dims
+        axes = []
+        for dim, ax in zip(x.shape, tuple(spec) + (None,) * len(x.shape)):
+            axes.append(ax if _fits(dim, ax, mesh) else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*axes)))
+
+    C.set_shard_hook(hook)
+
+
+def clear_activation_hook() -> None:
+    C.set_shard_hook(None)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes with SIMD
+# (exact-distance scans, LB_SAX filtering) plus the ssm-arch WKV recurrence.
+# Validated in interpret mode on CPU; ops.py wrappers fall back to ref.py
+# oracles for XLA-only paths (e.g. the CPU dry-run lowering).
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ed import ed_matrix, ed_min  # noqa: F401
+from repro.kernels.lb_sax import lb_sax_matrix  # noqa: F401
+from repro.kernels.wkv6 import wkv6  # noqa: F401

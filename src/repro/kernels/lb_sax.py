@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for LB_SAX (MINDIST) over packed iSAX codes.
+
+The paper's phase 3 streams the in-memory LSDFile (uint8 iSAX codes, 16 bytes
+per series vs 4*n bytes of raw data) and computes LB_SAX per series. On TPU
+this is a bandwidth-bound VPU job; the only awkward part is the breakpoint
+table lookup (codes -> cell [lo, hi] bounds). Gathers are not VPU-friendly, so
+the lookup is expressed as a **one-hot matmul against the (alphabet,) bound
+tables** — the embedding-lookup-as-matmul idiom, which runs on the MXU.
+
+    lo = onehot(code) @ lo_table        hi = onehot(code) @ hi_table
+    d  = max(lo - paa, paa - hi, 0)     lb = seg_len * sum_i d_i^2
+
+Tiling: codes block (bn, m) uint8, query PAA block (bq, m) f32, tables whole
+(alphabet,). Output (bq, bn). m = 16 everywhere (paper's segment count).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import summaries as S
+
+DEFAULT_BQ = 8
+DEFAULT_BN = 1024
+
+
+def _lb_sax_kernel(qpaa_ref, codes_ref, lo_tab_ref, hi_tab_ref, out_ref,
+                   *, seg_len: float, alphabet: int):
+    q = qpaa_ref[...].astype(jnp.float32)            # (bq, m)
+    c = codes_ref[...].astype(jnp.int32)             # (bn, m)
+    bn, m = c.shape
+    # one-hot lookup on the MXU: (bn*m, A) @ (A,) -> (bn*m,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn * m, alphabet), 1)
+    onehot = (c.reshape(bn * m, 1) == iota).astype(jnp.float32)
+    lo = (onehot @ lo_tab_ref[...].reshape(alphabet, 1)).reshape(bn, m)
+    hi = (onehot @ hi_tab_ref[...].reshape(alphabet, 1)).reshape(bn, m)
+    d = jnp.maximum(jnp.maximum(lo[None] - q[:, None], q[:, None] - hi[None]),
+                    0.0)                              # (bq, bn, m)
+    out_ref[...] = seg_len * jnp.sum(d * d, axis=-1)
+
+
+def _bound_tables(alphabet: int) -> tuple[jax.Array, jax.Array]:
+    """Per-symbol cell bound tables (lo_table, hi_table), each (alphabet,)."""
+    big = 3.0e38
+    bps = S.sax_breakpoints(alphabet)                # (A-1,)
+    lo = jnp.concatenate([jnp.asarray([-big], jnp.float32), bps])
+    hi = jnp.concatenate([bps, jnp.asarray([big], jnp.float32)])
+    return lo, hi
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("series_len", "alphabet", "bq", "bn",
+                                    "interpret"))
+def lb_sax_matrix(q_paa: jax.Array, codes: jax.Array, series_len: int,
+                  alphabet: int = S.SAX_ALPHABET,
+                  bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN,
+                  interpret: bool = False) -> jax.Array:
+    """(Q, m) PAA x (N, m) uint8 codes -> (Q, N) squared LB_SAX."""
+    qn, m = q_paa.shape
+    sn = codes.shape[0]
+    grid = (qn // bq, sn // bn)
+    lo_tab, hi_tab = _bound_tables(alphabet)
+    kernel = functools.partial(_lb_sax_kernel, seg_len=series_len / m,
+                               alphabet=alphabet)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((alphabet,), lambda i, j: (0,)),
+            pl.BlockSpec((alphabet,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, sn), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_paa, codes, lo_tab, hi_tab)

@@ -1,0 +1,106 @@
+"""jit'd public wrappers around the Pallas kernels (padding + dispatch).
+
+These are the entry points the rest of the framework calls. Each wrapper:
+  * pads inputs up to block multiples (masking semantics preserved),
+  * dispatches to the Pallas kernel (``interpret=True`` on CPU — the kernels
+    target TPU; interpret mode executes the same kernel body for validation),
+  * slices the result back to logical shapes.
+
+``use_pallas=False`` falls back to the ref.py oracle — that is also what the
+dry-run lowers (XLA path) so CPU compilation never depends on Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ed as _ed
+from repro.kernels import lb_sax as _lb
+from repro.kernels import ref as _ref
+
+_PAD_DIST = 3.0e38
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, value: float = 0.0) -> jax.Array:
+    n = x.shape[0]
+    tgt = -(-n // mult) * mult
+    if tgt == n:
+        return x
+    pad = jnp.full((tgt - n, *x.shape[1:]), value, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def ed_matrix(queries: jax.Array, series: jax.Array, *,
+              bq: int | None = None, bn: int | None = None,
+              bk: int | None = None, use_pallas: bool = True,
+              interpret: bool | None = None) -> jax.Array:
+    """(Q, n) x (N, n) -> (Q, N) squared ED. Pads freely; exact result."""
+    if not use_pallas:
+        return _ref.ed_matrix_ref(queries, series)
+    interpret = _on_cpu() if interpret is None else interpret
+    q0, s0 = queries.shape[0], series.shape[0]
+    n = queries.shape[1]
+    bq = bq or min(_ed.DEFAULT_BQ, max(8, q0))
+    bn = bn or min(_ed.DEFAULT_BN, max(128, s0))
+    bk = bk or min(_ed.DEFAULT_BK, n)
+    q = _pad_rows(queries, bq)
+    s = _pad_rows(series, bn)
+    if n % bk:
+        # pad length with zeros: contributes 0 to both norms and dot
+        extra = -(-n // bk) * bk - n
+        q = jnp.concatenate([q, jnp.zeros((q.shape[0], extra), q.dtype)], 1)
+        s = jnp.concatenate([s, jnp.zeros((s.shape[0], extra), s.dtype)], 1)
+    out = _ed.ed_matrix(q, s, bq=bq, bn=bn, bk=bk, interpret=interpret)
+    return out[:q0, :s0]
+
+
+def ed_min(queries: jax.Array, series: jax.Array, *,
+           bq: int | None = None, bn: int | None = None,
+           bk: int | None = None, use_pallas: bool = True,
+           interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Fused 1-NN: ((Q,) min squared ED, (Q,) argmin over the N axis)."""
+    if not use_pallas:
+        return _ref.ed_min_ref(queries, series)
+    interpret = _on_cpu() if interpret is None else interpret
+    q0, s0 = queries.shape[0], series.shape[0]
+    n = queries.shape[1]
+    bq = bq or min(_ed.DEFAULT_BQ, max(8, q0))
+    bn = bn or min(_ed.DEFAULT_BN, max(128, s0))
+    bk = bk or min(_ed.DEFAULT_BK, n)
+    q = _pad_rows(queries, bq)
+    # pad series rows with +inf-distance sentinels: use a huge constant row
+    # (norm dominates) so padded rows never win the min
+    s = _pad_rows(series, bn, value=0.0)
+    pad_rows = s.shape[0] - s0
+    if pad_rows:
+        sentinel = jnp.full((pad_rows, s.shape[1]), 1.0e18, s.dtype)
+        s = jnp.concatenate([s[:s0], sentinel], axis=0)
+    if n % bk:
+        extra = -(-n // bk) * bk - n
+        q = jnp.concatenate([q, jnp.zeros((q.shape[0], extra), q.dtype)], 1)
+        s = jnp.concatenate([s, jnp.zeros((s.shape[0], extra), s.dtype)], 1)
+    dmin, amin = _ed.ed_min(q, s, bq=bq, bn=bn, bk=bk, interpret=interpret)
+    return dmin[:q0], amin[:q0]
+
+
+def lb_sax_matrix(q_paa: jax.Array, codes: jax.Array, series_len: int, *,
+                  bq: int | None = None, bn: int | None = None,
+                  use_pallas: bool = True,
+                  interpret: bool | None = None) -> jax.Array:
+    """(Q, m) x (N, m) uint8 -> (Q, N) squared LB_SAX."""
+    if not use_pallas:
+        return _ref.lb_sax_matrix_ref(q_paa, codes, series_len)
+    interpret = _on_cpu() if interpret is None else interpret
+    q0, s0 = q_paa.shape[0], codes.shape[0]
+    bq = bq or min(_lb.DEFAULT_BQ, max(8, q0))
+    bn = bn or min(_lb.DEFAULT_BN, max(128, s0))
+    q = _pad_rows(q_paa, bq)
+    c = _pad_rows(codes, bn)
+    out = _lb.lb_sax_matrix(q, c, series_len, bq=bq, bn=bn, interpret=interpret)
+    return out[:q0, :s0]

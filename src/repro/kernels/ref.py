@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors one kernel's contract exactly (shapes, dtypes, masking)
+using straight-line jnp — no blocking, no scratch, no grids. Tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import summaries as S
+
+
+def ed_matrix_ref(queries: jax.Array, series: jax.Array) -> jax.Array:
+    """(Q, n) x (N, n) -> (Q, N) squared ED, direct-sum formulation."""
+    diff = queries[:, None, :].astype(jnp.float32) - series[None, :, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def ed_min_ref(queries: jax.Array, series: jax.Array):
+    """Fused 1-NN oracle: ((Q,) min squared ED, (Q,) argmin)."""
+    d = ed_matrix_ref(queries, series)
+    return jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def lb_sax_matrix_ref(q_paa: jax.Array, codes: jax.Array, series_len: int,
+                      alphabet: int = S.SAX_ALPHABET) -> jax.Array:
+    """(Q, m) x (N, m) -> (Q, N) squared LB_SAX (MINDIST)."""
+    lo, hi = S.isax_cell_bounds(codes, alphabet)         # (N, m)
+    q = q_paa[:, None, :]
+    d = jnp.maximum(jnp.maximum(lo[None] - q, q - hi[None]), 0.0)
+    m = q_paa.shape[-1]
+    return (series_len / m) * jnp.sum(d * d, axis=-1)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array):
+    """RWKV-6 recurrence oracle (B, T, H, K/V dims); see kernels/wkv6.py.
+
+    state: (B, H, K, V). Returns (out (B,T,H,V), final state).
+      out_t = r_t . (state + u * k_t v_t^T);  state = diag(w_t) state + k_t v_t^T
+    """
+    def step(s, xs):
+        rt, kt, vt, wt = xs                              # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]         # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) WKV recurrence.
+
+The rwkv6-7b arch's compute hot spot at long context is the data-dependent
+decay recurrence (per head, K x V state S):
+
+    out_t = r_t . (S + diag(u) k_t v_t^T)        (bonus u on the current token)
+    S     = diag(w_t) S + k_t v_t^T              (w_t in (0,1), data-dependent)
+
+GPU implementations (CUDA wkv kernels / flash-linear-attention) tile this over
+thread blocks with shared-memory state. The TPU adaptation streams the
+sequence through VMEM in chunks: grid = (batch*heads, T/chunk), the (K, V)
+state lives in a VMEM scratch that persists across the sequential chunk grid
+dimension, and each chunk is processed by an in-register time loop. HBM
+traffic is exactly one read of r/k/v/w and one write of out — the recurrence
+never re-touches HBM state.
+
+The matrix (intra-chunk attention) form trades this loop for MXU matmuls but
+requires exponent-difference stabilization of cumulative decays; it is the
+documented next optimization (EXPERIMENTS.md §Perf) — the sequential-in-chunk
+form is exact for all inputs, which is what the oracle tests require.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 out_ref, sfin_ref, state_scr, *, chunk: int, nchunks: int):
+    jt = pl.program_id(1)
+
+    @pl.when(jt == 0)
+    def _load_state():
+        state_scr[...] = s0_ref[0]
+
+    s = state_scr[...]                               # (K, V) f32
+    r = r_ref[0].astype(jnp.float32)                 # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)                 # (C, V)
+    w = w_ref[0].astype(jnp.float32)                 # (C, K)
+    u = u_ref[0].astype(jnp.float32)                 # (K,)
+
+    def body(i, carry):
+        s, out = carry
+        rt, kt, vt, wt = r[i], k[i], v[i], w[i]
+        kv = kt[:, None] * vt[None, :]               # (K, V)
+        o = rt @ (s + u[:, None] * kv)               # (V,)
+        out = out.at[i, :].set(o)
+        s = wt[:, None] * s + kv
+        return s, out
+
+    out0 = jnp.zeros(out_ref.shape[1:], jnp.float32)
+    s, out = jax.lax.fori_loop(0, chunk, body, (s, out0))
+    out_ref[0] = out.astype(out_ref.dtype)
+    state_scr[...] = s
+
+    @pl.when(jt == nchunks - 1)
+    def _store_state():
+        sfin_ref[0] = s
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, state: jax.Array, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 recurrence.
+
+    Shapes: r/k/w (B, T, H, K); v (B, T, H, V); u (H, K); state (B, H, K, V).
+    T must be a multiple of ``chunk`` (the layer pads).
+    Returns (out (B, T, H, V), final state (B, H, K, V)).
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    bh = b * h
+    nchunks = t // chunk
+
+    def fold(x, d):
+        return jnp.moveaxis(x, 2, 1).reshape(bh, t, d)
+
+    rf, kf, wf = fold(r, dk), fold(k, dk), fold(w, dk)
+    vf = fold(v, dv)
+    uf = jnp.tile(u, (b, 1))                          # (BH, K)
+    sf = state.reshape(bh, dk, dv)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, nchunks=nchunks)
+    out, sfin = pl.pallas_call(
+        kernel,
+        grid=(bh, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dk), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, sf)
+
+    out = jnp.moveaxis(out.reshape(b, h, t, dv), 1, 2)
+    return out, sfin.reshape(b, h, dk, dv)

@@ -1,0 +1,110 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes; collective traffic is NOT in
+there, so we parse the optimized HLO text and sum the result-buffer sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (the spec'd methodology). Hardware model: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- TPU v5e hardware constants (per chip) ----------------------------------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s/link
+HBM_BYTES = 16 * 2**30            # 16 GiB
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum buffer sizes of every typed shape in a (possibly tuple) string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type byte totals (+ op counts) from optimized HLO.
+
+    XLA CPU *promotes* bf16 reductions to f32 (``to_apply=%..._promoted`` with
+    a convert-fused operand); real TPUs reduce bf16 natively, so promoted
+    reduction bytes are counted at half width (the semantic payload).
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # op lines look like:  %x = bf16[..]{..} all-gather(...)  or
+        #                      %x = (f32[..], f32[..]) all-reduce(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        base = op.rstrip("0123456789.-")      # all-gather-start etc.
+        for kind in _COLLECTIVES:
+            if base == kind or base == kind + "-start" or op.startswith(kind):
+                nbytes = _shape_bytes(shape_str)
+                if "promoted" in stripped and "f32" in shape_str:
+                    nbytes //= 2              # CPU-promoted bf16 reduction
+                out[kind]["bytes"] += nbytes
+                out[kind]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   chips: int) -> Roofline:
+    """The three-term roofline (EXPERIMENTS.md §Roofline).
+
+    cost_analysis flops/bytes are whole-program (all partitions): divide by
+    chips for the per-chip rate. Collective bytes are summed over the
+    program's collective result buffers; each chip's link carries ~1/chips of
+    the total ring traffic per the spec's formula.
+    """
+    return Roofline(
+        compute_s=flops / (chips * PEAK_FLOPS_BF16),
+        memory_s=bytes_accessed / (chips * HBM_BW),
+        collective_s=coll_bytes / (chips * ICI_BW),
+        flops=flops, bytes_accessed=bytes_accessed, coll_bytes=coll_bytes,
+        chips=chips)

@@ -1,0 +1,43 @@
+"""Production mesh definition (DESIGN.md §5).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — only the dry-run
+process (which sets XLA_FLAGS first) materializes the 256/512-device mesh.
+
+Axis roles:
+  * ``pod``   — inter-pod data parallelism (2 pods = 512 chips)
+  * ``data``  — intra-pod DP + FSDP (ZeRO-3 param sharding)
+  * ``model`` — TP (heads/FFN), EP (experts), SP (long-context KV/sequence)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever devices exist on this host (tests, examples): a (data, model)
+    mesh with the requested model-axis width."""
+    n = len(jax.devices())
+    if n % model_axis:
+        raise ValueError(f"{n} devices not divisible by model={model_axis}")
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch/FSDP axes present in this mesh ('pod' included when there)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` returns the exact batch pytree each step consumes:
+train/prefill take token batches (+ stub frontend embeddings for vlm/audio);
+decode takes (B, 1) tokens plus the KV-cache/state spec sized to the cell's
+context length. ``state_specs`` mirrors init_train_state without allocating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelDef, get_model
+from repro.models.arch import ArchConfig, ShapeConfig
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import TrainConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Batch spec for one (arch x shape) cell."""
+    b = shape.global_batch
+    s = shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+    else:
+        if cfg.family == "vlm":
+            text = s - cfg.num_patches
+            batch = {
+                "tokens": _sds((b, text), jnp.int32),
+                "patch_embeds": _sds((b, cfg.num_patches, cfg.d_patch),
+                                     jnp.float32),
+            }
+        elif cfg.family == "audio":
+            batch = {
+                "tokens": _sds((b, s), jnp.int32),
+                "frames": _sds((b, cfg.num_frames, cfg.d_model), jnp.float32),
+            }
+        else:
+            batch = {"tokens": _sds((b, s), jnp.int32)}
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Decode-cache spec sized to the cell's context (eval_shape: no alloc)."""
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    model = get_model(cfg)
+    specs = jax.eval_shape(lambda k: model.init(k, cfg),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pd = jnp.dtype(cfg.param_dtype)
+
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, pd)
+        return x
+
+    return jax.tree.map(cast, specs)
+
+
+def opt_specs(params_spec, opt_cfg: AdamWConfig):
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_spec)
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))

@@ -1,0 +1,33 @@
+"""Model zoo registry: ArchConfig -> ModelDef dispatch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.models.arch import ArchConfig, ShapeConfig, SHAPES, LONG_CONTEXT_ARCHS  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Uniform interface every architecture implements."""
+    init: Callable[..., dict]
+    forward: Callable[..., tuple]        # (params, batch, cfg) -> (logits, aux)
+    init_cache: Callable[..., dict]      # (cfg, batch, max_seq) -> cache
+    prefill: Callable[..., tuple]        # (params, batch, cfg, cache)
+    decode_step: Callable[..., tuple]    # (params, tokens, cfg, cache)
+
+
+def get_model(cfg: ArchConfig) -> ModelDef:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as m
+    elif cfg.family == "ssm":
+        from repro.models import rwkv6 as m
+    elif cfg.family == "hybrid":
+        from repro.models import recurrentgemma as m
+    elif cfg.family == "audio":
+        from repro.models import whisper as m
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return ModelDef(init=m.init_params, forward=m.forward,
+                    init_cache=m.init_cache, prefill=m.prefill,
+                    decode_step=m.decode_step)

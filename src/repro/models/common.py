@@ -1,0 +1,372 @@
+"""Shared model building blocks (pure JAX, params = nested dicts of arrays).
+
+Conventions:
+  * ``init_*`` take a PRNG key and return a params pytree (fp32 by default —
+    the train step decides the compute dtype).
+  * forward functions take (params, x, cfg) and are shape-polymorphic over
+    batch/sequence.
+  * Attention supports GQA/MQA, rotary embeddings, three execution modes:
+    full (materialized scores), chunked (flash-style streaming softmax over
+    KV blocks — required for 32k+ contexts), and decode (single query
+    position against a cache).
+  * Sharding is NOT baked in here; the distributed layer applies
+    ``with_sharding_constraint`` via logical annotations (see
+    repro/distributed/sharding.py). Layers call ``maybe_shard`` hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch import ArchConfig
+
+Params = dict
+# annotation hook installed by the distributed layer; identity by default
+_SHARD_HOOK: list[Callable[[jax.Array, str], jax.Array]] = []
+
+
+def maybe_shard(x: jax.Array, logical: str) -> jax.Array:
+    """Apply the installed logical-sharding annotation hook (if any)."""
+    for hook in _SHARD_HOOK:
+        x = hook(x, logical)
+    return x
+
+
+def set_shard_hook(fn: Callable[[jax.Array, str], jax.Array] | None) -> None:
+    _SHARD_HOOK.clear()
+    if fn is not None:
+        _SHARD_HOOK.append(fn)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def grad_cast(x: jax.Array, dtype) -> jax.Array:
+    """Identity forward; casts the COTANGENT to ``dtype`` on the way back.
+
+    The fp32 loss head emits fp32 cotangents that ride the residual stream
+    through every layer's TP all-reduces at 2x the bytes (EXPERIMENTS.md
+    §Perf iteration 3b). A barrier per layer keeps backward activation
+    traffic in the compute dtype — the standard mixed-precision discipline.
+    """
+    return x
+
+
+def _grad_cast_fwd(x, dtype):
+    return x, None
+
+
+def _grad_cast_bwd(dtype, _, ct):
+    return (ct.astype(dtype),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, dim: int):
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return ((x32 * scale) * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.dot(x, w_gate.astype(x.dtype))
+    u = jnp.dot(x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = maybe_shard(h, "act_ff")
+    return jnp.dot(h, w_down.astype(x.dtype))
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up: jax.Array,
+             w_down: jax.Array, b_down: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.dot(x, w_up.astype(x.dtype)) + b_up.astype(x.dtype))
+    h = maybe_shard(h, "act_ff")
+    return jnp.dot(h, w_down.astype(x.dtype)) + b_down.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, hd/2)
+        ang = ang[None, :, None, :]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int = 0               # 0 = global; >0 = local (sliding) window
+    impl: str = "full"            # 'full' | 'chunked'
+    chunk: int = 1024
+
+
+def init_attention(key, d_model: int, spec: AttnSpec) -> Params:
+    ks = jax.random.split(key, 4)
+    hd = spec.head_dim
+    return {
+        "wq": dense_init(ks[0], d_model, spec.num_heads * hd),
+        "wk": dense_init(ks[1], d_model, spec.num_kv_heads * hd),
+        "wv": dense_init(ks[2], d_model, spec.num_kv_heads * hd),
+        "wo": dense_init(ks[3], spec.num_heads * hd, d_model),
+    }
+
+
+def _expand_kv(k: jax.Array, q_per_kv: int) -> jax.Array:
+    """(B, S, G, hd) -> (B, S, G*q_per_kv, hd) by repeat (GQA)."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int) -> jax.Array:
+    """additive bias (..., Sq, Sk) in fp32: 0 allowed / -inf masked."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_full(q, k, v, q_pos, k_pos, spec: AttnSpec):
+    """Materialized-scores attention. q (B,Sq,H,hd); k,v (B,Sk,G,hd)."""
+    k = _expand_kv(k, spec.num_heads // spec.num_kv_heads)
+    v = _expand_kv(v, spec.num_heads // spec.num_kv_heads)
+    scale = 1.0 / jnp.sqrt(spec.head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits += _mask_bias(q_pos, k_pos, spec.causal, spec.window)[None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_chunked(q, k, v, q_pos, k_pos, spec: AttnSpec):
+    """Flash-style streaming softmax over KV chunks (no Sq x Sk buffer).
+
+    Memory: O(Sq * chunk) per step instead of O(Sq * Sk). This is the XLA
+    formulation of the fused-attention schedule; the Pallas version would tile
+    the same loop into VMEM (DESIGN.md §6).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    c = min(spec.chunk, sk)
+    if sk % c:
+        raise ValueError(f"kv length {sk} not divisible by chunk {c}")
+    k = _expand_kv(k, spec.num_heads // spec.num_kv_heads)
+    v = _expand_kv(v, spec.num_heads // spec.num_kv_heads)
+    scale = 1.0 / jnp.sqrt(spec.head_dim).astype(jnp.float32)
+    kc = k.reshape(b, sk // c, c, h, hd)
+    vc = v.reshape(b, sk // c, c, h, hd)
+    kpc = k_pos.reshape(sk // c, c)
+
+    def step(carry, xs):
+        m, l, acc = carry                          # (B,H,Sq), (B,H,Sq), (B,H,Sq,hd)
+        kb, vb, kp = xs                            # (B,c,H,hd), (B,c,H,hd), (c,)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                            preferred_element_type=jnp.float32) * scale
+        logits += _mask_bias(q_pos, kp, spec.causal, spec.window)[None, None]
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # guard fully-masked rows (all -inf): keep m finite
+        m_new = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)     # (B,Sq,H,hd)
+
+
+def attention_decode(q, k_cache, v_cache, pos, spec: AttnSpec):
+    """Single-position decode. q (B,1,H,hd); caches (B,Smax,G,hd); pos (B,).
+
+    Masks cache slots >= pos+1 (and outside the local window when set).
+    The cache stays SEQUENCE-sharded end to end (constraints below): without
+    them GSPMD re-shards the expanded KV by heads, all-gathering the full
+    32k cache every layer (EXPERIMENTS.md §Perf iteration 4). Softmax over
+    the sharded S axis costs only O(B*H) reduction bytes.
+    """
+    b, _, h, hd = q.shape
+    smax = k_cache.shape[1]
+    k = _expand_kv(k_cache, spec.num_heads // spec.num_kv_heads)
+    v = _expand_kv(v_cache, spec.num_heads // spec.num_kv_heads)
+    k = maybe_shard(k, "kv_seq")
+    v = maybe_shard(v, "kv_seq")
+    scale = 1.0 / jnp.sqrt(spec.head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = maybe_shard(logits, "decode_scores")
+    kpos = jnp.arange(smax)
+    ok = kpos[None, :] <= pos[:, None]
+    if spec.window > 0:
+        ok &= (pos[:, None] - kpos[None, :]) < spec.window
+    logits = jnp.where(ok[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    probs = maybe_shard(probs, "decode_scores")
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_forward(params: Params, x: jax.Array, positions: jax.Array,
+                      spec: AttnSpec, rope_theta: float = 10000.0,
+                      kv_override: tuple | None = None) -> jax.Array:
+    """Self-attention over a full sequence (train/prefill).
+
+    ``kv_override`` supplies external (k, v, k_pos) for cross-attention.
+    """
+    b, s, _ = x.shape
+    hd = spec.head_dim
+    q = jnp.dot(x, params["wq"].astype(x.dtype)).reshape(b, s, spec.num_heads, hd)
+    if kv_override is None:
+        k = jnp.dot(x, params["wk"].astype(x.dtype)).reshape(b, s, spec.num_kv_heads, hd)
+        v = jnp.dot(x, params["wv"].astype(x.dtype)).reshape(b, s, spec.num_kv_heads, hd)
+        if rope_theta > 0:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        k_pos = positions
+    else:
+        k, v, k_pos = kv_override
+    q = maybe_shard(q, "act_heads")
+    impl = spec.impl
+    if impl != "full" and k.shape[1] % min(spec.chunk, k.shape[1]):
+        impl = "full"                 # ragged KV (e.g. 1500-frame memory)
+    if impl == "full":
+        out = attention_full(q, k, v, positions, k_pos, spec)
+    else:
+        out = attention_chunked(q, k, v, positions, k_pos, spec)
+    out = out.reshape(b, s, spec.num_heads * hd)
+    return jnp.dot(out, params["wo"].astype(x.dtype))
+
+
+def project_kv(params: Params, x: jax.Array, positions: jax.Array,
+               spec: AttnSpec, rope_theta: float) -> tuple[jax.Array, jax.Array]:
+    """K/V projections only (used to fill caches / cross-attention memory)."""
+    b, s, _ = x.shape
+    hd = spec.head_dim
+    k = jnp.dot(x, params["wk"].astype(x.dtype)).reshape(b, s, spec.num_kv_heads, hd)
+    v = jnp.dot(x, params["wv"].astype(x.dtype)).reshape(b, s, spec.num_kv_heads, hd)
+    if rope_theta > 0:
+        k = apply_rope(k, positions, rope_theta)
+    return k, v
+
+
+def attention_decode_step(params: Params, x: jax.Array, cache_k, cache_v,
+                          pos, spec: AttnSpec, rope_theta: float = 10000.0,
+                          update_cache: bool = True):
+    """One decode step. x (B,1,d); caches (B,Smax,G,hd); pos (B,) current index.
+
+    Returns (out (B,1,d), new_k, new_v).
+    """
+    b = x.shape[0]
+    hd = spec.head_dim
+    q = jnp.dot(x, params["wq"].astype(x.dtype)).reshape(b, 1, spec.num_heads, hd)
+    if rope_theta > 0:
+        q = apply_rope(q, pos[:, None], rope_theta)
+    if update_cache:
+        k_new = jnp.dot(x, params["wk"].astype(x.dtype)).reshape(b, 1, spec.num_kv_heads, hd)
+        v_new = jnp.dot(x, params["wv"].astype(x.dtype)).reshape(b, 1, spec.num_kv_heads, hd)
+        if rope_theta > 0:
+            k_new = apply_rope(k_new, pos[:, None], rope_theta)
+        # Lockstep decode (all slots share one step counter — the serving
+        # engine prefills per wave, so positions are batch-uniform): a scalar
+        # dynamic_update_slice lets GSPMD mask-update the owning shard of the
+        # sequence-sharded cache instead of replicating it for a batched
+        # scatter (EXPERIMENTS.md §Perf iteration 4: 16x less decode
+        # collective traffic on llama3-405b).
+        slot = pos[0] if spec.window <= 0 else pos[0] % cache_k.shape[1]
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+    if spec.window > 0:
+        # ring buffer: reconstruct absolute positions of slots
+        smax = cache_k.shape[1]
+        slots = jnp.arange(smax)
+        # absolute position of slot s given current pos p (ring of size smax):
+        # latest write at p%smax; slot holds p - ((p%smax - s) mod smax)
+        abs_pos = pos[:, None] - ((pos[:, None] % smax - slots[None, :]) % smax)
+        logits_ok = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+        out = _ring_decode(q, cache_k, cache_v, logits_ok, spec)
+    else:
+        out = attention_decode(q, cache_k, cache_v, pos, spec)
+    out = out.reshape(b, 1, spec.num_heads * hd)
+    return jnp.dot(out, params["wo"].astype(x.dtype)), cache_k, cache_v
+
+
+def _ring_decode(q, k_cache, v_cache, ok, spec: AttnSpec):
+    k = _expand_kv(k_cache, spec.num_heads // spec.num_kv_heads)
+    v = _expand_kv(v_cache, spec.num_heads // spec.num_kv_heads)
+    scale = 1.0 / jnp.sqrt(spec.head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(ok[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def resolve_attn_impl(cfg: ArchConfig, seq_len: int) -> str:
+    if cfg.attention_impl != "auto":
+        return cfg.attention_impl
+    return "chunked" if seq_len > 2048 else "full"

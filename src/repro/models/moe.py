@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN (GShard/Switch style, sort-based dispatch).
+
+Used by granite-moe-1b-a400m (32e top-8) and moonshot-v1-16b-a3b (64e top-6).
+
+Dispatch is the sort-based formulation (the one MaxText uses): flatten
+(token, expert) assignments, sort by expert, capacity-truncate, run all
+experts as one stacked einsum, combine with router weights. Under GSPMD with
+experts sharded on the "model"/expert axis and tokens on "data", the
+dispatch/combine gathers lower to all-to-all collectives — the EP pattern the
+roofline tracks.
+
+Capacity per expert is static: C = ceil(T * k / E * capacity_factor); tokens
+beyond capacity are dropped (standard Switch behaviour), which keeps every
+shape static for XLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch import ArchConfig
+from repro.models.common import dense_init, maybe_shard
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    e, d, ff = cfg.num_experts, cfg.d_model, cfg.d_ff
+
+    def stack(k, shape, scale):
+        return jax.random.normal(k, (e, *shape), jnp.float32) * scale
+
+    return {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        "w_gate": stack(ks[1], (d, ff), 1.0 / jnp.sqrt(d)),
+        "w_up": stack(ks[2], (d, ff), 1.0 / jnp.sqrt(d)),
+        "w_down": stack(ks[3], (ff, d), 1.0 / jnp.sqrt(ff)),
+    }
+
+
+def moe_capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def _dispatch_one_group(xt, probs, cfg: ArchConfig, cap: int):
+    """Sort-based dispatch for ONE token group (a batch row).
+
+    xt (T, d); probs (T, E) fp32. Returns (disp (E, C, d), stok, slot, sw,
+    keep) for the combine step. All indices are group-local, so under GSPMD
+    the vmapped scatter/gather shards on the batch axis with NO collective —
+    this is the group-local dispatch that replaced the global-sort dispatch
+    (EXPERIMENTS.md §Perf iteration 1: the global scatter forced XLA to
+    replicate + all-reduce the full (E*C, d) buffer).
+    """
+    t, d = xt.shape
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    top_w, top_e = jax.lax.top_k(probs, k)                        # (T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(t * k)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+    se, stok, sw = flat_e[order], flat_t[order], flat_w[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)          # drop slot
+
+    disp = jnp.zeros((e * cap + 1, d), xt.dtype)
+    disp = disp.at[slot].add(xt[stok] * keep[:, None].astype(xt.dtype))
+    return disp[:-1].reshape(e, cap, d), stok, slot, sw, keep
+
+
+def moe_forward(params: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out (B, S, d), aux load-balancing loss ()).
+
+    Dispatch is **group-local per batch row** (sequence-level capacity):
+    routing, sort and scatter are vmapped over B, so they shard cleanly on
+    the data axes; only the expert einsum touches the expert(model)-sharded
+    weights. Capacity: C = ceil(S * k / E * capacity_factor) per sequence.
+    """
+    b, s, d = x.shape
+    e = cfg.num_experts
+    cap = moe_capacity(cfg, s)
+
+    # --- routing (fp32) ------------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Switch load-balancing auxiliary loss (global over the batch)
+    me = jnp.mean(probs, axis=(0, 1))                             # (E,)
+    top1 = jnp.argmax(probs, axis=-1)
+    ce = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    disp, stok, slot, sw, keep = jax.vmap(
+        lambda xt, pr: _dispatch_one_group(xt, pr, cfg, cap))(x, probs)
+    disp = maybe_shard(disp, "moe_dispatch")                      # (B, E, C, d)
+
+    # --- stacked expert FFN (SwiGLU); E sharded on model (EP) -----------------
+    g = jnp.einsum("becd,edf->becf", disp, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", disp, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = maybe_shard(h, "moe_hidden")
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(x.dtype))
+    out_buf = out_buf.reshape(b, e * cap, d)
+
+    # --- combine (vmapped gather/scatter, group-local) ------------------------
+    def combine(buf, stok_g, slot_g, sw_g, keep_g):
+        contrib = buf[jnp.minimum(slot_g, e * cap - 1)]
+        contrib = contrib * (sw_g * keep_g).astype(buf.dtype)[:, None]
+        return jnp.zeros((s, d), buf.dtype).at[stok_g].add(contrib)
+
+    y = jax.vmap(combine)(out_buf, stok, slot, sw, keep)
+    return y, aux

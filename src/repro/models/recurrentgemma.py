@@ -1,0 +1,266 @@
+"""RecurrentGemma-2B (Griffin, arXiv:2402.19427): RG-LRU + local attention.
+
+26 layers in a repeating (recurrent, recurrent, attention) pattern (the 1:2
+attention:recurrent ratio of the assignment). Blocks:
+
+* **recurrent**: RMSNorm -> [x-branch: linear -> causal conv1d(4) -> RG-LRU]
+  gated by [gate branch: linear -> GeLU] -> output linear -> residual.
+  RG-LRU: a_t = a^(c * sigmoid(r_t)) with a = sigmoid(Lambda) (per channel),
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t).
+* **attention**: local sliding-window (2048) MQA (kv=1) with rope.
+* every block is followed by RMSNorm -> GeGLU MLP -> residual.
+
+Because the pattern is heterogeneous, layers are a Python loop (26 unrolled
+layers keep the HLO small enough). Decode state: ring KV for attention
+layers, (conv tail, h) for recurrent layers — O(window + d_rnn), which is why
+this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.arch import ArchConfig
+
+_LRU_C = 8.0
+
+
+def _pattern(cfg: ArchConfig) -> tuple[str, ...]:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    reps = -(-cfg.num_layers // len(pat))
+    return (pat * reps)[: cfg.num_layers]
+
+
+def _d_rnn(cfg: ArchConfig) -> int:
+    return cfg.d_rnn or cfg.d_model
+
+
+def _attn_spec(cfg: ArchConfig, seq_len: int) -> C.AttnSpec:
+    return C.AttnSpec(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                      head_dim=cfg.resolved_head_dim, causal=True,
+                      window=cfg.window,
+                      impl=C.resolve_attn_impl(cfg, seq_len),
+                      chunk=cfg.attention_chunk)
+
+
+def init_layer(key, kind: str, cfg: ArchConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    rnn = _d_rnn(cfg)
+    ks = jax.random.split(key, 8)
+    p: dict = {
+        "ln_mix": jnp.zeros((d,), jnp.float32),
+        "ln_mlp": jnp.zeros((d,), jnp.float32),
+        "mlp": {
+            "w_gate": C.dense_init(ks[0], d, ff),
+            "w_up": C.dense_init(ks[1], d, ff),
+            "w_down": C.dense_init(ks[2], ff, d),
+        },
+    }
+    if kind == "attn":
+        p["attn"] = C.init_attention(ks[3], d, _attn_spec(cfg, 1))
+    else:
+        p["rec"] = {
+            "w_x": C.dense_init(ks[3], d, rnn),
+            "w_gate": C.dense_init(ks[4], d, rnn),
+            "conv_w": jax.random.normal(ks[5], (cfg.conv_width, rnn),
+                                        jnp.float32) * 0.1,
+            "conv_b": jnp.zeros((rnn,), jnp.float32),
+            "lambda": jnp.ones((rnn,), jnp.float32) * 2.0,   # sigmoid -> a ~ .88
+            "w_input_gate": C.dense_init(ks[6], rnn, rnn, scale=0.01),
+            "b_input_gate": jnp.zeros((rnn,), jnp.float32),
+            "w_rec_gate": C.dense_init(ks[7], rnn, rnn, scale=0.01),
+            "b_rec_gate": jnp.zeros((rnn,), jnp.float32),
+            "w_out": C.dense_init(jax.random.fold_in(key, 99), rnn, d),
+        }
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = [init_layer(layer_keys[i], kind, cfg)
+              for i, kind in enumerate(_pattern(cfg))]
+    return {
+        "embed": C.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "ln_final": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": C.dense_init(k_head, cfg.d_model, cfg.vocab_size, scale=0.02),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None):
+    """Depthwise causal conv. x (B,T,rnn); w (W,rnn); tail (B,W-1,rnn) carry.
+
+    Returns (y, new tail). Width is small (4): computed as shifted adds.
+    """
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xfull = jnp.concatenate([tail, x], axis=1)       # (B, T+W-1, rnn)
+    y = jnp.zeros_like(x)
+    t = x.shape[1]
+    for j in range(width):
+        y = y + xfull[:, j:j + t] * w[width - 1 - j].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    return y, xfull[:, -(width - 1):] if width > 1 else tail
+
+
+def _rg_lru(rec: dict, x: jax.Array, h0: jax.Array):
+    """x (B,T,rnn) post-conv; h0 (B,rnn) carried state. Returns (y, hT)."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ rec["w_rec_gate"] + rec["b_rec_gate"])
+    i = jax.nn.sigmoid(x32 @ rec["w_input_gate"] + rec["b_input_gate"])
+    log_a_base = jax.nn.log_sigmoid(rec["lambda"])          # (rnn,) < 0
+    log_a = _LRU_C * r * log_a_base[None, None, :]          # (B,T,rnn)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * x32)
+
+    def step(h, xs):
+        a_t, g_t = xs
+        h = a_t * h + g_t
+        return h, h
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT
+
+
+def _rec_block(rec: dict, x: jax.Array, conv_tail, h0):
+    """Full recurrent temporal-mix branch. Returns (out, new conv tail, hT)."""
+    xb = jnp.dot(x, rec["w_x"].astype(x.dtype))
+    gate = jax.nn.gelu(jnp.dot(x, rec["w_gate"].astype(x.dtype)))
+    xb, conv_tail = _causal_conv(xb, rec["conv_w"], rec["conv_b"], conv_tail)
+    y, hT = _rg_lru(rec, xb, h0)
+    out = jnp.dot(y * gate, rec["w_out"].astype(x.dtype))
+    return out, conv_tail, hT
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, batch: dict, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(dtype)[tokens] * jnp.sqrt(cfg.d_model).astype(dtype)
+    positions = jnp.arange(s)
+    spec = _attn_spec(cfg, s)
+    rnn = _d_rnn(cfg)
+
+    for p, kind in zip(params["blocks"], _pattern(cfg)):
+        def blk(x, p=p, kind=kind):
+            h = C.rms_norm(x, p["ln_mix"], cfg.norm_eps)
+            if kind == "attn":
+                mix = C.attention_forward(p["attn"], h, positions, spec,
+                                          cfg.rope_theta)
+            else:
+                h0 = jnp.zeros((b, rnn), jnp.float32)
+                mix, _, _ = _rec_block(p["rec"], h, None, h0)
+            x = x + mix
+            h = C.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+            return x + C.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                                p["mlp"]["w_down"])
+        x = jax.checkpoint(blk)(x) if cfg.remat else blk(x)
+        x = C.maybe_shard(x, "act_btd")
+
+    x = C.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    rnn = _d_rnn(cfg)
+    window = min(cfg.window or max_seq, max_seq)
+    cache: dict = {"pos": jnp.zeros((batch_size,), jnp.int32), "layers": []}
+    for kind in _pattern(cfg):
+        if kind == "attn":
+            cache["layers"].append({
+                "k": jnp.zeros((batch_size, window, cfg.num_kv_heads,
+                                cfg.resolved_head_dim), dtype),
+                "v": jnp.zeros((batch_size, window, cfg.num_kv_heads,
+                                cfg.resolved_head_dim), dtype),
+            })
+        else:
+            cache["layers"].append({
+                "conv": jnp.zeros((batch_size, cfg.conv_width - 1, rnn), dtype),
+                "h": jnp.zeros((batch_size, rnn), jnp.float32),
+            })
+    return cache
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(dtype)[tokens] * jnp.sqrt(cfg.d_model).astype(dtype)
+    positions = jnp.arange(s)
+    spec = _attn_spec(cfg, s)
+    rnn = _d_rnn(cfg)
+    new_layers = []
+
+    for p, kind, lc in zip(params["blocks"], _pattern(cfg), cache["layers"]):
+        h = C.rms_norm(x, p["ln_mix"], cfg.norm_eps)
+        if kind == "attn":
+            k, v = C.project_kv(p["attn"], h, positions, spec, cfg.rope_theta)
+            mix = C.attention_forward(p["attn"], h, positions, spec,
+                                      cfg.rope_theta)
+            win = lc["k"].shape[1]
+            keep = min(win, s)
+            nk = lc["k"].at[:, :keep].set(k[:, -keep:].astype(lc["k"].dtype))
+            nv = lc["v"].at[:, :keep].set(v[:, -keep:].astype(lc["v"].dtype))
+            new_layers.append({"k": nk, "v": nv})
+        else:
+            h0 = jnp.zeros((b, rnn), jnp.float32)
+            mix, tail, hT = _rec_block(p["rec"], h, None, h0)
+            new_layers.append({"conv": tail.astype(lc["conv"].dtype), "h": hT})
+        x = x + mix
+        h = C.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        x = x + C.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                         p["mlp"]["w_down"])
+
+    x = C.rms_norm(x[:, -1:], params["ln_final"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(dtype),
+                     preferred_element_type=jnp.float32)
+    # NOTE: ring-buffer decode assumes slot = pos % window; prefill wrote the
+    # last `keep` positions at slots [0, keep) which matches pos % window only
+    # when s % window == 0 or s <= window. serve drivers use s <= window
+    # prompts or align; documented simplification.
+    return logits, {"pos": jnp.full((b,), s, jnp.int32), "layers": new_layers}
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ArchConfig, cache: dict):
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    x = params["embed"].astype(dtype)[tokens] * jnp.sqrt(cfg.d_model).astype(dtype)
+    pos = cache["pos"]
+    spec = _attn_spec(cfg, 1)
+    new_layers = []
+
+    for p, kind, lc in zip(params["blocks"], _pattern(cfg), cache["layers"]):
+        h = C.rms_norm(x, p["ln_mix"], cfg.norm_eps)
+        if kind == "attn":
+            mix, nk, nv = C.attention_decode_step(
+                p["attn"], h, lc["k"], lc["v"], pos, spec, cfg.rope_theta)
+            new_layers.append({"k": nk, "v": nv})
+        else:
+            mix, tail, hT = _rec_block(p["rec"], h, lc["conv"].astype(h.dtype),
+                                       lc["h"])
+            new_layers.append({"conv": tail.astype(lc["conv"].dtype), "h": hT})
+        x = x + mix
+        h = C.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        x = x + C.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                         p["mlp"]["w_down"])
+
+    x = C.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, {"pos": pos + 1, "layers": new_layers}

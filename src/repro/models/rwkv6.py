@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch" (rwkv6-7b): attention-free LM with data-dependent decay.
+
+Per layer: a **time-mix** block (token-shift lerps, r/k/v/g projections, the
+data-dependent per-channel decay ``w = exp(-exp(w0 + tanh(x A) B))``, the WKV
+recurrence with bonus ``u``, grouped-head output norm, silu(g) gating) and a
+**channel-mix** block (squared-relu FFN gated by sigmoid(r)). This follows
+arXiv:2404.05892; the data-dependent token-shift LoRA ("ddlerp") is
+simplified to static lerp coefficients (noted in DESIGN.md — it does not
+change the compute/memory shape of the recurrence, which is what the
+roofline sees).
+
+The WKV recurrence runs as a jnp ``lax.scan`` (XLA path, used by dry-run) or
+the Pallas chunked kernel (kernels/wkv6.py) when ``use_kernel=True``. Decode
+carries O(1) state per layer — this is why rwkv6-7b runs the ``long_500k``
+shape that dense-attention archs must skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import wkv6_ref
+from repro.kernels.wkv6 import wkv6 as wkv6_kernel
+from repro.models import common as C
+from repro.models.arch import ArchConfig
+
+_DECAY_LORA = 64
+
+
+def _heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_size
+
+
+def init_layer(key, cfg: ArchConfig) -> dict:
+    d, ff, hs = cfg.d_model, cfg.d_ff, cfg.rwkv_head_size
+    h = _heads(cfg)
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1_w": jnp.ones((d,), jnp.float32), "ln1_b": jnp.zeros((d,), jnp.float32),
+        "ln2_w": jnp.ones((d,), jnp.float32), "ln2_b": jnp.zeros((d,), jnp.float32),
+        "tm": {
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "mu_k": jnp.full((d,), 0.5, jnp.float32),
+            "mu_v": jnp.full((d,), 0.5, jnp.float32),
+            "mu_w": jnp.full((d,), 0.5, jnp.float32),
+            "mu_g": jnp.full((d,), 0.5, jnp.float32),
+            "w_r": C.dense_init(ks[0], d, d),
+            "w_k": C.dense_init(ks[1], d, d),
+            "w_v": C.dense_init(ks[2], d, d),
+            "w_g": C.dense_init(ks[3], d, d),
+            "w_o": C.dense_init(ks[4], d, d),
+            "w0": jnp.zeros((d,), jnp.float32) - 0.6,   # decay bias
+            "w_lora_a": C.dense_init(ks[5], d, _DECAY_LORA, scale=0.01),
+            "w_lora_b": C.dense_init(ks[6], _DECAY_LORA, d, scale=0.01),
+            "u": jax.random.normal(ks[7], (h, hs), jnp.float32) * 0.1,
+            "gn_w": jnp.ones((d,), jnp.float32),
+            "gn_b": jnp.zeros((d,), jnp.float32),
+        },
+        "cm": {
+            "mu_k": jnp.full((d,), 0.5, jnp.float32),
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "w_k": C.dense_init(ks[8], d, ff),
+            "w_v": C.dense_init(ks[9], ff, d),
+            "w_r": C.dense_init(ks[10], d, d),
+        },
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.num_layers)
+    return {
+        "embed": C.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        "ln0_w": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln0_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "blocks": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "lnf_w": jnp.ones((cfg.d_model,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": C.dense_init(k_head, cfg.d_model, cfg.vocab_size, scale=0.02),
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _decay(tm: dict, xw: jax.Array) -> jax.Array:
+    """data-dependent decay in (0,1): exp(-exp(w0 + tanh(x A) B))."""
+    lora = jnp.dot(jnp.tanh(jnp.dot(xw.astype(jnp.float32), tm["w_lora_a"])),
+                   tm["w_lora_b"])
+    return jnp.exp(-jnp.exp(tm["w0"] + lora))
+
+
+def _group_norm(x: jax.Array, w, b, heads: int, eps: float = 1e-5):
+    """Per-head LayerNorm over the head channel (RWKV's GroupNorm)."""
+    b_, t, d = x.shape
+    xh = x.reshape(b_, t, heads, d // heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b_, t, d) * w + b).astype(x.dtype)
+
+
+def time_mix(tm: dict, x: jax.Array, x_prev: jax.Array, state: jax.Array,
+             cfg: ArchConfig, use_kernel: bool = False):
+    """x (B,T,d); x_prev (B,d) token before the window; state (B,H,K,V).
+
+    Returns (out (B,T,d), last x (B,d), new state).
+    """
+    bsz, t, d = x.shape
+    h, hs = _heads(cfg), cfg.rwkv_head_size
+    xs = jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    r = jnp.dot(_lerp(x, xs, tm["mu_r"]), tm["w_r"].astype(x.dtype))
+    k = jnp.dot(_lerp(x, xs, tm["mu_k"]), tm["w_k"].astype(x.dtype))
+    v = jnp.dot(_lerp(x, xs, tm["mu_v"]), tm["w_v"].astype(x.dtype))
+    g = jnp.dot(_lerp(x, xs, tm["mu_g"]), tm["w_g"].astype(x.dtype))
+    w = _decay(tm, _lerp(x, xs, tm["mu_w"]))
+
+    rh = r.reshape(bsz, t, h, hs).astype(jnp.float32)
+    kh = k.reshape(bsz, t, h, hs).astype(jnp.float32)
+    vh = v.reshape(bsz, t, h, hs).astype(jnp.float32)
+    wh = w.reshape(bsz, t, h, hs)
+    fn = wkv6_kernel if use_kernel else wkv6_ref
+    out, state = fn(rh, kh, vh, wh, tm["u"], state)
+    out = out.reshape(bsz, t, d).astype(x.dtype)
+    out = _group_norm(out, tm["gn_w"], tm["gn_b"], h)
+    out = out * jax.nn.silu(g)
+    return jnp.dot(out, tm["w_o"].astype(x.dtype)), x[:, -1], state
+
+
+def channel_mix(cm: dict, x: jax.Array, x_prev: jax.Array):
+    xs = jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    xk = _lerp(x, xs, cm["mu_k"])
+    xr = _lerp(x, xs, cm["mu_r"])
+    k = jnp.square(jax.nn.relu(jnp.dot(xk, cm["w_k"].astype(x.dtype))))
+    k = C.maybe_shard(k, "act_ff")
+    kv = jnp.dot(k, cm["w_v"].astype(x.dtype))
+    return jax.nn.sigmoid(jnp.dot(xr, cm["w_r"].astype(x.dtype))) * kv, x[:, -1]
+
+
+def _layer(p: dict, x, tm_x, cm_x, wkv_state, cfg: ArchConfig,
+           use_kernel: bool = False):
+    h = C.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    out, tm_x, wkv_state = time_mix(p["tm"], h, tm_x, wkv_state, cfg, use_kernel)
+    x = x + out
+    h = C.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    out, cm_x = channel_mix(p["cm"], h, cm_x)
+    return x + out, tm_x, cm_x, wkv_state
+
+
+# ---------------------------------------------------------------------------
+# public API (mirrors transformer.py)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int, dtype=None):
+    h, hs = _heads(cfg), cfg.rwkv_head_size
+    sh = (cfg.num_layers, batch_size)
+    return {
+        "tm_x": jnp.zeros((*sh, cfg.d_model), jnp.float32),
+        "cm_x": jnp.zeros((*sh, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((*sh, h, hs, hs), jnp.float32),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def _embed(params, tokens, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    return C.layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+
+
+def _run(params: dict, x: jax.Array, cache: dict, cfg: ArchConfig,
+         use_kernel: bool = False):
+    """Shared scan over layers for train/prefill/decode."""
+    def layer(x, xs):
+        p, tm_x, cm_x, st = xs
+        x, tm_x, cm_x, st = _layer(p, x, tm_x, cm_x, st, cfg, use_kernel)
+        x = C.maybe_shard(x, "act_btd")
+        return x, (tm_x, cm_x, st)
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    xs_all = (params["blocks"], cache["tm_x"], cache["cm_x"], cache["wkv"])
+    if cfg.scan_layers:
+        x, (tm_x, cm_x, st) = jax.lax.scan(layer, x, xs_all)
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            x, ys = layer(x, jax.tree.map(lambda a: a[i], xs_all))
+            outs.append(ys)
+        tm_x = jnp.stack([o[0] for o in outs])
+        cm_x = jnp.stack([o[1] for o in outs])
+        st = jnp.stack([o[2] for o in outs])
+    return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": st, "pos": cache["pos"]}
+
+
+def forward(params: dict, batch: dict, cfg: ArchConfig):
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg)
+    cache = init_cache(cfg, tokens.shape[0], 0)
+    x, _ = _run(params, x, cache, cfg)
+    x = C.layer_norm(x, params["lnf_w"], params["lnf_b"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
+    x = _embed(params, batch["tokens"], cfg)
+    x, cache = _run(params, x, cache, cfg)
+    x = C.layer_norm(x[:, -1:], params["lnf_w"], params["lnf_b"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    cache["pos"] = jnp.full((batch["tokens"].shape[0],),
+                            batch["tokens"].shape[1], jnp.int32)
+    return logits, cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ArchConfig, cache: dict):
+    x = _embed(params, tokens, cfg)
+    pos = cache["pos"]
+    x, cache = _run(params, x, cache, cfg)
+    x = C.layer_norm(x, params["lnf_w"], params["lnf_b"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    cache["pos"] = pos + 1
+    return logits, cache

@@ -1,0 +1,245 @@
+"""Decoder-only transformer family: dense / GQA / MQA / MoE (+ VLM wrapper).
+
+Covers: codeqwen1.5-7b, granite-34b, llama3-405b, minicpm-2b (dense),
+granite-moe-1b-a400m, moonshot-v1-16b-a3b (moe), phi-3-vision backbone (vlm).
+
+Structure per block (llama-style): RMSNorm -> attention (rotary, GQA) ->
+residual; RMSNorm -> SwiGLU MLP or MoE -> residual. Layers run under
+``lax.scan`` over stacked params (keeps the dry-run HLO size O(1) in depth)
+with optional ``jax.checkpoint`` remat per layer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.arch import ArchConfig
+from repro.models.moe import init_moe, moe_forward
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg: ArchConfig, seq_len: int, window: int = 0) -> C.AttnSpec:
+    return C.AttnSpec(
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, causal=True, window=window,
+        impl=C.resolve_attn_impl(cfg, seq_len), chunk=cfg.attention_chunk)
+
+
+def init_block(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    spec = _attn_spec(cfg, 1)
+    p = {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": C.init_attention(ks[0], cfg.d_model, spec),
+        "ln_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.num_experts:
+        p["moe"] = init_moe(ks[1], cfg)
+    elif cfg.mlp_type == "gelu":
+        ku, kd = jax.random.split(ks[1], 2)
+        p["mlp"] = {
+            "w_up": C.dense_init(ku, cfg.d_model, cfg.d_ff),
+            "b_up": jnp.zeros((cfg.d_ff,), jnp.float32),
+            "w_down": C.dense_init(kd, cfg.d_ff, cfg.d_model),
+            "b_down": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    else:
+        kg, ku, kd = jax.random.split(ks[1], 3)
+        p["mlp"] = {
+            "w_gate": C.dense_init(kg, cfg.d_model, cfg.d_ff),
+            "w_up": C.dense_init(ku, cfg.d_model, cfg.d_ff),
+            "w_down": C.dense_init(kd, cfg.d_ff, cfg.d_model),
+        }
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    k_embed, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    params = {
+        "embed": C.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,                       # stacked: leading dim L
+        "ln_final": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": C.dense_init(k_head, cfg.d_model, cfg.vocab_size, scale=0.02),
+    }
+    if cfg.family == "vlm":
+        params["patch_proj"] = C.dense_init(k_extra, cfg.d_patch, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block forward (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(p: dict, x: jax.Array, positions: jax.Array, cfg: ArchConfig,
+               spec: C.AttnSpec):
+    h = C.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    x = x + C.attention_forward(p["attn"], h, positions, spec, cfg.rope_theta)
+    h = C.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.num_experts:
+        y, aux = moe_forward(p["moe"], h, cfg)
+    else:
+        y = _mlp(p["mlp"], h, cfg)
+        aux = jnp.float32(0.0)
+    return x + y, aux
+
+
+def _mlp(mp: dict, h, cfg: ArchConfig):
+    if cfg.mlp_type == "gelu":
+        return C.gelu_mlp(h, mp["w_up"], mp["b_up"], mp["w_down"], mp["b_down"])
+    return C.swiglu(h, mp["w_gate"], mp["w_up"], mp["w_down"])
+
+
+def embed_inputs(params: dict, batch: dict, cfg: ArchConfig,
+                 dtype) -> jax.Array:
+    """Token embeddings; VLM prepends projected patch embeddings (stub
+    frontend supplies ``patch_embeds`` (B, P, d_patch))."""
+    x = params["embed"].astype(dtype)[batch["tokens"]]
+    x = x * jnp.sqrt(cfg.d_model).astype(dtype)
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(dtype)
+        proj = jnp.dot(patches, params["patch_proj"].astype(dtype))
+        x = jnp.concatenate([proj, x], axis=1)
+    return x
+
+
+def forward(params: dict, batch: dict, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits (B, S_total, V), aux loss)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_inputs(params, batch, cfg, dtype)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    spec = _attn_spec(cfg, s, window=cfg.window)
+    x = C.maybe_shard(x, "act_btd")
+
+    def layer(x, p):
+        x = C.grad_cast(x, dtype)           # bf16 backward residual traffic
+        y, aux = _block_fwd(p, x, positions, cfg, spec)
+        y = C.maybe_shard(y, "act_btd")
+        return y, aux
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(lambda c, p: layer(c, p), x, params["blocks"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, a = layer(x, p)
+            aux = aux + a
+
+    x = C.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
+               dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    smax = min(max_seq, cfg.window) if cfg.window else max_seq
+    shape = (cfg.num_layers, batch_size, smax, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
+    """Run the full prompt, fill the cache, return (last-position logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_inputs(params, batch, cfg, dtype)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    spec = _attn_spec(cfg, s, window=cfg.window)
+    x = C.maybe_shard(x, "act_btd")
+
+    def layer(x, p):
+        h = C.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        k, v = C.project_kv(p["attn"], h, positions, spec, cfg.rope_theta)
+        x, _ = _block_fwd(p, x, positions, cfg, spec)
+        x = C.maybe_shard(x, "act_btd")
+        return x, (k, v)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(layer, x, params["blocks"])
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, kv = layer(x, p)
+            outs.append(kv)
+        ks = jnp.stack([o[0] for o in outs])
+        vs = jnp.stack([o[1] for o in outs])
+    x = C.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.dot(x[:, -1:], params["lm_head"].astype(dtype),
+                     preferred_element_type=jnp.float32)
+    smax = cache["k"].shape[2]
+    if cfg.window and s > smax:                      # keep last window only
+        ks, vs = ks[:, :, -smax:], vs[:, :, -smax:]
+        write = smax
+    else:
+        write = min(s, smax)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], ks[:, :, -write:].astype(cache["k"].dtype), (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], vs[:, :, -write:].astype(cache["v"].dtype), (0, 0, 0, 0, 0)),
+        "pos": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ArchConfig, cache: dict):
+    """One token step. tokens (B, 1). Returns (logits (B, 1, V), new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    x = params["embed"].astype(dtype)[tokens] * jnp.sqrt(cfg.d_model).astype(dtype)
+    pos = cache["pos"]
+    spec = _attn_spec(cfg, 1, window=cfg.window)
+
+    def layer(x, xs):
+        p, ck, cv = xs
+        h = C.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        att, ck, cv = C.attention_decode_step(
+            p["attn"], h, ck, cv, pos, spec, cfg.rope_theta)
+        x = x + att
+        h = C.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        if cfg.num_experts:
+            y, _ = moe_forward(p["moe"], h, cfg)
+        else:
+            y = _mlp(p["mlp"], h, cfg)
+        return x + y, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(
+            layer, x, (params["blocks"], cache["k"], cache["v"]))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            xs_i = jax.tree.map(lambda a: a[i],
+                                (params["blocks"], cache["k"], cache["v"]))
+            x, kv = layer(x, xs_i)
+            outs.append(kv)
+        ks = jnp.stack([o[0] for o in outs])
+        vs = jnp.stack([o[1] for o in outs])
+    x = C.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"].astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

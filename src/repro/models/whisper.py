@@ -1,0 +1,269 @@
+"""Whisper-large-v3 backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The conv1d audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, num_frames=1500, d_model) — the
+output the two conv layers would produce from the mel spectrogram. Everything
+after that (32 encoder layers, 32 decoder layers with cross-attention, tied
+embedding head) is implemented fully.
+
+Layers: pre-LayerNorm blocks with GELU MLPs and learned positional
+embeddings, per the paper. Decode uses self-KV caches plus cross-K/V computed
+once from the encoder memory at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.arch import ArchConfig
+
+
+def _sinusoid(positions: jax.Array, d: int, dtype) -> jax.Array:
+    """Length-generic sinusoidal positions (Whisper's encoder embedding; used
+    for the decoder too so the assignment's 32k-token decoder shapes lower —
+    real Whisper caps decoder positions at 448, noted in DESIGN.md)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _spec(cfg: ArchConfig, seq_len: int, causal: bool) -> C.AttnSpec:
+    return C.AttnSpec(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                      head_dim=cfg.resolved_head_dim, causal=causal,
+                      impl=C.resolve_attn_impl(cfg, seq_len),
+                      chunk=cfg.attention_chunk)
+
+
+def _init_mlp(key, d, ff):
+    k1, k2 = jax.random.split(key)
+    return {"w_up": C.dense_init(k1, d, ff), "b_up": jnp.zeros((ff,), jnp.float32),
+            "w_down": C.dense_init(k2, ff, d), "b_down": jnp.zeros((d,), jnp.float32)}
+
+
+def _init_enc_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1_w": jnp.ones((d,), jnp.float32), "ln1_b": jnp.zeros((d,), jnp.float32),
+        "attn": C.init_attention(k1, d, _spec(cfg, 1, False)),
+        "ln2_w": jnp.ones((d,), jnp.float32), "ln2_b": jnp.zeros((d,), jnp.float32),
+        "mlp": _init_mlp(k2, d, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1_w": jnp.ones((d,), jnp.float32), "ln1_b": jnp.zeros((d,), jnp.float32),
+        "self_attn": C.init_attention(k1, d, _spec(cfg, 1, True)),
+        "ln2_w": jnp.ones((d,), jnp.float32), "ln2_b": jnp.zeros((d,), jnp.float32),
+        "cross_attn": C.init_attention(k2, d, _spec(cfg, 1, False)),
+        "ln3_w": jnp.ones((d,), jnp.float32), "ln3_b": jnp.zeros((d,), jnp.float32),
+        "mlp": _init_mlp(k3, d, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    d = cfg.d_model
+    return {
+        "embed": C.embed_init(ks[2], cfg.vocab_size, d),    # tied head
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "ln_enc_w": jnp.ones((d,), jnp.float32), "ln_enc_b": jnp.zeros((d,), jnp.float32),
+        "ln_dec_w": jnp.ones((d,), jnp.float32), "ln_dec_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params: dict, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, F, d) stub frontend output -> encoder memory (B, F, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    f = frames.shape[1]
+    x = frames.astype(dtype) + _sinusoid(jnp.arange(f), cfg.d_model, dtype)[None]
+    spec = _spec(cfg, f, causal=False)
+    positions = jnp.arange(f)
+
+    def layer(x, p):
+        h = C.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+        x = x + C.attention_forward(p["attn"], h, positions, spec, rope_theta=0.0)
+        h = C.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+        x = x + C.gelu_mlp(h, p["mlp"]["w_up"], p["mlp"]["b_up"],
+                           p["mlp"]["w_down"], p["mlp"]["b_down"])
+        return C.maybe_shard(x, "act_btd"), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(layer, x, params["enc"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = layer(x, jax.tree.map(lambda a: a[i], params["enc"]))
+    return C.layer_norm(x, params["ln_enc_w"], params["ln_enc_b"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+def _dec_layer_full(p, x, memory, positions, mem_pos, cfg, spec_self, spec_cross):
+    h = C.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    x = x + C.attention_forward(p["self_attn"], h, positions, spec_self,
+                                rope_theta=0.0)
+    h = C.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    mk, mv = C.project_kv(p["cross_attn"], memory, mem_pos, spec_cross,
+                          rope_theta=0.0)
+    x = x + C.attention_forward(p["cross_attn"], h, positions, spec_cross,
+                                rope_theta=0.0, kv_override=(mk, mv, mem_pos))
+    h = C.layer_norm(x, p["ln3_w"], p["ln3_b"], cfg.norm_eps)
+    x = x + C.gelu_mlp(h, p["mlp"]["w_up"], p["mlp"]["b_up"],
+                       p["mlp"]["w_down"], p["mlp"]["b_down"])
+    return C.maybe_shard(x, "act_btd")
+
+
+def forward(params: dict, batch: dict, cfg: ArchConfig):
+    """Teacher-forced training forward.
+
+    batch: frames (B, F, d) stub embeddings; tokens (B, S) decoder input.
+    Returns (logits (B, S, V), aux).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(dtype)[tokens] + \
+        _sinusoid(jnp.arange(s), cfg.d_model, dtype)[None]
+    positions = jnp.arange(s)
+    mem_pos = jnp.arange(memory.shape[1])
+    spec_self = _spec(cfg, s, causal=True)
+    spec_cross = _spec(cfg, memory.shape[1], causal=False)
+
+    def layer(x, p):
+        return _dec_layer_full(p, x, memory, positions, mem_pos, cfg,
+                               spec_self, spec_cross), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(layer, x, params["dec"])
+    else:
+        for i in range(cfg.num_layers):
+            x, _ = layer(x, jax.tree.map(lambda a: a[i], params["dec"]))
+    x = C.layer_norm(x, params["ln_dec_w"], params["ln_dec_b"], cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"].T.astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    l = cfg.num_layers
+    return {
+        "k": jnp.zeros((l, batch_size, max_seq, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((l, batch_size, max_seq, cfg.num_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((l, batch_size, cfg.num_frames, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((l, batch_size, cfg.num_frames, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
+    """Encode audio, precompute cross-K/V, run the decoder prompt."""
+    dtype = jnp.dtype(cfg.dtype)
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"].astype(dtype)[tokens] + \
+        _sinusoid(jnp.arange(s), cfg.d_model, dtype)[None]
+    positions = jnp.arange(s)
+    mem_pos = jnp.arange(memory.shape[1])
+    spec_self = _spec(cfg, s, causal=True)
+    spec_cross = _spec(cfg, memory.shape[1], causal=False)
+
+    def layer(x, p):
+        h = C.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+        sk, sv = C.project_kv(p["self_attn"], h, positions, spec_self, 0.0)
+        mk, mv = C.project_kv(p["cross_attn"], memory, mem_pos, spec_cross, 0.0)
+        x = _dec_layer_full(p, x, memory, positions, mem_pos, cfg,
+                            spec_self, spec_cross)
+        return x, (sk, sv, mk, mv)
+
+    if cfg.scan_layers:
+        x, (sk, sv, mk, mv) = jax.lax.scan(layer, x, params["dec"])
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            x, ys = layer(x, jax.tree.map(lambda a: a[i], params["dec"]))
+            outs.append(ys)
+        sk, sv, mk, mv = (jnp.stack([o[j] for o in outs]) for j in range(4))
+    x = C.layer_norm(x[:, -1:], params["ln_dec_w"], params["ln_dec_b"],
+                     cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"].T.astype(dtype),
+                     preferred_element_type=jnp.float32)
+    smax = cache["k"].shape[2]
+    write = min(s, smax)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], sk[:, :, :write].astype(cache["k"].dtype), (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], sv[:, :, :write].astype(cache["v"].dtype), (0, 0, 0, 0, 0)),
+        "cross_k": mk.astype(cache["cross_k"].dtype),
+        "cross_v": mv.astype(cache["cross_v"].dtype),
+        "pos": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cfg: ArchConfig, cache: dict):
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"].astype(dtype)[tokens] + \
+        _sinusoid(pos, cfg.d_model, dtype)[:, None]
+    spec_self = _spec(cfg, 1, causal=True)
+    spec_cross = _spec(cfg, 1, causal=False)
+    mem_pos_ok = jnp.ones((b,), jnp.int32) * cfg.num_frames
+
+    def layer(x, xs):
+        p, ck, cv, mk, mv = xs
+        h = C.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+        att, ck, cv = C.attention_decode_step(p["self_attn"], h, ck, cv, pos,
+                                              spec_self, rope_theta=0.0)
+        x = x + att
+        h = C.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+        # cross attention: all memory positions valid
+        catt, _, _ = C.attention_decode_step(
+            p["cross_attn"], h, mk, mv, mem_pos_ok - 1, spec_cross,
+            rope_theta=0.0, update_cache=False)
+        x = x + catt
+        h = C.layer_norm(x, p["ln3_w"], p["ln3_b"], cfg.norm_eps)
+        x = x + C.gelu_mlp(h, p["mlp"]["w_up"], p["mlp"]["b_up"],
+                           p["mlp"]["w_down"], p["mlp"]["b_down"])
+        return x, (ck, cv)
+
+    xs_all = (params["dec"], cache["k"], cache["v"],
+              cache["cross_k"], cache["cross_v"])
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(layer, x, xs_all)
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            x, ys = layer(x, jax.tree.map(lambda a: a[i], xs_all))
+            outs.append(ys)
+        ks = jnp.stack([o[0] for o in outs])
+        vs = jnp.stack([o[1] for o in outs])
+    x = C.layer_norm(x, params["ln_dec_w"], params["ln_dec_b"], cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"].T.astype(dtype),
+                     preferred_element_type=jnp.float32)
+    return logits, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "pos": pos + 1}

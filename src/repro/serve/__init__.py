@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeConfig, ServeEngine, greedy_sample  # noqa: F401

@@ -1,0 +1,9 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.train.loss import cross_entropy, make_labels  # noqa: F401
+from repro.train.train_step import TrainConfig, make_train_step, make_eval_step  # noqa: F401
+from repro.train.checkpoint import (  # noqa: F401
+    save_checkpoint, load_checkpoint, latest_step, reshard_checkpoint,
+)
+from repro.train.compression import (  # noqa: F401
+    compress_int8, decompress_int8, make_compressed_psum,
+)

@@ -1,0 +1,57 @@
+"""Next-token LM loss with masking + z-loss (fp32 throughout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch import ArchConfig
+
+
+def make_labels(batch: dict, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """(labels, mask) aligned with the model's logits sequence.
+
+    * plain LM: position i predicts tokens[i+1]; last position masked.
+    * vlm: logits run over [patches | text]; only text-token targets count.
+    * audio (whisper): teacher-forced decoder tokens, standard shift.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        comb = jnp.concatenate(
+            [jnp.zeros((b, p), tokens.dtype), tokens], axis=1)
+        labels = jnp.concatenate(
+            [comb[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+        pos = jnp.arange(p + s)
+        mask = ((pos >= p - 1) & (pos < p + s - 1)).astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, (b, p + s))
+        return labels, mask
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+        axis=1)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"].astype(jnp.float32)
+    return labels, mask
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array,
+                  z_loss: float = 0.0) -> tuple[jax.Array, dict]:
+    """Masked mean softmax CE. logits (B,S,V) fp32; labels/mask (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    metrics = {"ce": ce, "tokens": denom}
+    loss = ce
+    if z_loss:
+        zl = jnp.sum(jnp.square(lse) * mask) / denom
+        loss = loss + z_loss * zl
+        metrics["z_loss"] = zl
+    acc = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    metrics["accuracy"] = jnp.sum(acc * mask) / denom
+    return loss, metrics

@@ -1,0 +1,101 @@
+"""Generic train/eval step builders over any ModelDef.
+
+The returned step is a pure function suitable for jit/pjit: GSPMD handles the
+data-parallel gradient reduction implicitly through sharded means. Gradient
+compression (explicit int8 all-reduce) is the shard_map variant in
+compression.py, used by launch/train.py when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelDef
+from repro.models.arch import ArchConfig
+from repro.train.loss import cross_entropy, make_labels
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    z_loss: float = 1e-4
+    moe_aux_weight: float = 1e-2
+    microbatches: int = 1          # grad accumulation (sequential, jit-internal)
+
+
+def make_train_step(model: ModelDef, cfg: ArchConfig,
+                    tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, cfg)
+        labels, mask = make_labels(batch, cfg)
+        loss, metrics = cross_entropy(logits, labels, mask, tcfg.z_loss)
+        if cfg.num_experts:
+            loss = loss + tcfg.moe_aux_weight * aux
+            metrics["moe_aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            # sequential grad accumulation: overlap-friendly (each microbatch's
+            # psum can overlap the next microbatch's compute under GSPMD)
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                gsum, msum = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                msum = jax.tree.map(jnp.add, msum, metrics)
+                return (gsum, msum), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+            first = jax.tree.map(lambda x: x[0], mbatch)
+            (_, m0), g0 = grad_fn(params, first)
+            rest = jax.tree.map(lambda x: x[1:], mbatch)
+            (grads, msum), _ = jax.lax.scan(acc_fn, (g0, m0), rest)
+            inv = 1.0 / tcfg.microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            metrics = jax.tree.map(lambda m: m * inv, msum)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg.optimizer)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: ModelDef, cfg: ArchConfig,
+                   tcfg: TrainConfig | None = None) -> Callable:
+    tcfg = tcfg or TrainConfig()
+
+    def eval_step(params, batch):
+        logits, _ = model.forward(params, batch, cfg)
+        labels, mask = make_labels(batch, cfg)
+        _, metrics = cross_entropy(logits, labels, mask)
+        return metrics
+
+    return eval_step
+
+
+def init_train_state(model: ModelDef, cfg: ArchConfig, tcfg: TrainConfig,
+                     key) -> tuple[dict, dict]:
+    params = model.init(key, cfg)
+    opt_state = adamw_init(params, tcfg.optimizer)
+    return params, opt_state

@@ -1,0 +1,77 @@
+"""DTW support (paper §2): banded DTW, LB_Keogh bound, exact DTW kNN."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BuildConfig, HerculesIndex, IndexConfig, SearchConfig
+from repro.core.dtw import dtw_distance, dtw_knn, keogh_envelope, lb_keogh
+from repro.data import random_walks
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ref_dtw(a, b, band):
+    n = len(a)
+    big = 1e30
+    dd = np.full((n, n), big)
+    for i in range(n):
+        for j in range(max(0, i - band), min(n, i + band + 1)):
+            c = (a[i] - b[j]) ** 2
+            prev = 0.0 if (i == 0 and j == 0) else min(
+                dd[i - 1, j] if i else big,
+                dd[i, j - 1] if j else big,
+                dd[i - 1, j - 1] if (i and j) else big)
+            dd[i, j] = c + prev
+    return dd[-1, -1]
+
+
+class TestDTW:
+    @pytest.mark.parametrize("band", [1, 3, 7])
+    def test_matches_reference(self, band, rng):
+        a = rng.normal(size=12).astype(np.float32)
+        b = rng.normal(size=(4, 12)).astype(np.float32)
+        got = np.asarray(dtw_distance(jnp.asarray(a), jnp.asarray(b), band))
+        want = np.array([_ref_dtw(a, x, band) for x in b])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_band_zero_is_euclidean(self, rng):
+        a = rng.normal(size=8).astype(np.float32)
+        b = rng.normal(size=(3, 8)).astype(np.float32)
+        got = np.asarray(dtw_distance(jnp.asarray(a), jnp.asarray(b), 0))
+        np.testing.assert_allclose(got, ((b - a) ** 2).sum(-1), rtol=1e-4)
+
+    def test_identical_series_zero(self, rng):
+        a = rng.normal(size=10).astype(np.float32)
+        assert float(dtw_distance(jnp.asarray(a), jnp.asarray(a)[None], 3)[0]) \
+            == pytest.approx(0.0, abs=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+    def test_lb_keogh_lower_bounds_dtw(self, seed, band):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=12).astype(np.float32)
+        b = rng.normal(size=(4, 12)).astype(np.float32)
+        lb = np.asarray(lb_keogh(jnp.asarray(a), jnp.asarray(b), band))
+        dtw = np.array([_ref_dtw(a, x, band) for x in b])
+        assert (lb <= dtw + 1e-3).all()
+
+    def test_envelope_contains_query(self, rng):
+        q = jnp.asarray(rng.normal(size=16).astype(np.float32))
+        lo, hi = keogh_envelope(q, 2)
+        assert bool(jnp.all((lo <= q) & (q <= hi)))
+
+    def test_dtw_knn_exact(self):
+        data = random_walks(jax.random.PRNGKey(0), 300, 32)
+        idx = HerculesIndex.build(data, IndexConfig(
+            build=BuildConfig(leaf_capacity=64),
+            search=SearchConfig(k=3, chunk=64, scan_block=64, l_max=4)))
+        q = data[:2] + 0.05
+        d, p = dtw_knn(idx.layout, q, k=2, band=3,
+                       cfg=SearchConfig(k=2, chunk=64, scan_block=64))
+        bf = np.stack([
+            np.sort([_ref_dtw(np.asarray(qq), np.asarray(s), 3)
+                     for s in np.asarray(data)])[:2]
+            for qq in np.asarray(q)])
+        np.testing.assert_allclose(np.asarray(d), bf, rtol=1e-3, atol=1e-3)

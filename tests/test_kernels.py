@@ -1,0 +1,162 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import summaries as S
+from repro.kernels import ed as ked
+from repro.kernels import lb_sax as klb
+from repro.kernels import ops, ref
+from repro.kernels.wkv6 import wkv6
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _qs(seed, q, n, length, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (q, length), dtype),
+            jax.random.normal(k2, (n, length), dtype))
+
+
+class TestEDMatrixKernel:
+    @pytest.mark.parametrize("q,n,length,bq,bn,bk", [
+        (8, 64, 32, 4, 16, 8),
+        (4, 32, 64, 4, 32, 64),       # single k-tile
+        (16, 128, 16, 8, 64, 16),
+        (8, 64, 48, 8, 64, 16),       # multi k-tile, uneven ratios
+    ])
+    def test_shapes(self, q, n, length, bq, bn, bk):
+        qa, sa = _qs(0, q, n, length)
+        out = ked.ed_matrix(qa, sa, bq=bq, bn=bn, bk=bk, interpret=True)
+        want = ref.ed_matrix_ref(qa, sa)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        qa, sa = _qs(1, 8, 64, 32, dtype)
+        out = ked.ed_matrix(qa, sa, bq=4, bn=16, bk=8, interpret=True)
+        want = ref.ed_matrix_ref(qa, sa)
+        tol = 1e-4 if dtype == jnp.float32 else 0.25
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_property_random(self, seed):
+        qa, sa = _qs(seed, 8, 32, 32)
+        out = ked.ed_matrix(qa, sa, bq=4, bn=16, bk=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.ed_matrix_ref(qa, sa)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestEDMinKernel:
+    @pytest.mark.parametrize("q,n,length,bq,bn,bk", [
+        (8, 64, 32, 4, 16, 8),
+        (8, 256, 32, 8, 64, 32),
+        (4, 32, 96, 4, 16, 32),
+    ])
+    def test_fused_min(self, q, n, length, bq, bn, bk):
+        qa, sa = _qs(2, q, n, length)
+        dmin, amin = ked.ed_min(qa, sa, bq=bq, bn=bn, bk=bk, interpret=True)
+        want_d, want_a = ref.ed_min_ref(qa, sa)
+        np.testing.assert_allclose(np.asarray(dmin), np.asarray(want_d),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(amin), np.asarray(want_a))
+
+
+class TestLBSaxKernel:
+    @pytest.mark.parametrize("q,n,m,alphabet", [
+        (8, 128, 16, 256),
+        (8, 64, 8, 64),
+        (4, 256, 16, 16),
+    ])
+    def test_vs_oracle(self, q, n, m, alphabet):
+        length = 64
+        key = jax.random.PRNGKey(3)
+        qa = jax.random.normal(key, (q, length))
+        sa = jax.random.normal(jax.random.PRNGKey(4), (n, length))
+        q_paa = S.paa(qa, m)
+        codes = S.isax(sa, m, alphabet)
+        out = klb.lb_sax_matrix(q_paa, codes, length, alphabet,
+                                bq=4, bn=n // 2, interpret=True)
+        want = ref.lb_sax_matrix_ref(q_paa, codes, length, alphabet)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestOpsWrappers:
+    """Padding wrappers must be exact for ragged logical shapes."""
+
+    @pytest.mark.parametrize("q,n,length", [(5, 77, 48), (1, 100, 128), (3, 9, 32)])
+    def test_ed_matrix_ragged(self, q, n, length):
+        qa, sa = _qs(5, q, n, length)
+        out = ops.ed_matrix(qa, sa, bq=4, bn=32, bk=16)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.ed_matrix_ref(qa, sa)),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("q,n,length", [(5, 77, 48), (3, 13, 64)])
+    def test_ed_min_ragged(self, q, n, length):
+        qa, sa = _qs(6, q, n, length)
+        dmin, amin = ops.ed_min(qa, sa, bq=4, bn=32, bk=16)
+        want_d, want_a = ref.ed_min_ref(qa, sa)
+        np.testing.assert_allclose(np.asarray(dmin), np.asarray(want_d),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(amin), np.asarray(want_a))
+
+    def test_lb_sax_ragged(self):
+        qa, sa = _qs(7, 5, 77, 64)
+        q_paa = S.paa(qa, 16)
+        codes = S.isax(sa, 16)
+        out = ops.lb_sax_matrix(q_paa, codes, 64, bq=4, bn=32)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.lb_sax_matrix_ref(q_paa, codes, 64)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fallback_path(self):
+        qa, sa = _qs(8, 4, 16, 32)
+        out = ops.ed_matrix(qa, sa, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.ed_matrix_ref(qa, sa)))
+
+
+class TestWKV6Kernel:
+    @pytest.mark.parametrize("b,t,h,dk,dv,chunk", [
+        (2, 32, 3, 8, 8, 8),
+        (1, 64, 2, 16, 16, 16),
+        (2, 16, 1, 4, 8, 16),         # single chunk
+    ])
+    def test_vs_oracle(self, b, t, h, dk, dv, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(9), 6)
+        r = jax.random.normal(ks[0], (b, t, h, dk))
+        k = jax.random.normal(ks[1], (b, t, h, dk))
+        v = jax.random.normal(ks[2], (b, t, h, dv))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, dk)))
+        u = jax.random.normal(ks[4], (h, dk))
+        s0 = jax.random.normal(ks[5], (b, h, dk, dv))
+        out, sf = wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+        want_o, want_s = ref.wkv6_ref(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want_o),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(want_s),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_extreme_decay_stable(self):
+        """w -> 0 (instant forget) and w -> 1 (no decay) must both be exact."""
+        b, t, h, dk, dv = 1, 16, 1, 4, 4
+        ks = jax.random.split(jax.random.PRNGKey(10), 5)
+        r = jax.random.normal(ks[0], (b, t, h, dk))
+        k = jax.random.normal(ks[1], (b, t, h, dk))
+        v = jax.random.normal(ks[2], (b, t, h, dv))
+        u = jax.random.normal(ks[3], (h, dk))
+        s0 = jnp.zeros((b, h, dk, dv))
+        for wval in (1e-6, 1.0 - 1e-6):
+            w = jnp.full((b, t, h, dk), wval)
+            out, sf = wkv6(r, k, v, w, u, s0, chunk=8, interpret=True)
+            want_o, want_s = ref.wkv6_ref(r, k, v, w, u, s0)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(want_o),
+                                       rtol=1e-4, atol=1e-4)

@@ -1,0 +1,106 @@
+"""Property tests: the lower bounds never exceed the true squared ED.
+
+This is the no-false-dismissal invariant the paper's exactness rests on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lower_bounds as LB
+from repro.core import summaries as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+_TOL = 1e-3  # fp32 headroom: bounds and distances accumulate over n terms
+
+
+def _pair(seed, num=16, n=64):
+    rng = np.random.default_rng(seed)
+    data = jnp.asarray(rng.normal(size=(num, n)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    return q, data
+
+
+class TestLBSAX:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_lb_sax_lower_bounds_ed(self, seed):
+        q, data = _pair(seed)
+        n = data.shape[1]
+        q_paa = S.paa(q[None], 16)[0]
+        codes = S.isax(data, 16)
+        lb = LB.lb_sax(q_paa, codes, n)
+        ed = LB.squared_ed(q[None], data)
+        assert bool(jnp.all(lb <= ed + _TOL)), float(jnp.max(lb - ed))
+
+    def test_lb_sax_zero_for_self(self, rng):
+        # a series' PAA is inside its own iSAX cell -> LB(q, isax(q)) uses the
+        # cell containing q's PAA, so distance contribution is 0
+        x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+        q_paa = S.paa(x, 16)
+        codes = S.isax(x, 16)
+        lb = jax.vmap(lambda p, c: LB.lb_sax(p, c, 64))(q_paa, codes)
+        np.testing.assert_allclose(np.asarray(lb), 0.0, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]),
+           st.sampled_from([16, 64, 256]))
+    def test_lb_sax_sweep_segments_alphabet(self, seed, m, alphabet):
+        q, data = _pair(seed, n=64)
+        q_paa = S.paa(q[None], m)[0]
+        codes = S.isax(data, m, alphabet)
+        lb = LB.lb_sax(q_paa, codes, 64, alphabet)
+        ed = LB.squared_ed(q[None], data)
+        assert bool(jnp.all(lb <= ed + _TOL))
+
+
+class TestLBEAPCA:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+    def test_series_lb_lower_bounds_ed(self, seed, nseg):
+        q, data = _pair(seed, n=48)
+        rng = np.random.default_rng(seed + 1)
+        cuts = np.sort(rng.choice(np.arange(1, 48), size=nseg - 1, replace=False))
+        ep = jnp.asarray(np.concatenate([cuts, [48]]).astype(np.int32))
+        sm, ss = S.eapca(data, ep)
+        qm, qs = S.eapca(q[None], ep)
+        lens = S.segment_lengths(ep)
+        lb = LB.lb_eapca_series(qm[0], qs[0], sm, ss, lens)
+        ed = LB.squared_ed(q[None], data)
+        assert bool(jnp.all(lb <= ed + _TOL)), float(jnp.max(lb - ed))
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_node_lb_lower_bounds_all_members(self, seed):
+        q, data = _pair(seed, num=32, n=48)
+        ep = jnp.asarray([12, 24, 36, 48], jnp.int32)
+        sm, ss = S.eapca(data, ep)
+        syn = S.synopsis_from_stats(sm, ss)
+        qm, qs = S.eapca(q[None], ep)
+        lens = S.segment_lengths(ep)
+        lb = LB.lb_eapca_node(qm[0], qs[0], syn, lens)
+        ed = LB.squared_ed(q[None], data)
+        assert float(lb) <= float(jnp.min(ed)) + _TOL
+
+    def test_node_lb_tighter_than_nothing(self, rng):
+        # sanity: LB is strictly positive when query is far away
+        data = jnp.asarray(rng.normal(size=(8, 48)).astype(np.float32))
+        q = jnp.full((48,), 100.0)
+        ep = jnp.asarray([24, 48, 48, 48], jnp.int32)
+        sm, ss = S.eapca(data, ep)
+        syn = S.synopsis_from_stats(sm, ss)
+        qm, qs = S.eapca(q[None], ep)
+        lb = LB.lb_eapca_node(qm[0], qs[0], syn, S.segment_lengths(ep))
+        assert float(lb) > 1000.0
+
+
+class TestEDMatrix:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_matmul_identity_matches_direct(self, seed):
+        q, data = _pair(seed, num=8)
+        d1 = LB.squared_ed_matrix(q[None], data)[0]
+        d2 = LB.squared_ed(q[None], data)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                                   rtol=1e-3, atol=1e-3)

@@ -1,0 +1,150 @@
+"""Per-arch smoke tests (deliverable f): reduced configs, one forward/train
+step on CPU, output shapes + no NaNs; decode-path consistency per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke
+from repro.models import get_model
+from repro.train import TrainConfig, make_train_step
+from repro.train.train_step import init_train_state
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+
+
+def _batch(cfg, key, seq=S):
+    batch = {"tokens": jax.random.randint(key, (B, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.d_patch))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, cfg.num_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+class TestSmoke:
+    def test_forward_shapes_no_nan(self, arch, key):
+        cfg = get_smoke(arch)
+        model = get_model(cfg)
+        params = model.init(key, cfg)
+        batch = _batch(cfg, key)
+        logits, aux = model.forward(params, batch, cfg)
+        extra = cfg.num_patches if cfg.family == "vlm" else 0
+        assert logits.shape == (B, S + extra, cfg.vocab_size)
+        assert not bool(jnp.isnan(logits).any())
+
+    def test_one_train_step(self, arch, key):
+        cfg = get_smoke(arch)
+        model = get_model(cfg)
+        tcfg = TrainConfig()
+        params, opt = init_train_state(model, cfg, tcfg, key)
+        step = jax.jit(make_train_step(model, cfg, tcfg))
+        batch = _batch(cfg, key)
+        params2, opt2, metrics = step(params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["grad_norm"]) > 0
+        # params actually changed
+        delta = max(float(jnp.abs(a - b).max())
+                    for a, b in zip(jax.tree.leaves(params),
+                                    jax.tree.leaves(params2)))
+        assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["codeqwen1.5-7b", "granite-moe-1b-a400m",
+                                  "rwkv6-7b", "recurrentgemma-2b",
+                                  "whisper-large-v3", "phi-3-vision-4.2b"])
+class TestDecodeConsistency:
+    """prefill(prompt) + decode steps must reproduce the full forward."""
+
+    def test_prefill_decode_matches_forward(self, arch, key):
+        cfg = get_smoke(arch)
+        model = get_model(cfg)
+        seq = 12
+        tokens = jax.random.randint(key, (B, seq), 0, cfg.vocab_size)
+        batch = _batch(cfg, key, seq)
+        batch["tokens"] = tokens
+        params = model.init(key, cfg)
+        full, _ = model.forward(params, batch, cfg)
+        off = cfg.num_patches if cfg.family == "vlm" else 0
+
+        prompt = dict(batch)
+        prompt["tokens"] = tokens[:, :seq - 2]
+        cache = model.init_cache(cfg, B, 32)
+        lg, cache = model.prefill(params, prompt, cfg, cache)
+        np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                                   np.asarray(full[:, seq - 3 + off]),
+                                   rtol=1e-3, atol=1e-3)
+        lg, cache = model.decode_step(params, tokens[:, seq - 2:seq - 1], cfg, cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, seq - 2 + off]),
+                                   rtol=1e-3, atol=1e-3)
+        lg, cache = model.decode_step(params, tokens[:, seq - 1:seq], cfg, cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, seq - 1 + off]),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", ARCH_NAMES)
+    def test_full_config_loads(self, arch):
+        cfg = get_config(arch)
+        assert cfg.name == arch
+        assert cfg.num_layers > 0 and cfg.d_model > 0
+
+    @pytest.mark.parametrize("arch,published_b,tol", [
+        ("llama3-405b", 405e9, 0.10),
+        ("codeqwen1.5-7b", 7.2e9, 0.15),
+        ("granite-34b", 34e9, 0.05),     # GPTBigCode gelu MLP: exact to 5%
+        ("minicpm-2b", 2.7e9, 0.25),
+        ("whisper-large-v3", 1.55e9, 0.25),
+        ("rwkv6-7b", 7.6e9, 0.25),
+        ("recurrentgemma-2b", 2.7e9, 0.30),
+        # assignment fixes 48L x 64 full-MoE layers; the published 16B has 27L
+        # with a dense first layer + shared experts — we verify the arithmetic
+        # of the ASSIGNED config, not the hf checkpoint layout
+        ("moonshot-v1-16b-a3b", 28.1e9, 0.10),
+        ("granite-moe-1b-a400m", 1.3e9, 0.30),
+        ("phi-3-vision-4.2b", 4.2e9, 0.30),
+    ])
+    def test_param_count_near_published(self, arch, published_b, tol):
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        assert abs(n - published_b) / published_b < tol, \
+            f"{arch}: analytic {n / 1e9:.2f}B vs published {published_b / 1e9:.2f}B"
+
+    def test_moe_active_less_than_total(self):
+        cfg = get_config("moonshot-v1-16b-a3b")
+        assert cfg.active_param_count() < cfg.param_count() / 3
+
+    def test_chunked_attention_matches_full(self, key):
+        from repro.models import common as C
+        spec_f = C.AttnSpec(4, 2, 16, causal=True, impl="full")
+        spec_c = C.AttnSpec(4, 2, 16, causal=True, impl="chunked", chunk=8)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.normal(k1, (2, 32, 4, 16))
+        kk = jax.random.normal(k2, (2, 32, 2, 16))
+        v = jax.random.normal(k3, (2, 32, 2, 16))
+        pos = jnp.arange(32)
+        a = C.attention_full(q, kk, v, pos, pos, spec_f)
+        b = C.attention_chunked(q, kk, v, pos, pos, spec_c)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_local_window_attention(self, key):
+        from repro.models import common as C
+        spec = C.AttnSpec(2, 1, 8, causal=True, window=4, impl="full")
+        q = jax.random.normal(key, (1, 16, 2, 8))
+        kk = jax.random.normal(jax.random.fold_in(key, 1), (1, 16, 1, 8))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 16, 1, 8))
+        pos = jnp.arange(16)
+        out = C.attention_full(q, kk, v, pos, pos, spec)
+        # position 10 must not attend to position <= 6: perturbing k[0] there
+        # must not change the output at position 10
+        kk2 = kk.at[:, 3].add(100.0)
+        out2 = C.attention_full(q, kk2, v, pos, pos, spec)
+        np.testing.assert_allclose(np.asarray(out[:, 10:]),
+                                   np.asarray(out2[:, 10:]), atol=1e-5)

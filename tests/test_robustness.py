@@ -1,0 +1,154 @@
+"""Corner cases and invariants beyond the happy path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import (BuildConfig, HerculesIndex, IndexConfig, SearchConfig,
+                        brute_force_knn)
+from repro.data import make_query_workload, random_walks
+from repro.models import get_model
+from repro.models.common import grad_cast
+from repro.models.moe import moe_capacity, moe_forward, init_moe
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestSearchCorners:
+    def _idx(self, data, tau=64):
+        return HerculesIndex.build(data, IndexConfig(
+            build=BuildConfig(leaf_capacity=tau),
+            search=SearchConfig(k=3, l_max=4, chunk=128, scan_block=256)))
+
+    def test_k_larger_than_leaf(self):
+        data = random_walks(jax.random.PRNGKey(0), 600, 64)
+        idx = self._idx(data, tau=16)
+        q = make_query_workload(jax.random.PRNGKey(1), data, 4, "5%")
+        res = idx.knn(q, k=50)
+        bf, _ = brute_force_knn(data, q, 50)
+        np.testing.assert_allclose(np.asarray(res.dists), np.asarray(bf),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_duplicate_series_in_collection(self):
+        base = random_walks(jax.random.PRNGKey(2), 300, 64)
+        data = jnp.concatenate([base, base[:100]])     # 100 exact duplicates
+        idx = self._idx(data)
+        q = base[:4]
+        res = idx.knn(q, k=2)
+        # both copies at distance 0
+        np.testing.assert_allclose(np.asarray(res.dists), 0.0, atol=1e-4)
+        ids = np.asarray(res.ids)
+        for i in range(4):
+            assert set(ids[i]) == {i, 300 + i}
+
+    def test_single_leaf_tree(self):
+        data = random_walks(jax.random.PRNGKey(3), 50, 64)
+        idx = self._idx(data, tau=128)                 # never splits
+        assert idx.stats()["num_leaves"] == 1
+        q = make_query_workload(jax.random.PRNGKey(4), data, 4, "5%")
+        bf, _ = brute_force_knn(data, q, 3)
+        np.testing.assert_allclose(np.asarray(idx.knn(q).dists),
+                                   np.asarray(bf), rtol=1e-3, atol=1e-3)
+
+    def test_constant_query(self):
+        data = random_walks(jax.random.PRNGKey(5), 500, 64)
+        idx = self._idx(data)
+        q = jnp.zeros((2, 64))
+        bf, _ = brute_force_knn(data, q, 3)
+        np.testing.assert_allclose(np.asarray(idx.knn(q).dists),
+                                   np.asarray(bf), rtol=1e-3, atol=1e-3)
+
+    def test_lmax_exceeding_leaves(self):
+        data = random_walks(jax.random.PRNGKey(6), 400, 64)
+        idx = HerculesIndex.build(data, IndexConfig(
+            build=BuildConfig(leaf_capacity=64),
+            search=SearchConfig(k=3, l_max=1000, chunk=128, scan_block=256)))
+        q = make_query_workload(jax.random.PRNGKey(7), data, 4, "5%")
+        bf, _ = brute_force_knn(data, q, 3)
+        np.testing.assert_allclose(np.asarray(idx.knn(q).dists),
+                                   np.asarray(bf), rtol=1e-3, atol=1e-3)
+
+
+class TestGradCast:
+    def test_identity_forward_and_cast_backward(self):
+        x = jnp.ones((4,), jnp.bfloat16) * 1.5
+        y = grad_cast(x.astype(jnp.float32), jnp.bfloat16)
+        np.testing.assert_allclose(np.asarray(y), 1.5)
+
+        def f(x):
+            return jnp.sum(grad_cast(x, jnp.bfloat16).astype(jnp.float32) ** 2)
+
+        g = jax.grad(f)(jnp.full((4,), 1.5))
+        # grad flowed (values 2*x) and was cast to bf16 en route
+        np.testing.assert_allclose(np.asarray(g), 3.0, rtol=1e-2)
+
+
+class TestMoEInvariants:
+    def _setup(self, cf=8.0):
+        cfg = dataclasses.replace(get_smoke("granite-moe-1b-a400m"),
+                                  capacity_factor=cf)
+        params = init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+        return cfg, params, x
+
+    def test_no_drop_at_high_capacity(self):
+        """At huge capacity the output must equal the dense mixture (each
+        token's top-k experts weighted by renormalized router probs)."""
+        cfg, params, x = self._setup(cf=16.0)
+        out, _ = moe_forward(params, x, cfg)
+        # dense reference
+        import jax.numpy as jnp
+        logits = jnp.einsum("bsd,de->bse", x, params["router"])
+        probs = jax.nn.softmax(logits, -1)
+        top_w, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+        top_w = top_w / top_w.sum(-1, keepdims=True)
+        ref = jnp.zeros_like(x)
+        for j in range(cfg.experts_per_token):
+            e = top_e[..., j]
+            g = jnp.einsum("bsd,bsdf->bsf", x,
+                           params["w_gate"][e])
+            u = jnp.einsum("bsd,bsdf->bsf", x, params["w_up"][e])
+            h = jax.nn.silu(g) * u
+            y = jnp.einsum("bsf,bsfd->bsd", h, params["w_down"][e])
+            ref = ref + y * top_w[..., j:j + 1]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-2, atol=2e-3)
+
+    def test_capacity_truncation_drops_not_corrupts(self):
+        """Low capacity may zero some tokens' expert contributions but must
+        never produce NaN or mix tokens."""
+        cfg, params, x = self._setup(cf=0.25)
+        out, aux = moe_forward(params, x, cfg)
+        assert not bool(jnp.isnan(out).any())
+        assert np.isfinite(float(aux))
+
+    def test_capacity_is_static(self):
+        cfg, _, _ = self._setup()
+        assert moe_capacity(cfg, 1024) == moe_capacity(cfg, 1024)
+        assert moe_capacity(cfg, 2048) >= moe_capacity(cfg, 1024)
+
+
+class TestHerculesEdgeData:
+    def test_near_constant_series(self):
+        """Catastrophic-cancellation regime for segment stds.
+
+        The fp32 matmul-identity brute force is LESS accurate than the
+        index's direct-sum distances at this noise floor, so the oracle here
+        is float64 numpy.
+        """
+        base = jnp.ones((200, 64))
+        noise = jax.random.normal(jax.random.PRNGKey(8), (200, 64)) * 1e-3
+        data = base + noise
+        idx = HerculesIndex.build(data, IndexConfig(
+            build=BuildConfig(leaf_capacity=32),
+            search=SearchConfig(k=2, l_max=4, chunk=64, scan_block=64)))
+        q = data[:3] + 1e-4
+        res = idx.knn(q)
+        d64 = ((np.asarray(data, np.float64)[None] -
+                np.asarray(q, np.float64)[:, None]) ** 2).sum(-1)
+        want = np.sort(d64, axis=1)[:, :2]
+        np.testing.assert_allclose(np.asarray(res.dists), want,
+                                   rtol=1e-3, atol=1e-7)

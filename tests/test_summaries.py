@@ -1,0 +1,118 @@
+"""Unit + property tests for PAA / iSAX / EAPCA summarizations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import summaries as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _series(rng, num=8, n=64):
+    return jnp.asarray(rng.normal(size=(num, n)).astype(np.float32))
+
+
+class TestPAA:
+    def test_matches_block_mean(self, rng):
+        x = _series(rng, 4, 64)
+        p = S.paa(x, 16)
+        ref = np.asarray(x).reshape(4, 16, 4).mean(-1)
+        np.testing.assert_allclose(np.asarray(p), ref, rtol=1e-6)
+
+    def test_indivisible_raises(self, rng):
+        with pytest.raises(ValueError):
+            S.paa(_series(rng, 2, 60), 16)
+
+    def test_mean_preserved(self, rng):
+        x = _series(rng, 4, 64)
+        np.testing.assert_allclose(np.asarray(S.paa(x, 16)).mean(-1),
+                                   np.asarray(x).mean(-1), rtol=1e-5, atol=1e-6)
+
+
+class TestISAX:
+    def test_breakpoints_monotonic(self):
+        bps = np.asarray(S.sax_breakpoints(256))
+        assert bps.shape == (255,)
+        assert (np.diff(bps) > 0).all()
+        # standard normal quantiles: symmetric around 0
+        np.testing.assert_allclose(bps, -bps[::-1], atol=1e-5)
+
+    def test_codes_in_range(self, rng):
+        codes = S.isax(_series(rng, 16, 64))
+        c = np.asarray(codes)
+        assert c.dtype == np.uint8
+
+    def test_code_monotone_in_value(self):
+        # larger PAA value => larger (or equal) symbol
+        vals = jnp.linspace(-5, 5, 100)[None, :]
+        codes = np.asarray(S.isax_from_paa(vals))[0]
+        assert (np.diff(codes.astype(int)) >= 0).all()
+
+    def test_cell_bounds_contain_value(self, rng):
+        x = _series(rng, 8, 64)
+        p = S.paa(x, 16)
+        codes = S.isax_from_paa(p)
+        lo, hi = S.isax_cell_bounds(codes)
+        assert bool(jnp.all((lo <= p) & (p <= hi)))
+
+
+class TestEAPCA:
+    def test_segment_stats_match_numpy(self, rng):
+        x = _series(rng, 4, 32)
+        ep = jnp.asarray([[8, 16, 24, 32]] * 4, jnp.int32)
+        means, stds = S.eapca(x, ep[0])
+        xn = np.asarray(x).reshape(4, 4, 8)
+        np.testing.assert_allclose(np.asarray(means), xn.mean(-1), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(stds), xn.std(-1), rtol=1e-4, atol=1e-5)
+
+    def test_empty_segments_zero(self, rng):
+        x = _series(rng, 2, 32)
+        ep = jnp.asarray([16, 32, 32, 32], jnp.int32)  # 2 real + 2 empty
+        means, stds = S.eapca(x, ep)
+        np.testing.assert_array_equal(np.asarray(means)[:, 2:], 0.0)
+        np.testing.assert_array_equal(np.asarray(stds)[:, 2:], 0.0)
+        assert bool(jnp.all(S.segment_lengths(ep)[2:] == 0))
+
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    def test_prefix_sum_stats_property(self, seed, nseg):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(3, 24)).astype(np.float32))
+        # random valid segmentation with nseg segments
+        cuts = np.sort(rng.choice(np.arange(1, 24), size=nseg - 1, replace=False))
+        ep = np.concatenate([cuts, [24]]).astype(np.int32)
+        means, stds = S.eapca(x, jnp.asarray(ep))
+        prev = 0
+        for i, e in enumerate(ep):
+            seg = np.asarray(x)[:, prev:e]
+            # fp32 prefix-sum differences cancel: abs error bound is
+            # ~n*eps*max|cumsum| ~ 3e-5 for n=24 N(0,1) values; stds also
+            # lose bits in E[x^2]-mean^2 (the LB slack absorbs this; see
+            # SearchConfig.lb_slack)
+            np.testing.assert_allclose(np.asarray(means)[:, i], seg.mean(-1),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(stds)[:, i], seg.std(-1),
+                                       rtol=1e-3, atol=1e-3)
+            prev = e
+
+
+class TestSynopsis:
+    def test_synopsis_bounds_members(self, rng):
+        x = _series(rng, 32, 32)
+        ep = jnp.asarray([8, 16, 24, 32], jnp.int32)
+        means, stds = S.eapca(x, ep)
+        syn = S.synopsis_from_stats(means, stds)
+        assert bool(jnp.all(syn[:, 0] <= means.min(0) + 1e-6))
+        assert bool(jnp.all(syn[:, 1] >= means.max(0) - 1e-6))
+
+    def test_merge_is_union(self, rng):
+        x = _series(rng, 32, 32)
+        ep = jnp.asarray([8, 16, 24, 32], jnp.int32)
+        m, s = S.eapca(x, ep)
+        a = S.synopsis_from_stats(m[:16], s[:16])
+        b = S.synopsis_from_stats(m[16:], s[16:])
+        both = S.synopsis_from_stats(m, s)
+        np.testing.assert_allclose(np.asarray(S.merge_synopses(a, b)),
+                                   np.asarray(both), rtol=1e-6)

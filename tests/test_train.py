@@ -1,0 +1,226 @@
+"""Training substrate: optimizer, schedules, loss masking, checkpointing,
+gradient compression, microbatching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import get_model
+from repro.train import (AdamWConfig, TrainConfig, adamw_init, adamw_update,
+                         cross_entropy, load_checkpoint, make_labels,
+                         make_train_step, save_checkpoint)
+from repro.train.checkpoint import latest_step
+from repro.train.compression import (compress_int8, decompress_int8,
+                                     init_error_buffer, make_compressed_psum)
+from repro.train.optimizer import lr_at
+from repro.train.train_step import init_train_state
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestOptimizer:
+    def _quad(self, moment_dtype):
+        """AdamW must descend a simple quadratic."""
+        cfg = AdamWConfig(learning_rate=0.1, warmup_steps=0, total_steps=100,
+                          weight_decay=0.0, moment_dtype=moment_dtype,
+                          schedule="constant")
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = adamw_init(params, cfg)
+        for _ in range(60):
+            grads = {"w": 2.0 * params["w"]}
+            params, state, _ = adamw_update(params, grads, state, cfg)
+        return float(jnp.abs(params["w"]).max())
+
+    def test_adamw_converges_fp32(self):
+        assert self._quad("float32") < 0.5
+
+    def test_adamw_converges_int8_moments(self):
+        assert self._quad("int8") < 0.6
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(grad_clip=1.0, warmup_steps=0, schedule="constant")
+        params = {"w": jnp.zeros((4,))}
+        state = adamw_init(params, cfg)
+        _, _, m = adamw_update(params, {"w": jnp.full((4,), 100.0)}, state, cfg)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedules(self):
+        cfg = AdamWConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+        assert float(lr_at(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(
+            cfg.final_lr_frac, rel=1e-3)
+        wsd = AdamWConfig(learning_rate=1.0, warmup_steps=10, total_steps=100,
+                          schedule="wsd")
+        assert float(lr_at(wsd, jnp.asarray(50))) == pytest.approx(1.0)
+        assert float(lr_at(wsd, jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+class TestLoss:
+    def test_perfect_prediction_zero_loss(self):
+        labels = jnp.asarray([[1, 2, 0]])
+        logits = jax.nn.one_hot(labels, 4) * 100.0
+        mask = jnp.asarray([[1.0, 1.0, 0.0]])
+        loss, m = cross_entropy(logits, labels, mask)
+        assert float(loss) < 1e-3
+        assert float(m["accuracy"]) == 1.0
+
+    def test_mask_excludes_positions(self):
+        labels = jnp.asarray([[1, 1]])
+        logits = jnp.zeros((1, 2, 4)).at[0, 1, 1].set(-100.0)
+        m_all = cross_entropy(logits, labels, jnp.asarray([[1.0, 1.0]]))[0]
+        m_first = cross_entropy(logits, labels, jnp.asarray([[1.0, 0.0]]))[0]
+        assert float(m_first) < float(m_all)
+
+    def test_vlm_labels_skip_patches(self):
+        from repro.configs import get_smoke
+        cfg = get_smoke("phi-3-vision-4.2b")
+        tokens = jnp.arange(10)[None].astype(jnp.int32) + 1
+        labels, mask = make_labels({"tokens": tokens}, cfg)
+        p = cfg.num_patches
+        assert labels.shape == (1, p + 10)
+        # position p-1 predicts the first text token
+        assert int(labels[0, p - 1]) == 1
+        assert float(mask[0, 0]) == 0.0
+        assert float(mask[0, p - 1]) == 1.0
+        assert float(mask[0, -1]) == 0.0
+
+
+class TestMicrobatching:
+    def test_grad_accumulation_matches_full_batch(self, key):
+        cfg = get_smoke("codeqwen1.5-7b")
+        model = get_model(cfg)
+        batch = {"tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab_size)}
+        t1 = TrainConfig(optimizer=AdamWConfig(warmup_steps=0, schedule="constant"))
+        t2 = TrainConfig(optimizer=AdamWConfig(warmup_steps=0, schedule="constant"),
+                         microbatches=2)
+        params, opt = init_train_state(model, cfg, t1, key)
+        p1, _, m1 = jax.jit(make_train_step(model, cfg, t1))(params, opt, batch)
+        p2, _, m2 = jax.jit(make_train_step(model, cfg, t2))(params, opt, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-4)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-5)
+
+
+class TestLossDecreases:
+    def test_loss_decreases_over_steps(self, key):
+        """The end-to-end sanity check: a tiny model memorizes a batch."""
+        cfg = get_smoke("minicpm-2b")
+        model = get_model(cfg)
+        tcfg = TrainConfig(optimizer=AdamWConfig(
+            learning_rate=3e-3, warmup_steps=5, total_steps=40,
+            weight_decay=0.0, schedule="constant"))
+        params, opt = init_train_state(model, cfg, tcfg, key)
+        step = jax.jit(make_train_step(model, cfg, tcfg))
+        batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+        losses = []
+        for _ in range(25):
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_atomicity(self, tmp_path, key):
+        state = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                            "blocks": [{"a": jnp.ones((2,))}, {"a": jnp.zeros((2,))}]},
+                 "step": jnp.asarray(7)}
+        d = str(tmp_path)
+        save_checkpoint(d, 7, state, {"rng_seed": 42})
+        save_checkpoint(d, 9, state)
+        assert latest_step(d) == 9
+        loaded, meta = load_checkpoint(d, step=7)
+        assert meta["step"] == 7 and meta["rng_seed"] == 42
+        np.testing.assert_allclose(np.asarray(loaded["params"]["w"]),
+                                   np.asarray(state["params"]["w"]))
+        assert isinstance(loaded["params"]["blocks"], list)
+        np.testing.assert_allclose(
+            np.asarray(loaded["params"]["blocks"][0]["a"]), 1.0)
+
+    def test_no_tmp_left_behind(self, tmp_path):
+        import os
+        save_checkpoint(str(tmp_path), 1, {"x": jnp.ones((2,))})
+        assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+    def test_restart_exactness(self, tmp_path, key):
+        """Training N steps == training k, checkpoint, restore, N-k steps."""
+        cfg = get_smoke("codeqwen1.5-7b")
+        model = get_model(cfg)
+        tcfg = TrainConfig()
+        step = jax.jit(make_train_step(model, cfg, tcfg))
+        batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+
+        params, opt = init_train_state(model, cfg, tcfg, key)
+        for _ in range(4):
+            params, opt, _ = step(params, opt, batch)
+        ref = params
+
+        params, opt = init_train_state(model, cfg, tcfg, key)
+        for _ in range(2):
+            params, opt, _ = step(params, opt, batch)
+        save_checkpoint(str(tmp_path), 2, {"params": params, "opt": opt})
+        loaded, _ = load_checkpoint(str(tmp_path))
+        params, opt = loaded["params"], loaded["opt"]
+        # restore the int step counter dtype
+        opt["step"] = opt["step"].astype(jnp.int32)
+        for _ in range(2):
+            params, opt, _ = step(params, opt, batch)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self, key):
+        x = jax.random.normal(key, (64, 64)) * 3.0
+        q, s = compress_int8(x)
+        err = jnp.abs(decompress_int8(q, s) - x)
+        assert float(err.max()) <= float(s) * 0.51 + 1e-6
+
+    def test_error_feedback_contracts(self, key):
+        """Sum of (compressed + carried error) over steps converges to the
+        true sum — the contraction property of error feedback."""
+        g = jax.random.normal(key, (128,))
+        e = jnp.zeros((128,))
+        acc = jnp.zeros((128,))
+        for _ in range(50):
+            q, s = compress_int8(g + e)
+            approx = decompress_int8(q, s)
+            e = (g + e) - approx
+            acc = acc + approx
+        np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g),
+                                   atol=0.02)
+
+    def test_compressed_psum_single_device(self, key):
+        """Under pmap over 1 device the compressed psum must equal the mean."""
+        grads = {"w": jax.random.normal(key, (1, 32))}
+        ebuf = {"w": jnp.zeros((1, 32))}
+        cpsum = make_compressed_psum("dp")
+
+        def f(g, e):
+            return cpsum(g, e)
+
+        mean, new_e = jax.pmap(f, axis_name="dp")(grads, ebuf)
+        np.testing.assert_allclose(np.asarray(mean["w"][0]),
+                                   np.asarray(grads["w"][0]), atol=0.05)
+
+
+class TestDataPipeline:
+    def test_double_buffer_deterministic_and_resumable(self):
+        from repro.data.pipeline import DoubleBufferedLoader
+        import numpy as np
+
+        def make(step):
+            rng = np.random.default_rng(step)
+            return {"x": rng.normal(size=(4,)).astype(np.float32)}
+
+        a = DoubleBufferedLoader(make)
+        got = [np.asarray(next(a)["x"]) for _ in range(5)]
+        # resume from step 3: identical stream
+        b = DoubleBufferedLoader(make, start_step=3)
+        np.testing.assert_allclose(np.asarray(next(b)["x"]), got[3])
+        np.testing.assert_allclose(np.asarray(next(b)["x"]), got[4])
+        assert a.state == 5

@@ -1,0 +1,175 @@
+"""Tree-build invariants: conservation, path consistency, synopsis soundness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import summaries as S
+from repro.core.layout import build_layout
+from repro.core.tree import (BuildConfig, build_tree, inorder_leaves,
+                             route_to_leaf, tree_stats)
+from repro.data import random_walks
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built():
+    data = random_walks(jax.random.PRNGKey(7), 3000, 128)
+    cfg = BuildConfig(leaf_capacity=100, max_segments=16, init_segments=4)
+    tree, node_of = build_tree(data, cfg)
+    return data, cfg, tree, node_of
+
+
+class TestBuildInvariants:
+    def test_conservation(self, built):
+        data, cfg, tree, node_of = built
+        st = tree_stats(tree)
+        assert st["total_in_leaves"] == data.shape[0]
+
+    def test_all_assignments_are_leaves(self, built):
+        _, _, tree, node_of = built
+        assert bool(jnp.all(tree.is_leaf[node_of]))
+
+    def test_leaf_capacity_respected(self, built):
+        data, cfg, tree, node_of = built
+        st = tree_stats(tree)
+        # random walks have no duplicates -> no degenerate leaves
+        assert st["max_leaf"] <= cfg.leaf_capacity
+
+    def test_parent_child_wiring(self, built):
+        _, _, tree, _ = built
+        nn = int(tree.num_nodes)
+        left = np.asarray(tree.left[:nn]); right = np.asarray(tree.right[:nn])
+        parent = np.asarray(tree.parent[:nn])
+        is_leaf = np.asarray(tree.is_leaf[:nn])
+        for node in range(nn):
+            if is_leaf[node]:
+                assert left[node] == -1 and right[node] == -1
+            else:
+                assert parent[left[node]] == node
+                assert parent[right[node]] == node
+
+    def test_routing_matches_assignment(self, built):
+        data, _, tree, node_of = built
+        depth = tree_stats(tree)["max_depth"]
+        routed = route_to_leaf(tree, data, depth)
+        np.testing.assert_array_equal(np.asarray(routed), np.asarray(node_of))
+
+    def test_split_semantics_along_path(self, built):
+        """Every series satisfies the split predicate of each ancestor."""
+        data, _, tree, node_of = built
+        nn = int(tree.num_nodes)
+        parent = np.asarray(tree.parent[:nn])
+        left = np.asarray(tree.left[:nn])
+        lo = np.asarray(tree.split_lo[:nn]); hi = np.asarray(tree.split_hi[:nn])
+        use_std = np.asarray(tree.split_use_std[:nn])
+        val = np.asarray(tree.split_value[:nn])
+        x = np.asarray(data)
+        nof = np.asarray(node_of)
+        for i in range(0, x.shape[0], 97):            # sample series
+            node = nof[i]
+            while parent[node] != -1:
+                par = parent[node]
+                seg = x[i, lo[par]:hi[par]]
+                stat = seg.std() if use_std[par] else seg.mean()
+                if node == left[par]:
+                    assert stat < val[par] + 1e-5
+                else:
+                    assert stat >= val[par] - 1e-5
+                node = par
+
+    def test_vsplit_refines_segmentation(self, built):
+        _, _, tree, _ = built
+        nn = int(tree.num_nodes)
+        nsegs = np.asarray(tree.num_segs[:nn])
+        parent = np.asarray(tree.parent[:nn])
+        for node in range(1, nn):
+            assert nsegs[node] in (nsegs[parent[node]], nsegs[parent[node]] + 1)
+
+    def test_synopsis_bounds_members(self, built):
+        """Node synopsis must contain the stats of every member series."""
+        data, _, tree, node_of = built
+        x = np.asarray(data)
+        syn = np.asarray(tree.synopsis)
+        ep_all = np.asarray(tree.endpoints)
+        parent = np.asarray(tree.parent)
+        nof = np.asarray(node_of)
+        for i in range(0, x.shape[0], 211):
+            node = nof[i]
+            while node != -1:
+                ep = ep_all[node]
+                prev = 0
+                for j, e in enumerate(ep):
+                    if e > prev:
+                        seg = x[i, prev:e]
+                        mu, sd = seg.mean(), seg.std()
+                        assert syn[node, j, 0] <= mu + 1e-4
+                        assert syn[node, j, 1] >= mu - 1e-4
+                        assert syn[node, j, 2] <= sd + 1e-4
+                        assert syn[node, j, 3] >= sd - 1e-4
+                    prev = max(prev, e)
+                node = parent[node]
+
+    def test_determinism(self):
+        data = random_walks(jax.random.PRNGKey(3), 500, 64)
+        cfg = BuildConfig(leaf_capacity=50)
+        t1, n1 = build_tree(data, cfg)
+        t2, n2 = build_tree(data, cfg)
+        np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+        np.testing.assert_array_equal(np.asarray(t1.num_nodes), np.asarray(t2.num_nodes))
+
+    def test_duplicate_data_no_infinite_loop(self):
+        """All-identical series can never split: no_split must engage."""
+        data = jnp.ones((300, 64))
+        cfg = BuildConfig(leaf_capacity=50, max_rounds=16)
+        tree, node_of = build_tree(data, cfg)
+        st = tree_stats(tree)
+        assert st["num_leaves"] == 1
+        assert st["max_leaf"] == 300
+
+
+class TestLayout:
+    def test_inorder_extents_partition(self, built):
+        data, _, tree, node_of = built
+        lay = build_layout(tree, node_of, data, pad_series_to_multiple=256)
+        ls = np.asarray(lay.leaf_start)[:lay.num_leaves]
+        lc = np.asarray(lay.leaf_count)[:lay.num_leaves]
+        assert lc.sum() == data.shape[0]
+        np.testing.assert_array_equal(ls[1:], ls[:-1] + lc[:-1])
+
+    def test_lrd_is_permuted_data(self, built):
+        data, _, tree, node_of = built
+        lay = build_layout(tree, node_of, data)
+        np.testing.assert_allclose(
+            np.asarray(lay.lrd)[:data.shape[0]],
+            np.asarray(data)[np.asarray(lay.perm)])
+
+    def test_inv_perm_roundtrip(self, built):
+        data, _, tree, node_of = built
+        lay = build_layout(tree, node_of, data)
+        p = np.asarray(lay.perm); ip = np.asarray(lay.inv_perm)
+        np.testing.assert_array_equal(p[ip], np.arange(data.shape[0]))
+
+    def test_series_leaf_rank_consistent(self, built):
+        data, _, tree, node_of = built
+        lay = build_layout(tree, node_of, data, pad_series_to_multiple=128)
+        sr = np.asarray(lay.series_leaf_rank)
+        ls = np.asarray(lay.leaf_start); lc = np.asarray(lay.leaf_count)
+        for r in range(lay.num_leaves):
+            np.testing.assert_array_equal(sr[ls[r]:ls[r] + lc[r]], r)
+        # pad rows carry the sentinel rank
+        assert (sr[data.shape[0]:] == lay.leaf_start.shape[0]).all()
+
+    def test_lsd_matches_isax_of_lrd(self, built):
+        data, _, tree, node_of = built
+        lay = build_layout(tree, node_of, data)
+        want = np.asarray(S.isax(lay.lrd[:data.shape[0]], 16))
+        np.testing.assert_array_equal(np.asarray(lay.lsd)[:data.shape[0]], want)
+
+    def test_inorder_covers_all_leaves(self, built):
+        _, _, tree, _ = built
+        order = inorder_leaves(tree)
+        st = tree_stats(tree)
+        assert len(order) == st["num_leaves"]
+        assert len(set(order.tolist())) == len(order)
