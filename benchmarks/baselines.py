@@ -11,7 +11,10 @@
                 is exactly the structural difference the paper credits for
                 Hercules's win on hard workloads.
 
-All baselines return exact kNN (the paper's ground rule).
+All baselines return exact kNN (the paper's ground rule). ``FlatSaxBackend``
+adapts the ParIS+-like scheme to the :class:`repro.core.engine.SearchBackend`
+protocol so benchmarks drive every competitor through the same QueryEngine
+surface.
 """
 from __future__ import annotations
 
@@ -22,7 +25,8 @@ import jax.numpy as jnp
 
 from repro.core import lower_bounds as LB
 from repro.core import summaries as S
-from repro.core.search import INF, _merge_topk
+from repro.core.engine import BackendBase
+from repro.core.search import INF, KnnResult, SearchConfig, _merge_topk
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
@@ -66,3 +70,41 @@ def flat_sax_knn(data: jax.Array, codes: jax.Array, queries: jax.Array,
         return d_top, p_top, acc
 
     return jax.lax.map(one, queries)
+
+
+class FlatSaxBackend(BackendBase):
+    """ParIS+/VA+file-like flat filter index as a SearchBackend: the iSAX
+    summary table is the only index structure (no clustering tree)."""
+
+    name = "flat-sax"
+
+    def __init__(self, data: jax.Array, config: SearchConfig | None = None,
+                 sax_segments: int = S.NUM_SAX_SEGMENTS):
+        self.data = jnp.asarray(data)
+        self.codes = S.isax(self.data, sax_segments)
+        self._config = config or SearchConfig()
+
+    @property
+    def series_len(self) -> int:
+        return int(self.data.shape[1])
+
+    @property
+    def base_config(self) -> SearchConfig:
+        return self._config
+
+    def _result(self, d, p, acc) -> KnnResult:
+        return self._fill_result(d, p, p, accessed=acc)  # identity layout
+
+    def _bind(self, cfg):
+        return lambda q: self._result(
+            *flat_sax_knn(self.data, self.codes, q, cfg.k, cfg.chunk))
+
+    def make_plan(self, cfg, q_struct):
+        compiled = flat_sax_knn.lower(
+            self.data, self.codes, q_struct, cfg.k, cfg.chunk).compile()
+        return lambda q: self._result(*compiled(self.data, self.codes, q))
+
+    def stats(self) -> dict:
+        return {"num_series": int(self.data.shape[0]),
+                "series_len": int(self.data.shape[1]),
+                "sax_segments": int(self.codes.shape[1])}

@@ -3,20 +3,24 @@
 Every function prints ``name,us_per_call,derived`` CSV rows. Sizes are scaled
 to CPU (1 core) but preserve the paper's comparisons: method orderings and
 pruning ratios are the reproduced claims; absolute wall-clock is directional.
+
+Every method is driven through the unified :class:`repro.core.QueryEngine`
+surface — Hercules (LocalBackend), PSCAN (ScanBackend, MXU form), the
+ParIS+-like flat filter (FlatSaxBackend) and ablations (per-call overrides)
+all answer via the identical ``engine.knn(queries, k=...)`` call, so the
+compared numbers include the same dispatch/batching layer a serving system
+pays.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.baselines import flat_sax_knn
+from benchmarks.baselines import FlatSaxBackend
 from benchmarks.common import emit, time_call
-from repro.core import (BuildConfig, HerculesIndex, IndexConfig, SearchConfig,
-                        brute_force_knn, pscan_knn)
-from repro.core import summaries as S
+from repro.core import (BuildConfig, HerculesIndex, IndexConfig, LocalBackend,
+                        QueryEngine, ScanBackend, SearchConfig,
+                        brute_force_knn)
 from repro.data import DIFFICULTY_LEVELS, make_query_workload, random_walks
 
 _SEARCH = dict(l_max=8, chunk=512, scan_block=2048)
@@ -26,6 +30,19 @@ def _build(data, tau=128, **kw):
     cfg = IndexConfig(build=BuildConfig(leaf_capacity=tau),
                       search=SearchConfig(**{**_SEARCH, **kw}))
     return HerculesIndex.build(data, cfg)
+
+
+def _engine(data, tau=128, **kw) -> QueryEngine:
+    return QueryEngine(LocalBackend(_build(data, tau, **kw)))
+
+
+def _scan_engine(data, **kw) -> QueryEngine:
+    return QueryEngine(ScanBackend(data, SearchConfig(**{**_SEARCH, **kw}),
+                                   mxu=True))
+
+
+def _flat_engine(data, **kw) -> QueryEngine:
+    return QueryEngine(FlatSaxBackend(data, SearchConfig(**{**_SEARCH, **kw})))
 
 
 def _check_exact(res_d, data, q, k):
@@ -43,18 +60,19 @@ def bench_scalability_size(sizes=(2048, 8192, 32768), n=128, nq=16):
     for num in sizes:
         data = random_walks(key, num, n)
         q = make_query_workload(jax.random.PRNGKey(1), data, nq, "5%")
-        codes = S.isax(data, 16)
 
         t_build = time_call(lambda d=data: _build(d), warmup=0, iters=1)
-        idx = _build(data)
-        res = idx.knn(q, k=1)
+        herc = _engine(data)
+        scan = _scan_engine(data)
+        flat = _flat_engine(data)
+        res = herc.knn(q, k=1)
         _check_exact(res.dists, data, q, 1)
-        t_herc = time_call(lambda: idx.knn(q, k=1))
-        t_scan = time_call(lambda: pscan_knn(data, q, k=1))
-        t_flat = time_call(lambda: flat_sax_knn(data, codes, q, k=1))
-        t_nosax = time_call(lambda: idx.knn(q, k=1, use_sax=False))
+        t_herc = time_call(lambda: herc.knn(q, k=1))
+        t_scan = time_call(lambda: scan.knn(q, k=1))
+        t_flat = time_call(lambda: flat.knn(q, k=1))
+        t_nosax = time_call(lambda: herc.knn(q, k=1, use_sax=False))
         emit(f"fig6_size{num}_build_hercules", t_build,
-             f"leaves={idx.stats()['num_leaves']}")
+             f"leaves={herc.stats()['num_leaves']}")
         emit(f"fig6_size{num}_query_hercules", t_herc / nq,
              f"accessed={float(res.accessed.mean()) / num:.3f}")
         emit(f"fig6_size{num}_query_pscan", t_scan / nq, "accessed=1.0")
@@ -70,11 +88,12 @@ def bench_series_length(lengths=(64, 128, 256, 512), num=8192, nq=8):
     for n in lengths:
         data = random_walks(jax.random.PRNGKey(2), num, n)
         q = make_query_workload(jax.random.PRNGKey(3), data, nq, "5%")
-        idx = _build(data)
-        res = idx.knn(q, k=1)
+        herc = _engine(data)
+        scan = _scan_engine(data)
+        res = herc.knn(q, k=1)
         _check_exact(res.dists, data, q, 1)
-        t_herc = time_call(lambda: idx.knn(q, k=1))
-        t_scan = time_call(lambda: pscan_knn(data, q, k=1))
+        t_herc = time_call(lambda: herc.knn(q, k=1))
+        t_scan = time_call(lambda: scan.knn(q, k=1))
         emit(f"fig8_len{n}_query_hercules", t_herc / nq,
              f"speedup_vs_scan={t_scan / max(t_herc, 1e-9):.2f}x")
         emit(f"fig8_len{n}_query_pscan", t_scan / nq, "")
@@ -86,15 +105,16 @@ def bench_series_length(lengths=(64, 128, 256, 512), num=8192, nq=8):
 
 def bench_difficulty(num=16384, n=128, nq=16):
     data = random_walks(jax.random.PRNGKey(4), num, n)
-    idx = _build(data)
-    codes = S.isax(data, 16)
+    herc = _engine(data)
+    scan = _scan_engine(data)
+    flat = _flat_engine(data)
     for diff in DIFFICULTY_LEVELS:
         q = make_query_workload(jax.random.PRNGKey(5), data, nq, diff)
-        res = idx.knn(q, k=1)
+        res = herc.knn(q, k=1)
         _check_exact(res.dists, data, q, 1)
-        t_herc = time_call(lambda: idx.knn(q, k=1))
-        t_scan = time_call(lambda: pscan_knn(data, q, k=1))
-        t_flat = time_call(lambda: flat_sax_knn(data, codes, q, k=1))
+        t_herc = time_call(lambda: herc.knn(q, k=1))
+        t_scan = time_call(lambda: scan.knn(q, k=1))
+        t_flat = time_call(lambda: flat.knn(q, k=1))
         acc = float(res.accessed.mean()) / num
         paths = np.bincount(np.asarray(res.path), minlength=4)
         emit(f"fig10_{diff}_hercules", t_herc / nq,
@@ -110,11 +130,11 @@ def bench_difficulty(num=16384, n=128, nq=16):
 def bench_k(num=16384, n=128, nq=8, ks=(1, 5, 25, 100)):
     data = random_walks(jax.random.PRNGKey(6), num, n)
     q = make_query_workload(jax.random.PRNGKey(7), data, nq, "5%")
-    idx = _build(data)
+    herc = _engine(data)
     for k in ks:
-        res = idx.knn(q, k=k)
+        res = herc.knn(q, k=k)
         _check_exact(res.dists, data, q, k)
-        t = time_call(lambda: idx.knn(q, k=k))
+        t = time_call(lambda: herc.knn(q, k=k))
         emit(f"fig11_k{k}_hercules", t / nq,
              f"accessed={float(res.accessed.mean()) / num:.3f}")
 
@@ -125,17 +145,17 @@ def bench_k(num=16384, n=128, nq=8, ks=(1, 5, 25, 100)):
 
 def bench_ablation(num=16384, n=128, nq=16):
     data = random_walks(jax.random.PRNGKey(8), num, n)
-    idx = _build(data)
+    herc = _engine(data)
     # NoPara analogue: narrow vectorization (chunk/scan_block 64) — the
     # vector lanes play the role of the paper's threads+SIMD
-    idx_narrow = _build(data, chunk=64, scan_block=64)
+    herc_narrow = _engine(data, chunk=64, scan_block=64)
     for diff in ("1%", "5%", "ood"):
         q = make_query_workload(jax.random.PRNGKey(9), data, nq, diff)
         variants = {
-            "hercules": lambda: idx.knn(q, k=1),
-            "nosax": lambda: idx.knn(q, k=1, use_sax=False),
-            "nothresh": lambda: idx.knn(q, k=1, adaptive=False),
-            "nopara": lambda: idx_narrow.knn(q, k=1),
+            "hercules": lambda: herc.knn(q, k=1),
+            "nosax": lambda: herc.knn(q, k=1, use_sax=False),
+            "nothresh": lambda: herc.knn(q, k=1, adaptive=False),
+            "nopara": lambda: herc_narrow.knn(q, k=1),
         }
         for name, fn in variants.items():
             res = fn()
@@ -146,10 +166,41 @@ def bench_ablation(num=16384, n=128, nq=16):
 
 
 # --------------------------------------------------------------------------
+# Backend comparison through the one serving surface (QueryEngine)
+# --------------------------------------------------------------------------
+
+def bench_backends(backends=("local", "scan", "scan-mxu", "flat-sax"),
+                   num=16384, n=128, nq=16, k=1):
+    """The same workload through every named backend via QueryEngine —
+    the api_redesign's acceptance bench (identical call, exact answers)."""
+    from repro.core import make_backend
+
+    data = random_walks(jax.random.PRNGKey(11), num, n)
+    q = make_query_workload(jax.random.PRNGKey(12), data, nq, "5%")
+    cfg = IndexConfig(build=BuildConfig(leaf_capacity=128),
+                      search=SearchConfig(k=k, **_SEARCH))
+    for name in backends:
+        if name == "flat-sax":
+            backend = FlatSaxBackend(data, cfg.search)
+        else:
+            backend = make_backend(name, data, index_config=cfg)
+        eng = QueryEngine(backend)
+        res = eng.knn(q, k=k)
+        _check_exact(res.dists, data, q, k)
+        t = time_call(lambda: eng.knn(q, k=k))
+        pc = eng.telemetry()["plan_cache"]
+        emit(f"backend_{name}", t / nq,
+             f"plan_hits={pc['hits']};compiles={pc['compiles']}")
+
+
+# --------------------------------------------------------------------------
 # kernel/throughput microbenches (XLA paths; Pallas validated in tests)
 # --------------------------------------------------------------------------
 
 def bench_kernels(num=32768, n=128, nq=64):
+    from repro.core import pscan_knn
+    from repro.core import summaries as S
+
     data = random_walks(jax.random.PRNGKey(10), num, n)
     q = data[:nq] + 0.01
     codes = S.isax(data, 16)

@@ -1,24 +1,38 @@
 """Benchmark entry point: one function per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--quick]``
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--backend NAME]``
 Prints ``name,us_per_call,derived`` CSV (benchmarks verify exactness of every
 answer against brute force before timing).
+
+``--backend`` selects a single backend by name (local | scan | scan-mxu |
+flat-sax | sharded | all) and runs only the unified-surface backend
+comparison for it; without the flag the full figure suite runs.
 """
 from __future__ import annotations
 
 import argparse
-import sys
 
 from benchmarks import bench_suite as B
+
+_BACKEND_CHOICES = ("local", "scan", "scan-mxu", "flat-sax", "sharded", "all")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes (CI-friendly)")
+    ap.add_argument("--backend", choices=_BACKEND_CHOICES, default=None,
+                    help="run only the backend comparison, for this backend "
+                         "('all' = every backend) through the QueryEngine")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
+    if args.backend:
+        names = (("local", "scan", "scan-mxu", "flat-sax")
+                 if args.backend == "all" else (args.backend,))
+        size = dict(num=4096, nq=8) if args.quick else {}
+        B.bench_backends(backends=names, **size)
+        return
     if args.quick:
         B.bench_scalability_size(sizes=(2048, 8192), nq=8)
         B.bench_series_length(lengths=(64, 128), num=4096, nq=4)
@@ -26,6 +40,7 @@ def main(argv=None) -> None:
         B.bench_k(num=8192, nq=4, ks=(1, 10))
         B.bench_ablation(num=8192, nq=8)
         B.bench_approx(num=8192, nq=8)
+        B.bench_backends(num=4096, nq=8)
         B.bench_kernels(num=16384, nq=32)
     else:
         B.bench_scalability_size()
@@ -34,6 +49,7 @@ def main(argv=None) -> None:
         B.bench_k()
         B.bench_ablation()
         B.bench_approx()
+        B.bench_backends()
         B.bench_kernels()
 
 

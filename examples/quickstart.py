@@ -1,35 +1,46 @@
-"""Quickstart: build a Hercules index and answer exact kNN queries.
+"""Quickstart: build a Hercules index and answer exact kNN queries through
+the unified ``repro.api`` surface (QueryEngine over a backend).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
-from repro.core import (BuildConfig, HerculesIndex, IndexConfig, SearchConfig,
-                        brute_force_knn)
+from repro import api
 from repro.data import make_query_workload, random_walks
 
 # 1. a collection of 20k z-normalized random-walk series (the paper's Synth)
 data = random_walks(jax.random.PRNGKey(0), 20_000, 128)
 
-# 2. build the index: EAPCA tree + leaf-ordered LRD layout + iSAX sidecar
-idx = HerculesIndex.build(data, IndexConfig(
-    build=BuildConfig(leaf_capacity=256),
-    search=SearchConfig(k=5, l_max=16)))
-print("tree:", idx.stats())
+# 2. build the index backend: EAPCA tree + leaf-ordered LRD layout + iSAX
+#    sidecar, wrapped in a QueryEngine (compiled-plan cache + telemetry)
+backend = api.LocalBackend(api.HerculesIndex.build(data, api.IndexConfig(
+    build=api.BuildConfig(leaf_capacity=256),
+    search=api.SearchConfig(k=5, l_max=16))))
+engine = api.QueryEngine(backend)
+print("tree:", engine.stats())
 
 # 3. a workload of medium-hard queries (dataset series + 5% gaussian noise)
 queries = make_query_workload(jax.random.PRNGKey(1), data, 10, "5%")
 
-# 4. exact 5-NN
-res = idx.knn(queries)
+# 4. exact 5-NN — per-call overrides (k, l_max, thresholds...) are free;
+#    the engine compiles one plan per (config, batch bucket) and reuses it
+res = engine.knn(queries)
 print("\nper-query pruning (1.0 = everything pruned):")
 print("  EAPCA:", np.round(np.asarray(res.eapca_pr), 3))
 print("  SAX:  ", np.round(np.asarray(res.sax_pr), 3))
 print("data accessed:", f"{float(res.accessed.mean()) / 20_000:.2%}")
 
-# 5. the paper's ground rule: answers are exact
-bf_d, _ = brute_force_knn(data, queries, 5)
+# 5. the paper's ground rule: answers are exact — and every backend agrees.
+#    The dense-scan backend answers the same workload bit-identically.
+scan = api.QueryEngine(api.ScanBackend(data, api.SearchConfig(k=5)))
+res_scan = scan.knn(queries)
+assert np.array_equal(np.asarray(res.dists), np.asarray(res_scan.dists))
+bf_d, _ = api.brute_force_knn(data, queries, 5)
 assert np.allclose(np.asarray(res.dists), np.asarray(bf_d), rtol=1e-3, atol=1e-3)
-print("\nexact answers verified against brute force — OK")
+print("\nexact answers verified against dense scan + brute force — OK")
+
+# 6. repeated calls hit the compiled-plan cache (zero retraces)
+engine.knn(queries)
+print("plan cache:", engine.telemetry()["plan_cache"])
 print("nearest ids for query 0:", np.asarray(res.ids)[0])

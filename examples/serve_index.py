@@ -1,9 +1,12 @@
 """End-to-end driver (the paper's kind: a query-serving system).
 
 Builds a disk-persisted Hercules index over a large synthetic collection and
-serves batched kNN query workloads of every difficulty level, reporting
-latency, access-path selection and pruning — then validates exactness
-against the optimized parallel scan (PSCAN).
+serves batched kNN query workloads of every difficulty level through the
+unified ``repro.api`` surface — a :class:`KnnServeEngine` (slot-based
+continuous batching) over a :class:`QueryEngine` (compiled-plan cache) over a
+:class:`LocalBackend` — reporting latency, access-path selection, pruning and
+plan-cache behaviour, then validates exactness against the dense-scan
+backend through the very same surface.
 
     PYTHONPATH=src python examples/serve_index.py [--num-series 100000]
 """
@@ -15,8 +18,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (BuildConfig, HerculesIndex, IndexConfig, SearchConfig,
-                        pscan_knn)
+from repro import api
 from repro.data import DIFFICULTY_LEVELS, make_query_workload, random_walks
 
 
@@ -32,40 +34,52 @@ def main():
     t0 = time.time()
     # geometry per EXPERIMENTS.md §Perf iteration 2: small leaves + few
     # phase-1 visits suit memory-resident collections
-    idx = HerculesIndex.build(data, IndexConfig(
-        build=BuildConfig(leaf_capacity=256),
-        search=SearchConfig(k=1, l_max=8)))
+    idx = api.HerculesIndex.build(data, api.IndexConfig(
+        build=api.BuildConfig(leaf_capacity=256),
+        search=api.SearchConfig(k=1, l_max=8)))
     print(f"built in {time.time() - t0:.1f}s  {idx.stats()}")
 
     # persist + reload (the HTree/LRDFile/LSDFile artifact, checkpoint story)
     path = os.path.join(tempfile.gettempdir(), "hercules_demo.npz")
     idx.save(path)
-    idx = HerculesIndex.load(path)
+    idx = api.HerculesIndex.load(path)
     print(f"persisted + reloaded {os.path.getsize(path) / 2**20:.1f} MiB")
 
-    print("\n=== query answering stage ===")
-    for diff in DIFFICULTY_LEVELS:
-        q = make_query_workload(jax.random.PRNGKey(1), data, args.queries, diff)
-        res = idx.knn(q)                       # warm (compile once)
-        jax.block_until_ready(res.dists)
-        t0 = time.time()
-        res = idx.knn(q)
-        jax.block_until_ready(res.dists)
-        dt = (time.time() - t0) / args.queries
-        paths = np.bincount(np.asarray(res.path), minlength=4)
-        print(f"[{diff:>4}] {dt * 1e3:7.1f} ms/query  "
-              f"accessed {float(res.accessed.mean()) / args.num_series:6.2%}  "
-              f"paths scan/pruned = {paths[0] + paths[1]}/{paths[2]}")
+    engine = api.QueryEngine(api.LocalBackend(idx))
 
-    print("\n=== exactness + speedup vs optimized scan (hard workload) ===")
+    print("\n=== query answering stage (slot-based serving) ===")
+    serve = api.KnnServeEngine(engine,
+                               api.KnnServeConfig(batch_slots=args.queries))
+    for diff in DIFFICULTY_LEVELS:
+        q = np.asarray(make_query_workload(
+            jax.random.PRNGKey(1), data, args.queries, diff))
+        for qi in q:                           # warm (compile once per bucket)
+            serve.submit(qi)
+        serve.drain()
+        rids = [serve.submit(qi) for qi in q]
+        t0 = time.time()
+        answers = serve.drain()
+        dt = (time.time() - t0) / args.queries
+        paths = np.bincount(
+            [max(answers[r].path, 0) for r in rids], minlength=4)
+        tele = serve.telemetry()
+        print(f"[{diff:>4}] {dt * 1e3:7.1f} ms/query  "
+              f"paths scan/pruned = {paths[0] + paths[1]}/{paths[2]}  "
+              f"plan cache {tele['plan_cache']['hits']}h/"
+              f"{tele['plan_cache']['misses']}m")
+    print(f"mean pruning: eapca={tele['pruning']['eapca_mean']:.3f} "
+          f"sax={tele['pruning']['sax_mean']:.3f}")
+
+    print("\n=== exactness + speedup vs dense scan — same surface ===")
     q = make_query_workload(jax.random.PRNGKey(2), data, args.queries, "ood")
-    d_idx = idx.knn(q).dists
-    t0 = time.time(); d_idx = idx.knn(q).dists; jax.block_until_ready(d_idx)
-    t_idx = time.time() - t0
-    d_scan, _ = pscan_knn(data, q, k=1)
-    t0 = time.time(); d_scan, _ = pscan_knn(data, q, k=1); jax.block_until_ready(d_scan)
-    t_scan = time.time() - t0
-    assert np.allclose(np.asarray(d_idx), np.asarray(d_scan), rtol=1e-3, atol=1e-3)
+    scan = api.QueryEngine(api.ScanBackend(data, api.SearchConfig(k=1),
+                                           mxu=True))
+    d_idx = engine.knn(q).dists                # warm
+    t0 = time.time(); d_idx = engine.knn(q).dists; t_idx = time.time() - t0
+    d_scan = scan.knn(q).dists                 # warm
+    t0 = time.time(); d_scan = scan.knn(q).dists; t_scan = time.time() - t0
+    assert np.allclose(np.asarray(d_idx), np.asarray(d_scan),
+                       rtol=1e-3, atol=1e-3)
     print(f"exact ✓   hercules {t_idx:.2f}s vs pscan {t_scan:.2f}s "
           f"({t_scan / max(t_idx, 1e-9):.1f}x)")
 

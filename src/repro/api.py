@@ -1,0 +1,29 @@
+"""``repro.api`` — the one import for answering and serving kNN queries.
+
+    from repro import api
+
+    backend = api.make_backend("local", data, search=api.SearchConfig(k=5))
+    engine = api.QueryEngine(backend)
+    result = engine.knn(queries)                  # KnnResult, exact
+    engine.telemetry()["plan_cache"]              # hits/misses/compiles
+
+    serve = api.KnnServeEngine(engine, api.KnnServeConfig(batch_slots=32))
+    rid = serve.submit(one_query)
+    serve.drain()                                 # {rid: KnnAnswer}
+
+Backends (``local`` | ``scan`` | ``scan-mxu`` | ``sharded``) all answer
+exactly and interchangeably; the engine owns batching, the compiled-plan
+cache, and telemetry. See README.md for the full tour.
+"""
+from repro.core.engine import (  # noqa: F401
+    BACKEND_NAMES, EngineConfig, LocalBackend, QueryEngine, ScanBackend,
+    SearchBackend, ShardedBackend, dense_scan_knn, make_backend,
+)
+from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
+from repro.core.search import (  # noqa: F401
+    KnnResult, SearchConfig, brute_force_knn, pscan_knn,
+)
+from repro.core.tree import BuildConfig  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    KnnAnswer, KnnServeConfig, KnnServeEngine,
+)

@@ -4,8 +4,14 @@ from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
 from repro.core.layout import HerculesLayout, build_layout  # noqa: F401
 from repro.core.search import (  # noqa: F401
     KnnResult, SearchConfig, approx_knn, brute_force_knn, exact_knn,
-    pscan_knn,
+    pscan_knn, validate_runtime_config,
 )
 from repro.core.tree import (  # noqa: F401
     BuildConfig, HerculesTree, build_tree, route_to_leaf, tree_stats,
+)
+# The unified serving surface: every caller above the core answers queries
+# through a backend-agnostic QueryEngine (compiled-plan cache + telemetry).
+from repro.core.engine import (  # noqa: F401
+    BACKEND_NAMES, EngineConfig, LocalBackend, QueryEngine, ScanBackend,
+    SearchBackend, ShardedBackend, dense_scan_knn, make_backend,
 )

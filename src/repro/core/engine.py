@@ -1,0 +1,549 @@
+"""Unified query engine — one search surface over every backend.
+
+The paper's system answers exact kNN through one carefully scheduled
+pipeline; this repo grew three incompatible entry points around it
+(``HerculesIndex.knn``, the distributed ``StackedIndex``, the PSCAN
+baseline). This module is the serving layer that unifies them:
+
+* :class:`SearchBackend` — the protocol every answering path conforms to:
+  ``knn(queries, k=None, **overrides) -> KnnResult`` plus ``stats()`` /
+  ``describe()``. Three adapters ship here:
+
+  - :class:`LocalBackend`   — in-process :class:`HerculesIndex` (the paper).
+  - :class:`ShardedBackend` — the distributed ``StackedIndex`` under a mesh
+    (per-shard exact top-k + all-gather merge).
+  - :class:`ScanBackend`    — the dense blocked scan (PSCAN). Its default
+    *parity* arithmetic uses the same difference-form squared-ED as the
+    index's refinement/leaf paths, so answers are **bit-identical** across
+    backends; ``mxu=True`` switches to the matmul-identity form (the
+    high-arithmetic-intensity MXU path, equal up to fp32 rounding).
+
+* :class:`QueryEngine` — a serving session over one backend that
+
+  (a) buckets arbitrary query-batch shapes to a small set of padded sizes
+      and keeps an LRU **compiled-plan cache** keyed by (static
+      SearchConfig, bucket shape): plans are AOT-lowered and compiled
+      (``jit(...).lower(...).compile()``), so a cache hit *cannot* retrace —
+      the executable takes only device arrays;
+  (b) separates build-time statics (the layout's padded row count) from
+      per-call knobs: any ``chunk``/``scan_block`` dividing the padded size
+      is a legal override (``validate_runtime_config``), and ``k``/``l_max``/
+      threshold/ablation knobs are always legal;
+  (c) exposes engine-level telemetry — plan-cache hits/misses/evictions,
+      compile and execute latency, access-path counts and pruning ratios —
+      as a plain dict (:meth:`QueryEngine.telemetry`).
+
+Everything above this layer (serving loop, benchmarks, examples, CLIs)
+talks to backends only through the engine.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import HerculesIndex, IndexConfig
+from repro.core.search import (INF, KnnResult, SearchConfig, _merge_topk,
+                               exact_knn, pscan_knn, validate_runtime_config)
+
+
+@runtime_checkable
+class SearchBackend(Protocol):
+    """What the engine (and anything else) may assume about an answering path."""
+
+    name: str
+
+    def resolve(self, k: int | None = None,
+                overrides: dict[str, Any] | None = None) -> SearchConfig: ...
+
+    def make_plan(self, cfg: SearchConfig,
+                  q_struct: jax.ShapeDtypeStruct
+                  ) -> Callable[[jax.Array], KnnResult]: ...
+
+    def knn(self, queries: jax.Array, k: int | None = None,
+            **overrides: Any) -> KnnResult: ...
+
+    def stats(self) -> dict: ...
+
+    def describe(self) -> dict: ...
+
+
+class BackendBase:
+    """Shared resolve/describe plumbing; subclasses supply the compute."""
+
+    name = "backend"
+
+    @property
+    def series_len(self) -> int | None:
+        """Collection series length, when known (engine input validation)."""
+        return None
+
+    @property
+    def base_config(self) -> SearchConfig:
+        raise NotImplementedError
+
+    def _validate(self, cfg: SearchConfig) -> None:
+        pass
+
+    def resolve(self, k: int | None = None,
+                overrides: dict[str, Any] | None = None) -> SearchConfig:
+        cfg = self.base_config
+        upd = dict(overrides or {})
+        if k is not None:
+            upd["k"] = k
+        if upd:
+            cfg = dataclasses.replace(cfg, **upd)
+        self._validate(cfg)
+        return cfg
+
+    def make_plan(self, cfg, q_struct):
+        raise NotImplementedError
+
+    def knn(self, queries: jax.Array, k: int | None = None,
+            **overrides: Any) -> KnnResult:
+        """Direct (non-engine) call; still jit-cached, but may retrace on
+        new shapes. Serving code should go through :class:`QueryEngine`."""
+        cfg = self.resolve(k, overrides)
+        return self._bind(cfg)(jnp.asarray(queries))
+
+    def _bind(self, cfg: SearchConfig) -> Callable[[jax.Array], KnnResult]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _fill_result(dists, positions, ids, *, path: int = -1,
+                     accessed=None) -> KnnResult:
+        """KnnResult from the (dists, positions, ids) a backend computes,
+        with the per-query telemetry fields it does not track filled by one
+        convention: path ``-1`` = unknown, pruning ratios 0, ``accessed``
+        0 / a scalar broadcast / a per-query vector."""
+        qn = dists.shape[0]
+        zeros_f = jnp.zeros((qn,), jnp.float32)
+        zeros_i = jnp.zeros((qn,), jnp.int32)
+        if accessed is None:
+            accessed = zeros_i
+        elif jnp.ndim(accessed) == 0:
+            accessed = jnp.full((qn,), accessed, jnp.int32)
+        return KnnResult(
+            dists=dists, positions=positions, ids=ids,
+            path=jnp.full((qn,), path, jnp.int32),
+            eapca_pr=zeros_f, sax_pr=zeros_f,
+            accessed=accessed, visited_leaves=zeros_i)
+
+    def stats(self) -> dict:
+        return {}
+
+    def describe(self) -> dict:
+        return {"backend": self.name,
+                "config": dataclasses.asdict(self.base_config)}
+
+
+# ---------------------------------------------------------------------------
+# Local backend — the paper's single-node Hercules index
+# ---------------------------------------------------------------------------
+
+class LocalBackend(BackendBase):
+    """In-process :class:`HerculesIndex` (tree + LRD/LSD layout)."""
+
+    name = "local"
+
+    def __init__(self, index: HerculesIndex):
+        self.index = index
+
+    @property
+    def series_len(self) -> int:
+        return self.index.layout.series_len
+
+    @property
+    def base_config(self) -> SearchConfig:
+        return self.index.config.search
+
+    def _validate(self, cfg: SearchConfig) -> None:
+        validate_runtime_config(cfg, self.index.layout.lrd.shape[0])
+
+    def _bind(self, cfg):
+        idx = self.index
+        return lambda q: exact_knn(idx.tree, idx.layout, q, cfg, idx.max_depth)
+
+    def make_plan(self, cfg, q_struct):
+        idx = self.index
+        compiled = exact_knn.lower(
+            idx.tree, idx.layout, q_struct, cfg, idx.max_depth).compile()
+        return lambda q: compiled(idx.tree, idx.layout, q)
+
+    def stats(self) -> dict:
+        return self.index.stats()
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d["num_series"] = self.index.layout.num_series
+        d["series_len"] = self.index.layout.series_len
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Scan backend — PSCAN as a first-class backend
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def dense_scan_knn(data: jax.Array, queries: jax.Array, k: int = 1,
+                   block: int = 4096):
+    """Blocked exact scan in *difference form* (``sum((s - q)^2)`` per row —
+    the same arithmetic as the index's leaf/refinement paths, hence
+    bit-identical answers). ``data`` may be unpadded. Returns (Q,k) dists
+    and positions."""
+    num, n = data.shape
+    n_pad = -(-num // block) * block
+    if n_pad != num:
+        data = jnp.concatenate(
+            [data, jnp.zeros((n_pad - num, n), data.dtype)], axis=0)
+    blocks3 = data.reshape(n_pad // block, block, n)
+
+    def one(q):
+        d0 = jnp.full((k,), INF)
+        p0 = jnp.full((k,), -1, jnp.int32)
+
+        def body(carry, blk):
+            d_top, p_top, base = carry
+            d = jnp.sum(jnp.square(blk - q[None, :]), axis=1)
+            pos = base + jnp.arange(block, dtype=jnp.int32)
+            d = jnp.where(pos < num, d, INF)
+            d_top, p_top = _merge_topk(d_top, p_top, d, pos, k)
+            return (d_top, p_top, base + block), None
+
+        (d_top, p_top, _), _ = jax.lax.scan(body, (d0, p0, jnp.int32(0)), blocks3)
+        return d_top, p_top
+
+    return jax.lax.map(one, queries)
+
+
+class ScanBackend(BackendBase):
+    """Dense blocked scan over the raw collection (the PSCAN baseline).
+
+    ``mxu=False`` (default): difference-form distances, bit-identical to
+    :class:`LocalBackend`. ``mxu=True``: matmul-identity distances on the
+    MXU (fastest dense path; equal up to fp32 rounding).
+    """
+
+    name = "scan"
+
+    def __init__(self, data: jax.Array, config: SearchConfig | None = None,
+                 mxu: bool = False):
+        self.data = jnp.asarray(data)
+        self._config = dataclasses.replace(
+            config or SearchConfig(), force_scan=True)
+        self.mxu = mxu
+
+    @property
+    def series_len(self) -> int:
+        return int(self.data.shape[1])
+
+    @property
+    def base_config(self) -> SearchConfig:
+        return self._config
+
+    def _validate(self, cfg: SearchConfig) -> None:
+        if cfg.scan_block <= 0:
+            raise ValueError("scan_block must be positive")
+
+    def _result(self, d, p) -> KnnResult:
+        # identity layout (pos == id); path 3 = forced scan, everything read
+        return self._fill_result(d, p, p, path=3, accessed=self.data.shape[0])
+
+    def _fn(self):
+        return pscan_knn if self.mxu else dense_scan_knn
+
+    def _bind(self, cfg):
+        return lambda q: self._result(
+            *self._fn()(self.data, q, cfg.k, cfg.scan_block))
+
+    def make_plan(self, cfg, q_struct):
+        compiled = self._fn().lower(
+            self.data, q_struct, cfg.k, cfg.scan_block).compile()
+        return lambda q: self._result(*compiled(self.data, q))
+
+    def stats(self) -> dict:
+        return {"num_series": int(self.data.shape[0]),
+                "series_len": int(self.data.shape[1])}
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(self.stats(), mxu=self.mxu)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend — the distributed StackedIndex under a mesh
+# ---------------------------------------------------------------------------
+
+class ShardedBackend(BackendBase):
+    """Series-sharded Hercules (``StackedIndex``): per-shard exact top-k,
+    all-gather, global merge. With one shard on one device this degenerates
+    to the local pipeline (same arithmetic, same answers).
+
+    ``positions`` in results are -1 (layout positions are per-shard; global
+    ``ids`` are exact) and the per-query pruning telemetry is zeroed —
+    cross-shard aggregation of those counters is future work.
+    """
+
+    name = "sharded"
+
+    def __init__(self, stacked, mesh=None):
+        from jax.sharding import Mesh  # noqa: F401  (type only)
+
+        self.stacked = stacked
+        if mesh is None:
+            from repro.distributed.compat import make_mesh
+            mesh = make_mesh((len(jax.devices()),), ("data",))
+        ndev = int(np.prod(list(mesh.shape.values())))
+        if stacked.num_shards != ndev:
+            raise ValueError(f"index has {stacked.num_shards} shards but the "
+                             f"mesh has {ndev} devices")
+        self.mesh = mesh
+        self._programs: dict[SearchConfig, Callable] = {}
+
+    @property
+    def series_len(self) -> int:
+        return self.stacked.layout.series_len
+
+    @property
+    def base_config(self) -> SearchConfig:
+        return self.stacked.config.search
+
+    def _validate(self, cfg: SearchConfig) -> None:
+        validate_runtime_config(cfg, self.stacked.layout.lrd.shape[-2])
+
+    def _run_for(self, cfg: SearchConfig):
+        if cfg not in self._programs:
+            from repro.distributed.search import make_distributed_search
+            self._programs[cfg] = make_distributed_search(
+                self.mesh, cfg, self.stacked.max_depth,
+                self.stacked.tree, self.stacked.layout)
+        return self._programs[cfg]
+
+    def _offsets(self):
+        return self.stacked.shard_offsets.reshape(self.stacked.num_shards, 1)
+
+    def _result(self, d, gid) -> KnnResult:
+        return self._fill_result(d, jnp.full_like(gid, -1), gid)
+
+    def _bind(self, cfg):
+        run = self._run_for(cfg)
+        st = self.stacked
+        return lambda q: self._result(
+            *run(st.tree, st.layout, self._offsets(), q))
+
+    def make_plan(self, cfg, q_struct):
+        run = self._run_for(cfg)
+        st = self.stacked
+        offsets = self._offsets()
+        compiled = run.lower(st.tree, st.layout, offsets, q_struct).compile()
+        return lambda q: self._result(
+            *compiled(st.tree, st.layout, offsets, q))
+
+    def stats(self) -> dict:
+        st = self.stacked
+        return {"num_shards": st.num_shards,
+                "num_series": st.num_shards * st.layout.num_series,
+                "series_len": st.layout.series_len}
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(self.stats(), mesh={a: int(s) for a, s in self.mesh.shape.items()})
+        return d
+
+
+# ---------------------------------------------------------------------------
+# The engine: bucketed batching + compiled-plan LRU + telemetry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    plan_cache_size: int = 32
+    # explicit batch buckets (ascending); empty -> next power of two
+    bucket_sizes: tuple[int, ...] = ()
+    # pull per-query path/pruning stats to host after each call
+    collect_result_stats: bool = True
+
+
+class QueryEngine:
+    """A serving session over one :class:`SearchBackend`.
+
+    Every call pads the query batch up to a bucket size and dispatches a
+    cached AOT-compiled plan for (SearchConfig, bucket). Repeated serving
+    calls with the same statics therefore never retrace or recompile —
+    ``telemetry()["plan_cache"]`` proves it.
+    """
+
+    def __init__(self, backend: SearchBackend,
+                 config: EngineConfig | None = None):
+        self.backend = backend
+        self.config = config or EngineConfig()
+        self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._t = {
+            "calls": 0, "queries": 0, "hits": 0, "misses": 0, "evictions": 0,
+            "compile_s": 0.0, "exec_s": 0.0, "last_exec_s": 0.0,
+            "paths": np.zeros(4, np.int64), "path_unknown": 0,
+            "eapca_pr_sum": 0.0, "sax_pr_sum": 0.0, "stat_queries": 0,
+        }
+
+    # -- batching -----------------------------------------------------------
+
+    def _bucket(self, qn: int) -> int:
+        for b in sorted(self.config.bucket_sizes):
+            if qn <= b:
+                return b
+        # larger than every configured bucket (or none configured):
+        # next power of two keeps the distinct-shape count logarithmic
+        return max(1, 1 << (qn - 1).bit_length())
+
+    # -- the one call that matters ------------------------------------------
+
+    def knn(self, queries: jax.Array, k: int | None = None,
+            valid_rows: int | None = None, **overrides: Any) -> KnnResult:
+        """``valid_rows``: when the caller already padded the batch (e.g. a
+        slot-based server filling its wave), the number of leading real
+        queries — results are sliced and telemetry counted on those only."""
+        q = jnp.asarray(queries)
+        if q.ndim == 1:
+            q = q[None, :]
+        n = getattr(self.backend, "series_len", None)
+        if n and q.shape[1] != n:
+            raise ValueError(f"query length {q.shape[1]} != collection "
+                             f"series length {n}")
+        cfg = self.backend.resolve(k, overrides)
+        qn = q.shape[0] if valid_rows is None else valid_rows
+        if not 0 < qn <= q.shape[0]:
+            raise ValueError(f"valid_rows={valid_rows} out of range for "
+                             f"batch of {q.shape[0]}")
+        bucket = self._bucket(q.shape[0])
+        if bucket != q.shape[0]:
+            q = jnp.concatenate(
+                [q, jnp.zeros((bucket - q.shape[0], q.shape[1]), q.dtype)],
+                axis=0)
+
+        key = (cfg, bucket, q.shape[1], q.dtype.name)
+        plan = self._plans.get(key)
+        if plan is None:
+            t0 = time.perf_counter()
+            plan = self.backend.make_plan(
+                cfg, jax.ShapeDtypeStruct(q.shape, q.dtype))
+            self._t["compile_s"] += time.perf_counter() - t0
+            self._t["misses"] += 1
+            self._plans[key] = plan
+            while len(self._plans) > self.config.plan_cache_size:
+                self._plans.popitem(last=False)
+                self._t["evictions"] += 1
+        else:
+            self._t["hits"] += 1
+            self._plans.move_to_end(key)
+
+        t0 = time.perf_counter()
+        res = plan(q)
+        jax.block_until_ready(res.dists)
+        dt = time.perf_counter() - t0
+        self._t["exec_s"] += dt
+        self._t["last_exec_s"] = dt
+        self._t["calls"] += 1
+        self._t["queries"] += qn
+
+        if bucket != qn:
+            res = KnnResult(*[a[:qn] for a in res])
+        if self.config.collect_result_stats:
+            self._record(res)
+        return res
+
+    def _record(self, res: KnnResult) -> None:
+        path = np.asarray(res.path)
+        known = path >= 0
+        self._t["paths"] += np.bincount(path[known], minlength=4)[:4]
+        self._t["path_unknown"] += int((~known).sum())
+        if known.any():
+            self._t["eapca_pr_sum"] += float(np.asarray(res.eapca_pr)[known].sum())
+            self._t["sax_pr_sum"] += float(np.asarray(res.sax_pr)[known].sum())
+            self._t["stat_queries"] += int(known.sum())
+
+    # -- introspection ------------------------------------------------------
+
+    def telemetry(self) -> dict:
+        t = self._t
+        n_stat = max(t["stat_queries"], 1)
+        return {
+            "backend": self.backend.name,
+            "calls": t["calls"],
+            "queries": t["queries"],
+            "plan_cache": {
+                "hits": t["hits"], "misses": t["misses"],
+                "evictions": t["evictions"], "size": len(self._plans),
+                "capacity": self.config.plan_cache_size,
+                "compiles": t["misses"], "compile_s": t["compile_s"],
+            },
+            "latency_s": {
+                "total": t["exec_s"], "last": t["last_exec_s"],
+                "mean_per_call": t["exec_s"] / max(t["calls"], 1),
+                "mean_per_query": t["exec_s"] / max(t["queries"], 1),
+            },
+            "paths": {
+                "scan_eapca": int(t["paths"][0]),
+                "scan_sax": int(t["paths"][1]),
+                "pruned": int(t["paths"][2]),
+                "forced_scan": int(t["paths"][3]),
+                "unknown": t["path_unknown"],
+            },
+            "pruning": {
+                "eapca_mean": t["eapca_pr_sum"] / n_stat,
+                "sax_mean": t["sax_pr_sum"] / n_stat,
+            },
+        }
+
+    def stats(self) -> dict:
+        return self.backend.stats()
+
+    def describe(self) -> dict:
+        return {
+            "engine": {
+                "plan_cache_size": self.config.plan_cache_size,
+                "bucket_sizes": list(self.config.bucket_sizes) or "pow2",
+                "cached_plans": [
+                    {"k": key[0].k, "bucket": key[1], "series_len": key[2]}
+                    for key in self._plans],
+            },
+            "backend": self.backend.describe(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Name-based construction (benchmarks/run.py --backend, serve_knn CLI)
+# ---------------------------------------------------------------------------
+
+BACKEND_NAMES = ("local", "scan", "scan-mxu", "sharded")
+
+
+def make_backend(name: str, data: jax.Array, *,
+                 index_config: IndexConfig | None = None,
+                 search: SearchConfig | None = None,
+                 num_shards: int | None = None,
+                 mesh=None) -> SearchBackend:
+    """Build a backend over ``data`` by name.
+
+    ``local``/``sharded`` construct the Hercules index (or stacked indexes);
+    ``scan``/``scan-mxu`` serve the raw collection directly.
+    """
+    if name == "local":
+        cfg = index_config or IndexConfig(search=search or SearchConfig())
+        return LocalBackend(HerculesIndex.build(data, cfg))
+    if name in ("scan", "scan-mxu"):
+        scfg = search or (index_config.search if index_config else SearchConfig())
+        return ScanBackend(data, scfg, mxu=name == "scan-mxu")
+    if name == "sharded":
+        from repro.distributed.search import build_distributed_index
+        cfg = index_config or IndexConfig(search=search or SearchConfig())
+        shards = num_shards or len(jax.devices())
+        stacked = build_distributed_index(data, shards, cfg)
+        return ShardedBackend(stacked, mesh)
+    raise ValueError(f"unknown backend {name!r}; expected one of {BACKEND_NAMES}")

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.core import summaries as S
 from repro.core.layout import HerculesLayout, build_layout
-from repro.core.search import KnnResult, SearchConfig, approx_knn, exact_knn
+from repro.core.search import (KnnResult, SearchConfig, approx_knn, exact_knn,
+                               validate_runtime_config)
 from repro.core.tree import BuildConfig, HerculesTree, build_tree, tree_stats
 
 
@@ -64,9 +65,7 @@ class HerculesIndex:
         if k is not None or overrides:
             cfg = dataclasses.replace(cfg, **({"k": k} if k is not None else {}),
                                       **overrides)
-        if cfg.pad_multiple() != self.config.search.pad_multiple():
-            raise ValueError("chunk/scan_block overrides must preserve padding; "
-                             "rebuild the index with the target SearchConfig")
+        validate_runtime_config(cfg, self.layout.lrd.shape[0])
         return exact_knn(self.tree, self.layout, queries, cfg, self.max_depth)
 
     def knn_approx(self, queries: jax.Array, k: int | None = None,

@@ -62,6 +62,25 @@ class SearchConfig:
         return math.lcm(self.chunk, self.scan_block)
 
 
+def validate_runtime_config(cfg: SearchConfig, n_pad: int) -> None:
+    """Check per-call settings against a layout padded to ``n_pad`` rows.
+
+    The only thing a built layout bakes in is its padded row count; any
+    ``chunk``/``scan_block`` that *divides* ``n_pad`` is servable without a
+    rebuild (blocked reshapes and chunked slices stay exact — no ragged
+    tail). Every other SearchConfig field is a free per-call knob. This
+    replaces the older, stricter pad-multiple equality test, which rejected
+    valid combinations like halving ``chunk`` on an already-padded layout.
+    """
+    for field in ("chunk", "scan_block"):
+        val = getattr(cfg, field)
+        if val <= 0 or n_pad % val:
+            raise ValueError(
+                f"{field}={val} does not divide the padded collection size "
+                f"{n_pad}; pick a divisor of {n_pad} or rebuild the index "
+                f"with the target SearchConfig")
+
+
 class KnnResult(NamedTuple):
     dists: jax.Array       # (Q, k) squared ED, ascending
     positions: jax.Array   # (Q, k) layout (LRD) positions

@@ -1,0 +1,47 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way. Callers in this repo use the
+modern spelling (``from repro.distributed.compat import shard_map`` with
+``check_vma=``); the shim translates for whichever jax is installed.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: top-level export, kwarg is check_vma
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:  # older jax: experimental module, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    if check_vma is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with ``axis_types`` dropped on jax builds that
+    predate explicit axis types (everything is Auto there anyway)."""
+    import inspect
+
+    import jax
+
+    if "axis_types" in kwargs and \
+            "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        kwargs.pop("axis_types")
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` when the installed jax has axis types, else
+    ``None`` (to be passed through :func:`make_mesh`, which drops it)."""
+    import jax
+
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n

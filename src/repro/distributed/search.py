@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.distributed.compat import shard_map
 
 from repro.core.index import HerculesIndex, IndexConfig
 from repro.core.layout import HerculesLayout

@@ -13,15 +13,14 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.distributed.compat import auto_axis_types as _auto
+from repro.distributed.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes, axis_types=_auto(len(axes)))
 
 
 def make_host_mesh(model_axis: int = 1):
@@ -30,8 +29,8 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     if n % model_axis:
         raise ValueError(f"{n} devices not divisible by model={model_axis}")
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((n // model_axis, model_axis), ("data", "model"),
+                      axis_types=_auto(2))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -1,1 +1,4 @@
-from repro.serve.engine import ServeConfig, ServeEngine, greedy_sample  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    KnnAnswer, KnnServeConfig, KnnServeEngine, ServeConfig, ServeEngine,
+    SlotQueue, greedy_sample,
+)

@@ -1,16 +1,24 @@
-"""Batched decode serving loop (slot-based continuous batching, single host).
+"""Slot-based continuous-batching serving loops (single host).
 
-The production context the dry-run's ``prefill_32k``/``decode_32k`` cells
-lower: a fixed pool of B slots, each holding one request's cache region;
-finished requests free their slot for the next queued request. All slots
-share one jitted decode step (the cache is batched), so throughput is one
-model step per token across the whole batch — the standard continuous-
-batching execution model reduced to its JAX-native core.
+Two workload-specific engines share one execution model — a fixed pool of B
+slots served by one compiled program per wave, with finished requests freeing
+their slot for the next queued request:
+
+* :class:`ServeEngine` — batched LM decode (prefill + per-token decode steps
+  over any ModelDef), the production context the dry-run's ``prefill_32k`` /
+  ``decode_32k`` cells lower.
+* :class:`KnnServeEngine` — batched exact kNN over a
+  :class:`repro.core.engine.QueryEngine`: queued queries are drained in
+  waves of ``batch_slots``, each wave padded to the slot count so every wave
+  hits the engine's compiled-plan cache (one plan for the whole serving
+  session).
+
+Both inherit the submit/poll bookkeeping from :class:`SlotQueue`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +27,56 @@ import numpy as np
 from repro.models import ModelDef
 from repro.models.arch import ArchConfig
 
+
+class SlotQueue:
+    """Request bookkeeping shared by the slot-based engines: monotonically
+    increasing request ids, a FIFO of pending payloads, a result map.
+
+    Results are *claimed*: ``poll``/``drain``/``run`` hand each answer out
+    exactly once and drop it from the engine, so a long-running serving
+    session does not accumulate its whole answer history in memory."""
+
+    def __init__(self):
+        self._queue: list[dict] = []
+        self._results: dict[int, Any] = {}
+        self._next_id = 0
+        self._served = 0
+
+    def _enqueue(self, payload: dict) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        payload["id"] = rid
+        self._queue.append(payload)
+        return rid
+
+    def _take_wave(self, slots: int) -> list[dict]:
+        wave, self._queue = self._queue[:slots], self._queue[slots:]
+        return wave
+
+    def _requeue(self, wave: list[dict]) -> None:
+        self._queue[:0] = wave
+
+    def _complete(self, rid: int, result) -> None:
+        self._results[rid] = result
+        self._served += 1
+
+    def _collect(self) -> dict[int, Any]:
+        out, self._results = self._results, {}
+        return out
+
+    def pending(self) -> int:
+        """Requests submitted but not yet answered."""
+        return len(self._queue)
+
+    def poll(self, rid: int):
+        """Claim the result for ``rid``: returns it once, then None (also
+        None while the request is still queued)."""
+        return self._results.pop(rid, None)
+
+
+# ---------------------------------------------------------------------------
+# LM decode serving
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
@@ -35,27 +93,22 @@ def greedy_sample(logits: jax.Array, key=None, temperature: float = 0.0):
     return jnp.argmax(logits, axis=-1)
 
 
-class ServeEngine:
+class ServeEngine(SlotQueue):
     """Slot-based batch server over any ModelDef."""
 
     def __init__(self, model: ModelDef, cfg: ArchConfig, params: dict,
                  scfg: ServeConfig):
+        super().__init__()
         self.model = model
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self._decode = jax.jit(
             lambda p, t, c: model.decode_step(p, t, cfg, c))
-        self._queue: list[dict] = []
-        self._results: dict[int, list[int]] = {}
-        self._next_id = 0
 
     def submit(self, prompt: np.ndarray, extras: dict | None = None) -> int:
-        rid = self._next_id
-        self._next_id += 1
-        self._queue.append({"id": rid, "prompt": np.asarray(prompt),
-                            "extras": extras or {}})
-        return rid
+        return self._enqueue({"prompt": np.asarray(prompt),
+                              "extras": extras or {}})
 
     def _prefill_batch(self, requests: list[dict]):
         """Left-pad-free batched prefill: all prompts padded to max length
@@ -79,8 +132,7 @@ class ServeEngine:
         """Drain the queue in waves of ``batch_slots``; returns {id: tokens}."""
         scfg = self.scfg
         while self._queue:
-            wave = self._queue[: scfg.batch_slots]
-            self._queue = self._queue[scfg.batch_slots:]
+            wave = self._take_wave(scfg.batch_slots)
             logits, cache = self._prefill_batch(wave)
             tok = greedy_sample(logits[:, -1], temperature=scfg.temperature)
             out = [[int(t)] for t in np.asarray(tok)]
@@ -98,5 +150,92 @@ class ServeEngine:
                 if not live.any():
                     break
             for r, o in zip(wave, out):
-                self._results[r["id"]] = o
-        return dict(self._results)
+                self._complete(r["id"], o)
+        return self._collect()
+
+
+# ---------------------------------------------------------------------------
+# kNN query serving
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KnnServeConfig:
+    batch_slots: int = 32          # queries per wave (the slot pool)
+    k: int | None = None           # None -> the backend's configured k
+
+
+class KnnAnswer(NamedTuple):
+    dists: np.ndarray              # (k,) squared ED, ascending
+    ids: np.ndarray                # (k,) series ids
+    path: int                      # access path taken (-1 when unknown)
+
+
+class KnnServeEngine(SlotQueue):
+    """Continuous-batching front end for a :class:`QueryEngine`.
+
+    ``submit`` enqueues one query series and returns a request id; ``step``
+    serves one wave of up to ``batch_slots`` queued queries through the
+    engine (the wave is padded to the slot count, so a long-running session
+    compiles exactly one plan per (k, slot-count)); ``drain`` steps until
+    the queue is empty and returns every completed answer.
+    """
+
+    def __init__(self, engine, cfg: KnnServeConfig | None = None):
+        super().__init__()
+        self.engine = engine
+        self.cfg = cfg or KnnServeConfig()
+
+    def submit(self, query: np.ndarray, k: int | None = None,
+               **overrides: Any) -> int:
+        q = np.asarray(query)
+        if q.ndim != 1:
+            raise ValueError(f"submit() takes one query series, got {q.shape}")
+        return self._enqueue({"q": q, "k": k, "ov": overrides})
+
+    def step(self) -> int:
+        """Serve one wave; returns the number of requests answered. A wave
+        that fails (mixed configs, bad override, wrong query length) is put
+        back on the queue before the error propagates — no request is lost."""
+        slots = self.cfg.batch_slots
+        wave = self._take_wave(slots)
+        if not wave:
+            return 0
+        try:
+            # per-request k/overrides are grouped per wave: requests in one
+            # wave must agree (the common case is a uniform serving config)
+            k = wave[0]["k"] if wave[0]["k"] is not None else self.cfg.k
+            ov = wave[0]["ov"]
+            if any(r["k"] != wave[0]["k"] or r["ov"] != ov for r in wave[1:]):
+                raise ValueError("mixed k/overrides within one wave; "
+                                 "submit uniform waves or use separate engines")
+            q = np.stack([r["q"] for r in wave])
+            if len(wave) < slots:  # pad the partial tail wave to the slot pool
+                q = np.concatenate(
+                    [q, np.zeros((slots - len(wave), q.shape[1]), q.dtype)])
+            res = self.engine.knn(jnp.asarray(q), k=k,
+                                  valid_rows=len(wave), **ov)
+        except Exception:
+            self._requeue(wave)
+            raise
+        dists = np.asarray(res.dists)
+        ids = np.asarray(res.ids)
+        paths = np.asarray(res.path)
+        for i, r in enumerate(wave):
+            self._complete(r["id"], KnnAnswer(
+                dists=dists[i], ids=ids[i], path=int(paths[i])))
+        return len(wave)
+
+    def drain(self) -> dict[int, KnnAnswer]:
+        """Serve until the queue is empty; returns (and claims) every
+        unclaimed completed answer."""
+        while self.step():
+            pass
+        return self._collect()
+
+    def telemetry(self) -> dict:
+        t = self.engine.telemetry()
+        t["serving"] = {"pending": self.pending(),
+                        "served": self._served,
+                        "unclaimed": len(self._results),
+                        "batch_slots": self.cfg.batch_slots}
+        return t

@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim.
+
+Property-based tests use the real hypothesis API when it is installed
+(``pip install -r requirements-dev.txt``). On a clean machine the suite must
+still *collect and run*: the fallback below keeps the ``@settings``/``@given``
+decorator syntax importable and turns each property test into a single
+``pytest.skip`` — example-based tests in the same modules run unchanged.
+
+The skip stub deliberately has a ``(*args, **kwargs)`` signature (and no
+``functools.wraps``): pytest must not mistake the strategy parameters of the
+wrapped property for fixture requests.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every attribute is a
+        callable returning an inert placeholder (never drawn from)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):   # bare @settings
+            return args[0]
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipped(*a, **k):
+                pytest.skip("hypothesis not installed "
+                            "(see requirements-dev.txt)")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

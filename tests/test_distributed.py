@@ -14,6 +14,7 @@ from repro.configs import get_smoke
 from repro.core import (BuildConfig, IndexConfig, SearchConfig,
                         brute_force_knn)
 from repro.data import make_query_workload, random_walks
+from repro.distributed.compat import auto_axis_types, make_mesh
 from repro.distributed.search import build_distributed_index, distributed_knn
 from repro.distributed.sharding import param_spec, shard_params_tree
 from repro.models import get_model
@@ -69,8 +70,7 @@ class TestDistributedSearch:
         cfg = IndexConfig(build=BuildConfig(leaf_capacity=64),
                           search=SearchConfig(k=3, l_max=4, chunk=128,
                                               scan_block=256))
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",), axis_types=auto_axis_types(1))
         idx = build_distributed_index(data, 1, cfg)
         q = make_query_workload(jax.random.PRNGKey(1), data, 4, "5%")
         d, g = distributed_knn(idx, q, mesh)
@@ -87,13 +87,14 @@ class TestDistributedSearch:
             import sys; sys.path.insert(0, "src")
             import jax, numpy as np
             from repro.core import IndexConfig, BuildConfig, SearchConfig, brute_force_knn
+            from repro.distributed.compat import auto_axis_types, make_mesh
             from repro.distributed.search import build_distributed_index, distributed_knn
             from repro.data import random_walks, make_query_workload
             data = random_walks(jax.random.PRNGKey(0), 1600, 64)
             cfg = IndexConfig(build=BuildConfig(leaf_capacity=64),
                               search=SearchConfig(k=3, l_max=4, chunk=128, scan_block=256))
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh((4, 2), ("data", "model"),
+                             axis_types=auto_axis_types(2))
             idx = build_distributed_index(data, 8, cfg)
             q = make_query_workload(jax.random.PRNGKey(1), data, 4, "5%")
             d, g = distributed_knn(idx, q, mesh)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import BuildConfig, HerculesIndex, IndexConfig, SearchConfig
 from repro.core.dtw import dtw_distance, dtw_knn, keogh_envelope, lb_keogh

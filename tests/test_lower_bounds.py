@@ -5,7 +5,7 @@ This is the no-false-dismissal invariant the paper's exactness rests on.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import lower_bounds as LB
 from repro.core import summaries as S

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.distributed.compat import auto_axis_types, make_mesh
 from repro.distributed.pipeline import pipeline_forward, split_stages
 
 jax.config.update("jax_platform_name", "cpu")
@@ -16,8 +17,7 @@ jax.config.update("jax_platform_name", "cpu")
 class TestPipeline:
     def test_single_stage_degenerate(self):
         """P=1 pipeline == plain forward."""
-        mesh = jax.make_mesh((1,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("stage",), axis_types=auto_axis_types(1))
         w = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8)) * 0.3
 
         def stage_fn(params, x):
@@ -45,9 +45,9 @@ class TestPipeline:
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
             import sys; sys.path.insert(0, "src")
             import jax, jax.numpy as jnp, numpy as np
+            from repro.distributed.compat import auto_axis_types, make_mesh
             from repro.distributed.pipeline import pipeline_forward, split_stages
-            mesh = jax.make_mesh((4,), ("stage",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_mesh((4,), ("stage",), axis_types=auto_axis_types(1))
             L, d, mb, M = 8, 16, 4, 6
             ks = jax.random.split(jax.random.PRNGKey(0), L)
             w = jnp.stack([jax.random.normal(k, (d, d)) * 0.3 for k in ks])

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (BuildConfig, HerculesIndex, IndexConfig, SearchConfig,
                         brute_force_knn, pscan_knn)
@@ -163,7 +163,11 @@ class TestApproximate:
         q = make_query_workload(jax.random.PRNGKey(20), data, 8, "5%")
         d_approx, ids = idx.knn_approx(q, k=5)
         bf_d, _ = brute_force_knn(data, q, 5)
-        assert (np.asarray(d_approx) >= np.asarray(bf_d) - 1e-4).all()
+        # tolerance matches the suite's exactness convention: the brute-force
+        # oracle computes distances in matmul-identity form, whose fp32 noise
+        # is relative to the distance magnitude
+        bf = np.asarray(bf_d)
+        assert (np.asarray(d_approx) >= bf - 1e-3 - 1e-3 * np.abs(bf)).all()
 
     def test_approx_recall_improves_with_lmax(self, default_index):
         data, idx = default_index
