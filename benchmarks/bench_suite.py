@@ -13,7 +13,10 @@ pays.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.baselines import FlatSaxBackend
@@ -170,15 +173,21 @@ def bench_ablation(num=16384, n=128, nq=16):
 # --------------------------------------------------------------------------
 
 def bench_backends(backends=("local", "scan", "scan-mxu", "flat-sax"),
-                   num=16384, n=128, nq=16, k=1):
+                   num=16384, n=128, nq=16, k=1, kernel_mode="auto"):
     """The same workload through every named backend via QueryEngine —
-    the api_redesign's acceptance bench (identical call, exact answers)."""
+    the api_redesign's acceptance bench (identical call, exact answers).
+
+    ``kernel_mode`` flows into SearchConfig: ``auto`` serves Pallas on TPU
+    and the ref path elsewhere; ``interpret`` forces the kernel bodies
+    through the interpreter (the CI kernel-drift smoke).
+    """
     from repro.core import make_backend
 
     data = random_walks(jax.random.PRNGKey(11), num, n)
     q = make_query_workload(jax.random.PRNGKey(12), data, nq, "5%")
     cfg = IndexConfig(build=BuildConfig(leaf_capacity=128),
-                      search=SearchConfig(k=k, **_SEARCH))
+                      search=SearchConfig(k=k, kernel_mode=kernel_mode,
+                                          **_SEARCH))
     for name in backends:
         if name == "flat-sax":
             backend = FlatSaxBackend(data, cfg.search)
@@ -190,30 +199,82 @@ def bench_backends(backends=("local", "scan", "scan-mxu", "flat-sax"),
         t = time_call(lambda: eng.knn(q, k=k))
         pc = eng.telemetry()["plan_cache"]
         emit(f"backend_{name}", t / nq,
-             f"plan_hits={pc['hits']};compiles={pc['compiles']}")
+             f"plan_hits={pc['hits']};compiles={pc['compiles']}"
+             f";kernel_mode={kernel_mode}",
+             kernel_mode=kernel_mode)
 
 
 # --------------------------------------------------------------------------
-# kernel/throughput microbenches (XLA paths; Pallas validated in tests)
+# kernel microbenches: ref (jnp oracle) vs Pallas kernel, per op
 # --------------------------------------------------------------------------
 
-def bench_kernels(num=32768, n=128, nq=64):
+def bench_kernels(num=32768, n=128, nq=64, kernel_mode="auto"):
+    """Per-op ref-vs-kernel comparison for every kernel the engine routes to.
+
+    Each op emits a ``_ref`` row (jit'd jnp oracle), a ``_kernel`` row run in
+    the resolved ``kernel_mode``, and ``speedup_vs_ref`` in the derived field
+    and the JSON row — the perf-trajectory record of the kernelization win.
+    Under ``auto`` off-TPU the kernel row *is* the ref dispatch (speedup
+    ~1.0 by construction); on TPU it is the compiled Mosaic kernel. Answers
+    are asserted close before timing.
+    """
     from repro.core import pscan_knn
     from repro.core import summaries as S
+    from repro.kernels import ops, ref
+    from repro.kernels.compat import resolve_kernel_mode
 
+    mode = resolve_kernel_mode(kernel_mode)
     data = random_walks(jax.random.PRNGKey(10), num, n)
     q = data[:nq] + 0.01
     codes = S.isax(data, 16)
     q_paa = S.paa(q, 16)
 
+    b, t_len, h, dk = 4, 256, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(13), 6)
+    wr = jax.random.normal(ks[0], (b, t_len, h, dk))
+    wk = jax.random.normal(ks[1], (b, t_len, h, dk))
+    wv = jax.random.normal(ks[2], (b, t_len, h, dk))
+    ww = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t_len, h, dk)))
+    wu = jax.random.normal(ks[4], (h, dk))
+    ws = jnp.zeros((b, h, dk, dk))
+
+    # both sides jit'd: the comparison is XLA-oracle vs kernel dispatch,
+    # not eager-python overhead
+    ed_matrix_k = jax.jit(functools.partial(ops.ed_matrix, mode=mode))
+    ed_min_k = jax.jit(functools.partial(ops.ed_min, mode=mode))
+    lb_sax_k = jax.jit(functools.partial(ops.lb_sax, mode=mode),
+                       static_argnums=(2,))
+    wkv6_k = jax.jit(functools.partial(ops.wkv6, mode=mode))
+    ops_table = {
+        "ed_matrix": (jax.jit(ref.ed_matrix_ref),
+                      lambda: ed_matrix_k(q, data), (q, data)),
+        "ed_min": (jax.jit(ref.ed_min_ref),
+                   lambda: ed_min_k(q, data), (q, data)),
+        "lb_sax": (jax.jit(functools.partial(ref.lb_sax_matrix_ref,
+                                             series_len=n)),
+                   lambda: lb_sax_k(q_paa, codes, n), (q_paa, codes)),
+        "wkv6": (jax.jit(ref.wkv6_ref),
+                 lambda: wkv6_k(wr, wk, wv, ww, wu, ws),
+                 (wr, wk, wv, ww, wu, ws)),
+    }
+    for op, (ref_fn, kern_fn, args) in ops_table.items():
+        want = ref_fn(*args)
+        got = kern_fn()
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(got)[0], np.float32),
+            np.asarray(jax.tree.leaves(want)[0], np.float32),
+            rtol=1e-3, atol=1e-3)
+        t_ref = time_call(lambda: ref_fn(*args))
+        t_kern = time_call(kern_fn)
+        speedup = t_ref / max(t_kern, 1e-9)
+        emit(f"kern_{op}_ref", t_ref, "")
+        emit(f"kern_{op}_kernel", t_kern,
+             f"mode={mode};speedup_vs_ref={speedup:.2f}x",
+             op=op, kernel_mode=mode, speedup_vs_ref=round(speedup, 3))
+
     t = time_call(lambda: pscan_knn(data, q, k=1))
     flops = 3.0 * nq * num * n
     emit("kern_pscan_ed_scan", t, f"GFLOPs={flops / t / 1e3:.2f}")
-
-    from repro.core.lower_bounds import lb_sax_pairwise
-    t = time_call(lambda: lb_sax_pairwise(q_paa, codes, n))
-    emit("kern_lb_sax_matrix", t,
-         f"Gseries/s={nq * num / t / 1e3:.3f}")
 
     t = time_call(lambda: _build(data), warmup=0, iters=1)
     emit("kern_index_build", t, f"Mseries/s={num / t:.3f}")

@@ -3,13 +3,21 @@
 CPU numbers are *directional* (the paper's wall-clock claims are validated as
 ordering/pruning behaviour here; TPU-targeted absolutes live in the §Roofline
 terms from the dry-run artifacts).
+
+Every :func:`emit` call is also recorded as a structured row (with any extra
+keyword fields, e.g. ``speedup_vs_ref`` from the kernel benches); a run can
+dump them with :func:`write_json` (``benchmarks.run --json``) so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
+
+_ROWS: list[dict] = []
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
@@ -29,5 +37,18 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
     return float(np.median(times) * 1e6)
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
+    """Print one CSV row and record it (plus ``extra`` fields) for --json."""
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived, **extra})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def rows() -> list[dict]:
+    return list(_ROWS)
+
+
+def write_json(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump({"schema": "bench_rows/v1", "rows": _ROWS}, f, indent=2)
+    print(f"# wrote {len(_ROWS)} rows to {path}", flush=True)

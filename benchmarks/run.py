@@ -1,20 +1,30 @@
 """Benchmark entry point: one function per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--quick] [--backend NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--backend NAME]
+[--kernel-mode MODE] [--json PATH]``
 Prints ``name,us_per_call,derived`` CSV (benchmarks verify exactness of every
 answer against brute force before timing).
 
 ``--backend`` selects a single backend by name (local | scan | scan-mxu |
 flat-sax | sharded | all) and runs only the unified-surface backend
 comparison for it; without the flag the full figure suite runs.
+
+``--kernel-mode`` (auto | pallas | interpret | ref) selects the Pallas
+dispatch for the benched SearchConfigs — ``--backend scan --kernel-mode
+interpret`` is the CI smoke that streams the scan through the kernel bodies.
+
+``--json`` additionally writes every emitted row (including the per-op
+``speedup_vs_ref`` fields from ``bench_kernels``) as structured JSON.
 """
 from __future__ import annotations
 
 import argparse
 
 from benchmarks import bench_suite as B
+from benchmarks.common import write_json
 
 _BACKEND_CHOICES = ("local", "scan", "scan-mxu", "flat-sax", "sharded", "all")
+_MODE_CHOICES = ("auto", "pallas", "interpret", "ref")
 
 
 def main(argv=None) -> None:
@@ -24,6 +34,10 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", choices=_BACKEND_CHOICES, default=None,
                     help="run only the backend comparison, for this backend "
                          "('all' = every backend) through the QueryEngine")
+    ap.add_argument("--kernel-mode", choices=_MODE_CHOICES, default="auto",
+                    help="Pallas kernel dispatch for the benched configs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all emitted rows as JSON")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -31,17 +45,16 @@ def main(argv=None) -> None:
         names = (("local", "scan", "scan-mxu", "flat-sax")
                  if args.backend == "all" else (args.backend,))
         size = dict(num=4096, nq=8) if args.quick else {}
-        B.bench_backends(backends=names, **size)
-        return
-    if args.quick:
+        B.bench_backends(backends=names, kernel_mode=args.kernel_mode, **size)
+    elif args.quick:
         B.bench_scalability_size(sizes=(2048, 8192), nq=8)
         B.bench_series_length(lengths=(64, 128), num=4096, nq=4)
         B.bench_difficulty(num=8192, nq=8)
         B.bench_k(num=8192, nq=4, ks=(1, 10))
         B.bench_ablation(num=8192, nq=8)
         B.bench_approx(num=8192, nq=8)
-        B.bench_backends(num=4096, nq=8)
-        B.bench_kernels(num=16384, nq=32)
+        B.bench_backends(num=4096, nq=8, kernel_mode=args.kernel_mode)
+        B.bench_kernels(num=16384, nq=32, kernel_mode=args.kernel_mode)
     else:
         B.bench_scalability_size()
         B.bench_series_length()
@@ -49,8 +62,10 @@ def main(argv=None) -> None:
         B.bench_k()
         B.bench_ablation()
         B.bench_approx()
-        B.bench_backends()
-        B.bench_kernels()
+        B.bench_backends(kernel_mode=args.kernel_mode)
+        B.bench_kernels(kernel_mode=args.kernel_mode)
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -17,8 +17,10 @@ cache, and telemetry. See README.md for the full tour.
 """
 from repro.core.engine import (  # noqa: F401
     BACKEND_NAMES, EngineConfig, LocalBackend, QueryEngine, ScanBackend,
-    SearchBackend, ShardedBackend, dense_scan_knn, make_backend,
+    SearchBackend, ShardedBackend, dense_scan_knn, kernel_scan_knn,
+    make_backend,
 )
+from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401
 from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
 from repro.core.search import (  # noqa: F401
     KnnResult, SearchConfig, brute_force_knn, pscan_knn,

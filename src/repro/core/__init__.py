@@ -13,5 +13,8 @@ from repro.core.tree import (  # noqa: F401
 # through a backend-agnostic QueryEngine (compiled-plan cache + telemetry).
 from repro.core.engine import (  # noqa: F401
     BACKEND_NAMES, EngineConfig, LocalBackend, QueryEngine, ScanBackend,
-    SearchBackend, ShardedBackend, dense_scan_knn, make_backend,
+    SearchBackend, ShardedBackend, dense_scan_knn, kernel_scan_knn,
+    make_backend,
 )
+# Kernel execution-mode policy (SearchConfig.kernel_mode values).
+from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401

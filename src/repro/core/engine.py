@@ -51,6 +51,8 @@ import numpy as np
 from repro.core.index import HerculesIndex, IndexConfig
 from repro.core.search import (INF, KnnResult, SearchConfig, _merge_topk,
                                exact_knn, pscan_knn, validate_runtime_config)
+from repro.kernels import ops as kops
+from repro.kernels.compat import resolve_kernel_mode
 
 
 @runtime_checkable
@@ -222,12 +224,76 @@ def dense_scan_knn(data: jax.Array, queries: jax.Array, k: int = 1,
     return jax.lax.map(one, queries)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "block", "mode"))
+def kernel_scan_knn(data: jax.Array, queries: jax.Array, k: int = 1,
+                    block: int = 4096, mode: str = "pallas"):
+    """Blocked exact scan through the Pallas ED kernels (``kernels/ops``).
+
+    Candidate *selection* runs on the kernels — the fused :func:`ops.ed_min`
+    1-NN scan for ``k == 1`` (the paper's dominant query), blocked
+    :func:`ops.ed_matrix` + per-block top-k otherwise. The *reported*
+    distances for selected rows are always recomputed in difference form
+    (``sum((s - q)^2)``) — the same arithmetic as every other backend path —
+    and for ``k > 1`` the cross-block running top-k merges those exact
+    values through the shared :func:`_merge_topk`, so kernel arithmetic
+    influences at most the within-block candidate choice. Answers match
+    :func:`dense_scan_knn` bit-for-bit unless the matmul-identity fp32
+    error exceeds the distance gap at a top-k boundary (the ``scan-mxu``
+    caveat; asserted exactly on the parity workloads). Returns (Q, k)
+    dists and positions.
+    """
+    num, n = data.shape
+    qn = queries.shape[0]
+
+    def exact_d(p):
+        """Difference-form distances for selected positions (-1/pad -> inf)."""
+        rows = data[jnp.clip(p, 0, num - 1)]                     # (Q, k, n)
+        d = jnp.sum(jnp.square(rows - queries[:, None, :]), axis=-1)
+        return jnp.where((p >= 0) & (p < num), d, INF)
+
+    if k == 1:
+        # valid_n masking in the kernel guarantees a real row wins the min
+        _, amin = kops.ed_min(queries, data, mode=mode)
+        p_top = amin[:, None].astype(jnp.int32)                  # (Q, 1)
+        return exact_d(p_top), p_top
+
+    n_pad = -(-num // block) * block
+    padded = data if n_pad == num else jnp.concatenate(
+        [data, jnp.zeros((n_pad - num, n), data.dtype)], axis=0)
+    blocks3 = padded.reshape(n_pad // block, block, n)
+    merge = jax.vmap(functools.partial(_merge_topk, k=k))
+
+    def body(carry, blk):
+        d_top, p_top, base = carry
+        d = kops.ed_matrix(queries, blk, mode=mode)              # (Q, block)
+        pos = base + jnp.arange(block, dtype=jnp.int32)
+        d = jnp.where((pos < num)[None, :], d, INF)
+        _, idx = jax.lax.top_k(-d, k)                            # (Q, k)
+        cand = jnp.where(jnp.take_along_axis(d, idx, axis=1) < INF,
+                         pos[idx], -1)
+        d_top, p_top = merge(d_top, p_top, exact_d(cand), cand)
+        return (d_top, p_top, base + block), None
+
+    d0 = jnp.full((qn, k), INF)
+    p0 = jnp.full((qn, k), -1, jnp.int32)
+    (d_top, p_top, _), _ = jax.lax.scan(body, (d0, p0, jnp.int32(0)), blocks3)
+    return d_top, p_top
+
+
 class ScanBackend(BackendBase):
     """Dense blocked scan over the raw collection (the PSCAN baseline).
 
-    ``mxu=False`` (default): difference-form distances, bit-identical to
-    :class:`LocalBackend`. ``mxu=True``: matmul-identity distances on the
-    MXU (fastest dense path; equal up to fp32 rounding).
+    Arithmetic selection, in priority order:
+
+    * ``cfg.kernel_mode`` *explicitly* ``pallas``/``interpret`` (or ``auto``
+      resolving to Pallas with ``mxu=False``): the scan runs on the ED
+      kernels via :func:`kernel_scan_knn` — reported distances are
+      recomputed in difference form, so answers match the reference path.
+    * ``mxu=True``: matmul-identity distances on the MXU via XLA
+      (:func:`pscan_knn`; equal up to fp32 rounding). Wins over the
+      implicit ``auto`` resolution, never over an explicit Pallas request.
+    * otherwise: difference-form :func:`dense_scan_knn`, bit-identical to
+      :class:`LocalBackend`.
     """
 
     name = "scan"
@@ -255,16 +321,26 @@ class ScanBackend(BackendBase):
         # identity layout (pos == id); path 3 = forced scan, everything read
         return self._fill_result(d, p, p, path=3, accessed=self.data.shape[0])
 
-    def _fn(self):
-        return pscan_knn if self.mxu else dense_scan_knn
+    def _fn_args(self, cfg):
+        """(jitted fn, static args after (data, queries)) for this config.
+
+        ``mxu=True`` is an explicit arithmetic choice, so it wins over the
+        implicit ``kernel_mode="auto"`` resolution; an *explicit* Pallas
+        mode (``pallas``/``interpret``) wins over ``mxu``.
+        """
+        mode = resolve_kernel_mode(cfg.kernel_mode)
+        if mode != "ref" and not (self.mxu and cfg.kernel_mode == "auto"):
+            return kernel_scan_knn, (cfg.k, cfg.scan_block, mode)
+        return (pscan_knn if self.mxu else dense_scan_knn), \
+            (cfg.k, cfg.scan_block)
 
     def _bind(self, cfg):
-        return lambda q: self._result(
-            *self._fn()(self.data, q, cfg.k, cfg.scan_block))
+        fn, args = self._fn_args(cfg)
+        return lambda q: self._result(*fn(self.data, q, *args))
 
     def make_plan(self, cfg, q_struct):
-        compiled = self._fn().lower(
-            self.data, q_struct, cfg.k, cfg.scan_block).compile()
+        fn, args = self._fn_args(cfg)
+        compiled = fn.lower(self.data, q_struct, *args).compile()
         return lambda q: self._result(*compiled(self.data, q))
 
     def stats(self) -> dict:

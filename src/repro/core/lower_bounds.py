@@ -70,18 +70,17 @@ def lb_sax(q_paa: jax.Array, codes: jax.Array, series_len: int,
     ``q_paa``: (..., m) query PAA values.
     ``codes``: (..., m) uint8 iSAX codes (broadcast-compatible with q_paa).
     Returns broadcast shape minus the last axis, squared lower bound.
+
+    This is the XLA reference form; the engine's phase-3 pruning dispatches
+    to the Pallas kernel via ``repro.kernels.ops.lb_sax`` when
+    ``SearchConfig.kernel_mode`` resolves to a Pallas mode (see
+    ``core/search.py``).
     """
     m = q_paa.shape[-1]
     lo, hi = S.isax_cell_bounds(codes, alphabet)
     d = jnp.maximum(jnp.maximum(lo - q_paa, q_paa - hi), 0.0)
     seg_len = series_len / m
     return seg_len * jnp.sum(jnp.square(d), axis=-1)
-
-
-def lb_sax_pairwise(q_paa: jax.Array, codes: jax.Array, series_len: int,
-                    alphabet: int = S.SAX_ALPHABET) -> jax.Array:
-    """All-pairs squared LB_SAX: queries (Q, m) x codes (N, m) -> (Q, N)."""
-    return lb_sax(q_paa[:, None, :], codes[None, :, :], series_len, alphabet)
 
 
 # ---------------------------------------------------------------------------

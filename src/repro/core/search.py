@@ -37,6 +37,8 @@ from repro.core import lower_bounds as LB
 from repro.core import summaries as S
 from repro.core.layout import HerculesLayout
 from repro.core.tree import HerculesTree, route_to_leaf
+from repro.kernels import ops as kops
+from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +58,13 @@ class SearchConfig:
                                  # probes: XLA counts scan bodies once)
     refine_select: str = "argsort"   # 'argsort' (full sort) | 'topk'
     topk_budget_chunks: int = 32     # candidate budget C = chunks * chunk
+    kernel_mode: str = "auto"    # Pallas dispatch: auto | pallas | interpret
+                                 # | ref (kernels/compat.py owns the policy)
+
+    def __post_init__(self):
+        if self.kernel_mode not in KERNEL_MODES:
+            raise ValueError(f"kernel_mode={self.kernel_mode!r}; expected "
+                             f"one of {KERNEL_MODES}")
 
     def pad_multiple(self) -> int:
         import math
@@ -274,7 +283,19 @@ def _query_one(q, tree: HerculesTree, layout: HerculesLayout,
     series_in_cand = leaf_mask_pad[layout.series_leaf_rank]  # (N_pad,)
 
     q_paa = S.paa(q[None], layout.lsd.shape[1])[0]
-    lb_s = LB.lb_sax(q_paa, layout.lsd, n)           # (N_pad,)
+    kmode = resolve_kernel_mode(cfg.kernel_mode)
+    if kmode == "ref":
+        lb_s = LB.lb_sax(q_paa, layout.lsd, n)       # (N_pad,)
+    else:
+        # the paper's phase-3 LSDFile stream: the Pallas LB_SAX (MINDIST)
+        # kernel over the whole uint8 sidecar. LB values gate pruning only
+        # (with lb_slack guarding fp32 rounding), so exact answers are
+        # preserved for any kernel arithmetic. The single query row is
+        # padded to the kernel's 8-row minimum tile — on TPU that is free
+        # (the VPU/MXU processes >= 8 sublanes per op regardless), and it
+        # keeps LB memory at (N_pad,) per in-flight query instead of
+        # materializing a (Q, N_pad) matrix outside the lax.map.
+        lb_s = kops.lb_sax(q_paa[None, :], layout.lsd, n, mode=kmode)[0]
     leaf_lb_pad = jnp.concatenate([leaf_lb, jnp.full((1,), INF)])
     lb_leaf_series = leaf_lb_pad[layout.series_leaf_rank]
 

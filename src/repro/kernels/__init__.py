@@ -1,8 +1,12 @@
 # Pallas TPU kernels for the compute hot-spots the paper optimizes with SIMD
 # (exact-distance scans, LB_SAX filtering) plus the ssm-arch WKV recurrence.
-# Validated in interpret mode on CPU; ops.py wrappers fall back to ref.py
-# oracles for XLA-only paths (e.g. the CPU dry-run lowering).
-from repro.kernels import ops, ref  # noqa: F401
+# Engine code calls the ops.py wrappers, which dispatch by kernel mode
+# (auto | pallas | interpret | ref; compat.py owns the policy and the
+# pltpu version shims) and tile/pad for the engine's ragged layouts.
+from repro.kernels import compat, ops, ref  # noqa: F401
+from repro.kernels.compat import (  # noqa: F401
+    KERNEL_MODES, pallas_available, resolve_kernel_mode,
+)
 from repro.kernels.ed import ed_matrix, ed_min  # noqa: F401
 from repro.kernels.lb_sax import lb_sax_matrix  # noqa: F401
 from repro.kernels.wkv6 import wkv6  # noqa: F401

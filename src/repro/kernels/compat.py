@@ -1,0 +1,68 @@
+"""Version-compat shims for Pallas TPU APIs that moved between jax releases
+(the kernels' analogue of ``distributed/compat.py``).
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` (and the
+class itself moved around) across the jax 0.4.x -> 0.5+ window; kernels in
+this repo construct their compiler params through :func:`compiler_params`,
+which targets whichever class the installed jax exports and silently drops
+kwargs that class does not know about (older jax builds predate e.g.
+``serialization_format``). This is the single place new pltpu drift gets
+absorbed — kernels themselves never touch ``pltpu.*CompilerParams`` directly.
+
+Also exported here:
+
+* :data:`KERNEL_MODES` / :func:`resolve_kernel_mode` — the engine-facing
+  execution-mode policy (``auto | pallas | interpret | ref``). ``auto``
+  resolves per-platform: compiled Pallas on TPU, the jnp reference path
+  everywhere Pallas/Mosaic is unavailable (CPU/GPU). ``interpret`` runs the
+  same kernel bodies through the Pallas interpreter (CI's differential
+  conformance mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+try:  # jax >= 0.5: the class is pltpu.CompilerParams
+    _CompilerParams = pltpu.CompilerParams
+except AttributeError:  # jax 0.4.x: pltpu.TPUCompilerParams
+    _CompilerParams = pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    """Construct the installed jax's TPU compiler-params object, dropping any
+    kwarg this jax's class does not have a field for."""
+    fields = {f.name for f in dataclasses.fields(_CompilerParams)}
+    return _CompilerParams(**{k: v for k, v in kwargs.items() if k in fields})
+
+
+# ---------------------------------------------------------------------------
+# Kernel execution-mode policy
+# ---------------------------------------------------------------------------
+
+KERNEL_MODES = ("auto", "pallas", "interpret", "ref")
+
+
+def pallas_available() -> bool:
+    """Whether compiled (Mosaic) Pallas kernels can run on this platform."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_kernel_mode(mode: str = "auto") -> str:
+    """Resolve a requested kernel mode to a concrete one of
+    ``pallas | interpret | ref``.
+
+    ``auto`` picks compiled Pallas on TPU and falls back to the ``ref``
+    oracles (plain XLA) where Mosaic cannot compile — the engine hot path
+    stays correct on every platform without configuration. ``interpret`` is
+    never auto-selected: it exists for differential testing (same kernel
+    body, Pallas interpreter) and is orders of magnitude slower than ``ref``.
+    """
+    if mode not in KERNEL_MODES:
+        raise ValueError(
+            f"kernel_mode={mode!r}; expected one of {KERNEL_MODES}")
+    if mode == "auto":
+        return "pallas" if pallas_available() else "ref"
+    return mode

@@ -32,11 +32,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import compiler_params
+
 
 DEFAULT_BQ = 128
 DEFAULT_BN = 512
 DEFAULT_BK = 128
-_BIG = 3.0e38  # python float: jnp constants may not be captured by kernels
 
 
 def _ed_matrix_kernel(q_ref, s_ref, out_ref):
@@ -55,14 +56,22 @@ def _ed_matrix_kernel(q_ref, s_ref, out_ref):
 
 
 def _ed_min_kernel(q_ref, s_ref, dmin_ref, amin_ref, acc_ref, *, bn: int,
-                   nk: int):
-    """Grid (iq, jn, kk). acc_ref: VMEM scratch (bq, bn) partial distances."""
+                   nk: int, valid_n: int):
+    """Grid (iq, jn, kk). acc_ref: VMEM scratch (bq, bn) partial distances.
+
+    ``valid_n``: logical series count — columns at or past it are padding
+    and are masked to ``+inf`` before the fold, so ragged collections never
+    need sentinel rows (which break down for adversarial input magnitudes).
+    """
     jn = pl.program_id(1)
     kk = pl.program_id(2)
 
     @pl.when((jn == 0) & (kk == 0))
     def _init_out():
-        dmin_ref[...] = jnp.full_like(dmin_ref, _BIG)
+        # +inf, not a finite sentinel: real distances can land anywhere up
+        # to and including inf, and the strict-< fold must still admit them
+        # (all-inf collections then match the oracle's argmin of 0)
+        dmin_ref[...] = jnp.full_like(dmin_ref, jnp.inf)
         amin_ref[...] = jnp.zeros_like(amin_ref)
 
     @pl.when(kk == 0)
@@ -80,6 +89,8 @@ def _ed_min_kernel(q_ref, s_ref, dmin_ref, amin_ref, acc_ref, *, bn: int,
     @pl.when(kk == nk - 1)
     def _fold():
         d = acc_ref[...]                                       # (bq, bn)
+        cols = jn * bn + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+        d = jnp.where(cols < valid_n, d, jnp.inf)
         local_min = jnp.min(d, axis=1)
         local_arg = jnp.argmin(d, axis=1).astype(jnp.int32) + jn * bn
         better = local_min < dmin_ref[...]
@@ -105,22 +116,28 @@ def ed_matrix(queries: jax.Array, series: jax.Array,
         ],
         out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qn, sn), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(queries, series)
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bn", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "bk", "valid_n",
+                                             "interpret"))
 def ed_min(queries: jax.Array, series: jax.Array,
            bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+           valid_n: int | None = None,
            interpret: bool = False) -> tuple[jax.Array, jax.Array]:
-    """Fused 1-NN scan: returns ((Q,) min squared ED, (Q,) argmin)."""
+    """Fused 1-NN scan: returns ((Q,) min squared ED, (Q,) argmin).
+
+    ``valid_n``: logical (unpadded) series count; rows at or past it never
+    win the min. Defaults to every row being live."""
     qn, n = queries.shape
     sn = series.shape[0]
     nk = n // bk
     grid = (qn // bq, sn // bn, nk)
-    kernel = functools.partial(_ed_min_kernel, bn=bn, nk=nk)
+    kernel = functools.partial(_ed_min_kernel, bn=bn, nk=nk,
+                               valid_n=sn if valid_n is None else valid_n)
     dmin, amin = pl.pallas_call(
         kernel,
         grid=grid,
@@ -137,7 +154,7 @@ def ed_min(queries: jax.Array, series: jax.Array,
             jax.ShapeDtypeStruct((qn,), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(queries, series)

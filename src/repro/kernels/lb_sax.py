@@ -20,9 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import summaries as S
+from repro.kernels.compat import compiler_params
 
 DEFAULT_BQ = 8
 DEFAULT_BN = 1024
@@ -77,7 +77,7 @@ def lb_sax_matrix(q_paa: jax.Array, codes: jax.Array, series_len: int,
         ],
         out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qn, sn), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q_paa, codes, lo_tab, hi_tab)

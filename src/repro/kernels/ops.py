@@ -1,17 +1,27 @@
-"""jit'd public wrappers around the Pallas kernels (padding + dispatch).
+"""Public wrappers around the Pallas kernels (mode dispatch + ragged tiling).
 
-These are the entry points the rest of the framework calls. Each wrapper:
-  * pads inputs up to block multiples (masking semantics preserved),
-  * dispatches to the Pallas kernel (``interpret=True`` on CPU — the kernels
-    target TPU; interpret mode executes the same kernel body for validation),
-  * slices the result back to logical shapes.
+These are the entry points the rest of the framework calls — the engine hot
+path (``ScanBackend`` ED, ``core/search.py`` LB_SAX pruning) and the
+conformance suite both go through here. Each wrapper:
 
-``use_pallas=False`` falls back to the ref.py oracle — that is also what the
-dry-run lowers (XLA path) so CPU compilation never depends on Mosaic.
+  * resolves the execution **mode** (``auto | pallas | interpret | ref``,
+    see :func:`repro.kernels.compat.resolve_kernel_mode`) — ``ref`` runs the
+    ref.py oracle (plain XLA; what the dry-run lowers on CPU), ``pallas``
+    the compiled Mosaic kernel, ``interpret`` the same kernel body on the
+    Pallas interpreter (differential testing);
+  * picks block shapes that fit the *engine's* layouts: row blocks prefer
+    divisors of the padded row count (``validate_runtime_config`` guarantees
+    chunk/scan_block divide it), so kernel tiles line up with the layout and
+    no row padding is materialized on the aligned path;
+  * pads any genuinely ragged remainder up to block multiples (masking
+    semantics preserved — ``ed_min`` masks padded rows *inside* the kernel
+    by logical count, so no sentinel values enter the arithmetic) and slices
+    the result back to logical shapes.
+
+The legacy ``use_pallas=``/``interpret=`` kwargs remain accepted (mapped
+onto modes) so pre-engine callers and tests keep working unchanged.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +29,37 @@ import jax.numpy as jnp
 from repro.kernels import ed as _ed
 from repro.kernels import lb_sax as _lb
 from repro.kernels import ref as _ref
+from repro.kernels.compat import (KERNEL_MODES, pallas_available,  # noqa: F401
+                                  resolve_kernel_mode)
 
-_PAD_DIST = 3.0e38
+
+def _resolve(mode: str | None, use_pallas: bool, interpret: bool | None) -> str:
+    """Mode resolution with legacy-kwarg fallback.
+
+    Explicit ``mode`` wins. Otherwise the historical contract applies:
+    ``use_pallas=False`` -> ref; else the kernel runs, interpreted on
+    non-TPU platforms (``interpret=None``) or as forced by ``interpret=``.
+    """
+    if mode is not None:
+        return resolve_kernel_mode(mode)
+    if not use_pallas:
+        return "ref"
+    if interpret is None:
+        interpret = not pallas_available()
+    return "interpret" if interpret else "pallas"
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _row_block(n_rows: int, target: int, floor: int) -> int:
+    """Row-block size for an ``n_rows``-row operand: prefer a divisor of
+    ``n_rows`` near ``target`` (engine layouts are padded so chunk/scan_block
+    divide them — aligned tiles need no padding), else fall back to
+    ``target`` and let the caller pad the remainder."""
+    b = min(target, max(floor, n_rows))
+    while b > floor and n_rows % b:
+        b //= 2
+    if n_rows % b == 0:
+        return b
+    return min(target, max(floor, n_rows))
 
 
 def _pad_rows(x: jax.Array, mult: int, value: float = 0.0) -> jax.Array:
@@ -36,71 +71,115 @@ def _pad_rows(x: jax.Array, mult: int, value: float = 0.0) -> jax.Array:
     return jnp.concatenate([x, pad], axis=0)
 
 
-def ed_matrix(queries: jax.Array, series: jax.Array, *,
-              bq: int | None = None, bn: int | None = None,
-              bk: int | None = None, use_pallas: bool = True,
-              interpret: bool | None = None) -> jax.Array:
-    """(Q, n) x (N, n) -> (Q, N) squared ED. Pads freely; exact result."""
-    if not use_pallas:
-        return _ref.ed_matrix_ref(queries, series)
-    interpret = _on_cpu() if interpret is None else interpret
-    q0, s0 = queries.shape[0], series.shape[0]
-    n = queries.shape[1]
-    bq = bq or min(_ed.DEFAULT_BQ, max(8, q0))
-    bn = bn or min(_ed.DEFAULT_BN, max(128, s0))
-    bk = bk or min(_ed.DEFAULT_BK, n)
-    q = _pad_rows(queries, bq)
-    s = _pad_rows(series, bn)
+def _pad_len(q: jax.Array, s: jax.Array, bk: int):
+    """Pad the series-length axis with zeros (0 contribution to norms/dot)."""
+    n = q.shape[1]
     if n % bk:
-        # pad length with zeros: contributes 0 to both norms and dot
         extra = -(-n // bk) * bk - n
         q = jnp.concatenate([q, jnp.zeros((q.shape[0], extra), q.dtype)], 1)
         s = jnp.concatenate([s, jnp.zeros((s.shape[0], extra), s.dtype)], 1)
-    out = _ed.ed_matrix(q, s, bq=bq, bn=bn, bk=bk, interpret=interpret)
+    return q, s
+
+
+def ed_matrix(queries: jax.Array, series: jax.Array, *,
+              bq: int | None = None, bn: int | None = None,
+              bk: int | None = None, mode: str | None = None,
+              use_pallas: bool = True,
+              interpret: bool | None = None) -> jax.Array:
+    """(Q, n) x (N, n) -> (Q, N) squared ED. Pads freely; exact result."""
+    mode = _resolve(mode, use_pallas, interpret)
+    if mode == "ref":
+        return _ref.ed_matrix_ref(queries, series)
+    q0, s0 = queries.shape[0], series.shape[0]
+    n = queries.shape[1]
+    bq = bq or _row_block(q0, _ed.DEFAULT_BQ, 8)
+    bn = bn or _row_block(s0, _ed.DEFAULT_BN, 128)
+    bk = bk or min(_ed.DEFAULT_BK, n)
+    q = _pad_rows(queries, bq)
+    s = _pad_rows(series, bn)
+    q, s = _pad_len(q, s, bk)
+    out = _ed.ed_matrix(q, s, bq=bq, bn=bn, bk=bk,
+                        interpret=mode == "interpret")
     return out[:q0, :s0]
 
 
 def ed_min(queries: jax.Array, series: jax.Array, *,
            bq: int | None = None, bn: int | None = None,
-           bk: int | None = None, use_pallas: bool = True,
+           bk: int | None = None, mode: str | None = None,
+           use_pallas: bool = True,
            interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """Fused 1-NN: ((Q,) min squared ED, (Q,) argmin over the N axis)."""
-    if not use_pallas:
+    mode = _resolve(mode, use_pallas, interpret)
+    if mode == "ref":
         return _ref.ed_min_ref(queries, series)
-    interpret = _on_cpu() if interpret is None else interpret
     q0, s0 = queries.shape[0], series.shape[0]
     n = queries.shape[1]
-    bq = bq or min(_ed.DEFAULT_BQ, max(8, q0))
-    bn = bn or min(_ed.DEFAULT_BN, max(128, s0))
+    bq = bq or _row_block(q0, _ed.DEFAULT_BQ, 8)
+    bn = bn or _row_block(s0, _ed.DEFAULT_BN, 128)
     bk = bk or min(_ed.DEFAULT_BK, n)
     q = _pad_rows(queries, bq)
-    # pad series rows with +inf-distance sentinels: use a huge constant row
-    # (norm dominates) so padded rows never win the min
-    s = _pad_rows(series, bn, value=0.0)
-    pad_rows = s.shape[0] - s0
-    if pad_rows:
-        sentinel = jnp.full((pad_rows, s.shape[1]), 1.0e18, s.dtype)
-        s = jnp.concatenate([s[:s0], sentinel], axis=0)
-    if n % bk:
-        extra = -(-n // bk) * bk - n
-        q = jnp.concatenate([q, jnp.zeros((q.shape[0], extra), q.dtype)], 1)
-        s = jnp.concatenate([s, jnp.zeros((s.shape[0], extra), s.dtype)], 1)
-    dmin, amin = _ed.ed_min(q, s, bq=bq, bn=bn, bk=bk, interpret=interpret)
+    # padded series rows are zeros; the kernel masks them out by logical
+    # count (valid_n), so no sentinel magnitudes enter the arithmetic
+    s = _pad_rows(series, bn)
+    q, s = _pad_len(q, s, bk)
+    dmin, amin = _ed.ed_min(q, s, bq=bq, bn=bn, bk=bk, valid_n=s0,
+                            interpret=mode == "interpret")
     return dmin[:q0], amin[:q0]
 
 
 def lb_sax_matrix(q_paa: jax.Array, codes: jax.Array, series_len: int, *,
+                  alphabet: int | None = None,
                   bq: int | None = None, bn: int | None = None,
-                  use_pallas: bool = True,
+                  mode: str | None = None, use_pallas: bool = True,
                   interpret: bool | None = None) -> jax.Array:
     """(Q, m) x (N, m) uint8 -> (Q, N) squared LB_SAX."""
-    if not use_pallas:
-        return _ref.lb_sax_matrix_ref(q_paa, codes, series_len)
-    interpret = _on_cpu() if interpret is None else interpret
+    from repro.core import summaries as _S
+
+    alphabet = _S.SAX_ALPHABET if alphabet is None else alphabet
+    mode = _resolve(mode, use_pallas, interpret)
+    if mode == "ref":
+        return _ref.lb_sax_matrix_ref(q_paa, codes, series_len,
+                                      alphabet=alphabet)
     q0, s0 = q_paa.shape[0], codes.shape[0]
-    bq = bq or min(_lb.DEFAULT_BQ, max(8, q0))
-    bn = bn or min(_lb.DEFAULT_BN, max(128, s0))
+    bq = bq or _row_block(q0, _lb.DEFAULT_BQ, 8)
+    bn = bn or _row_block(s0, _lb.DEFAULT_BN, 128)
     q = _pad_rows(q_paa, bq)
     c = _pad_rows(codes, bn)
-    out = _lb.lb_sax_matrix(q, c, series_len, bq=bq, bn=bn, interpret=interpret)
+    out = _lb.lb_sax_matrix(q, c, series_len, alphabet, bq=bq, bn=bn,
+                            interpret=mode == "interpret")
     return out[:q0, :s0]
+
+
+# the engine-facing short name (core/search.py's pruning call site)
+lb_sax = lb_sax_matrix
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, state: jax.Array, *, chunk: int | None = None,
+         mode: str | None = None, use_pallas: bool = True,
+         interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 recurrence with mode dispatch and ragged-T chunking.
+
+    Shapes as :func:`repro.kernels.wkv6.wkv6`; T need *not* divide the chunk
+    — the tail is padded with w=1 / k=0 steps (identity recurrence) and the
+    output sliced back.
+    """
+    from repro.kernels.wkv6 import DEFAULT_CHUNK
+    from repro.kernels.wkv6 import wkv6 as _wkv6
+
+    mode = _resolve(mode, use_pallas, interpret)
+    if mode == "ref":
+        return _ref.wkv6_ref(r, k, v, w, u, state)
+    b, t, h, dk = r.shape
+    chunk = chunk or min(DEFAULT_CHUNK, t)
+    t_pad = -(-t // chunk) * chunk
+    if t_pad != t:
+        def pad_t(x, value):
+            pad = jnp.full((b, t_pad - t, *x.shape[2:]), value, x.dtype)
+            return jnp.concatenate([x, pad], axis=1)
+        # identity steps: w=1 keeps the state, k=0 adds nothing, r=0 reads 0
+        r, k, v = pad_t(r, 0.0), pad_t(k, 0.0), pad_t(v, 0.0)
+        w = pad_t(w, 1.0)
+    out, sfin = _wkv6(r, k, v, w, u, state, chunk=chunk,
+                      interpret=mode == "interpret")
+    return out[:, :t], sfin

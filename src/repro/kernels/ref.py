@@ -45,7 +45,10 @@ def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         rt, kt, vt, wt = xs                              # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
         kv = kt[..., :, None] * vt[..., None, :]         # (B,H,K,V)
         out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
-        s = wt[..., :, None] * s + kv
+        # w == 0 is an exact state reset (instant forget): never compute
+        # 0 * s, which NaN-poisons an overflowed state (see kernels/wkv6.py)
+        wd = wt[..., :, None]
+        s = jnp.where(wd == 0.0, kv, wd * s + kv)
         return s, out
 
     xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),

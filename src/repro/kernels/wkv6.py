@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import compiler_params
+
 DEFAULT_CHUNK = 64
 
 
@@ -52,7 +54,11 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
         kv = kt[:, None] * vt[None, :]               # (K, V)
         o = rt @ (s + u[:, None] * kv)               # (V,)
         out = out.at[i, :].set(o)
-        s = wt[:, None] * s + kv
+        # extreme-decay stability: w == 0 is an exact state reset (instant
+        # forget). Computing 0 * s would turn an overflowed (inf) state into
+        # NaN and poison every later token; select kv directly instead.
+        wd = wt[:, None]
+        s = jnp.where(wd == 0.0, kv, wd * s + kv)
         return s, out
 
     out0 = jnp.zeros(out_ref.shape[1:], jnp.float32)
@@ -109,7 +115,7 @@ def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
             jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, wf, uf, sf)

@@ -86,6 +86,65 @@ class TestBackendParity:
             assert b.describe()["backend"] == b.name
 
 
+class TestKernelModeParity:
+    """Kernelization acceptance: for every ``kernel_mode``, every backend
+    answers with bit-identical top-k distances and the same id sets.
+
+    ``ref`` runs the jnp oracles; ``interpret`` routes the hot path through
+    the Pallas kernel bodies (ScanBackend ED via ops.ed_matrix/ed_min,
+    phase-3 LB_SAX pruning via ops.lb_sax) on the interpreter — the same
+    code Mosaic compiles on TPU. ``kernel_mode`` is a per-call override, so
+    these also prove a serving engine can flip modes without a rebuild.
+    """
+
+    MODES = ("ref", "interpret")
+
+    @staticmethod
+    def _assert_same(a, b):
+        assert np.array_equal(np.asarray(a.dists), np.asarray(b.dists))
+        assert np.array_equal(np.sort(np.asarray(a.ids), axis=1),
+                              np.sort(np.asarray(b.ids), axis=1))
+
+    def test_local_bitwise_across_modes(self, queries, local):
+        base = local.knn(queries, kernel_mode="ref")
+        for mode in self.MODES:
+            self._assert_same(local.knn(queries, kernel_mode=mode), base)
+
+    def test_scan_bitwise_across_modes_and_vs_local(self, data, queries,
+                                                    local):
+        scan = QueryEngine(ScanBackend(data, CFG.search))
+        base = local.knn(queries, kernel_mode="ref")
+        for mode in self.MODES:
+            self._assert_same(scan.knn(queries, kernel_mode=mode), base)
+
+    def test_scan_k1_fused_ed_min_bitwise(self, data, queries):
+        # k=1 takes the fused ops.ed_min kernel path, not blocked ed_matrix
+        scan = QueryEngine(ScanBackend(data, CFG.search))
+        base = scan.knn(queries, k=1, kernel_mode="ref")
+        got = scan.knn(queries, k=1, kernel_mode="interpret")
+        assert np.array_equal(np.asarray(base.dists), np.asarray(got.dists))
+        assert np.array_equal(np.asarray(base.ids), np.asarray(got.ids))
+
+    def test_sharded_bitwise_across_modes(self, data, queries, local):
+        sharded = QueryEngine(
+            make_backend("sharded", data, index_config=CFG, num_shards=1))
+        base = local.knn(queries, kernel_mode="ref")
+        for mode in self.MODES:
+            self._assert_same(sharded.knn(queries, kernel_mode=mode), base)
+
+    def test_mode_is_a_plan_cache_key(self, data, queries):
+        eng = QueryEngine(LocalBackend(HerculesIndex.build(data, CFG)))
+        eng.knn(queries, kernel_mode="ref")
+        eng.knn(queries, kernel_mode="interpret")
+        eng.knn(queries, kernel_mode="ref")        # must hit, not recompile
+        pc = eng.telemetry()["plan_cache"]
+        assert (pc["misses"], pc["hits"]) == (2, 1)
+
+    def test_invalid_mode_rejected(self, local):
+        with pytest.raises(ValueError, match="kernel_mode"):
+            local.knn(jnp.zeros((1, LEN)), kernel_mode="bogus")
+
+
 class TestPlanCache:
     def test_repeat_call_hits_zero_compiles(self, data, queries):
         eng = QueryEngine(LocalBackend(HerculesIndex.build(data, CFG)))

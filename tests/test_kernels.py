@@ -146,17 +146,53 @@ class TestWKV6Kernel:
                                    rtol=1e-4, atol=1e-4)
 
     def test_extreme_decay_stable(self):
-        """w -> 0 (instant forget) and w -> 1 (no decay) must both be exact."""
-        b, t, h, dk, dv = 1, 16, 1, 4, 4
-        ks = jax.random.split(jax.random.PRNGKey(10), 5)
+        """Extreme decay must be exact and finite: w at the exact boundaries
+        (0 = instant forget, 1 = no decay), denormal-adjacent, and
+        per-channel mixed extremes, across multiple chunks with a nonzero
+        initial state."""
+        b, t, h, dk, dv = 1, 64, 1, 4, 4
+        ks = jax.random.split(jax.random.PRNGKey(10), 6)
         r = jax.random.normal(ks[0], (b, t, h, dk))
         k = jax.random.normal(ks[1], (b, t, h, dk))
         v = jax.random.normal(ks[2], (b, t, h, dv))
         u = jax.random.normal(ks[3], (h, dk))
-        s0 = jnp.zeros((b, h, dk, dv))
-        for wval in (1e-6, 1.0 - 1e-6):
-            w = jnp.full((b, t, h, dk), wval)
+        s0 = jax.random.normal(ks[4], (b, h, dk, dv))
+        mixed = jnp.stack(
+            [jnp.zeros((b, t, h)), jnp.ones((b, t, h)),
+             jnp.full((b, t, h), 1e-38), jnp.full((b, t, h), 1.0 - 1e-6)],
+            axis=-1)                                  # one extreme per channel
+        sweeps = [jnp.full((b, t, h, dk), wv)
+                  for wv in (0.0, 1e-38, 1e-6, 1.0 - 1e-6, 1.0)] + [mixed]
+        for w in sweeps:
             out, sf = wkv6(r, k, v, w, u, s0, chunk=8, interpret=True)
             want_o, want_s = ref.wkv6_ref(r, k, v, w, u, s0)
+            assert np.all(np.isfinite(np.asarray(out)))
             np.testing.assert_allclose(np.asarray(out), np.asarray(want_o),
                                        rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(sf), np.asarray(want_s),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_instant_forget_resets_overflowed_state(self):
+        """Regression: w == 0 performs an exact state reset. Before the fix,
+        the decay was applied as 0 * state, so a state that had overflowed
+        to inf (long no-decay stretch, huge k.v outer products) became NaN
+        at the first instant-forget token and poisoned every output after
+        it. Both the kernel and the oracle must recover."""
+        b, t, h, dk, dv = 1, 24, 1, 4, 4
+        ks = jax.random.split(jax.random.PRNGKey(11), 4)
+        r = jax.random.normal(ks[0], (b, t, h, dk))
+        k = jax.random.normal(ks[1], (b, t, h, dk)).at[:, :8].set(2e19)
+        v = jax.random.normal(ks[2], (b, t, h, dv)).at[:, :8].set(2e19)
+        u = jax.random.normal(ks[3], (h, dk))
+        w = jnp.ones((b, t, h, dk)).at[:, 8].set(0.0)  # forget after overflow
+        s0 = jnp.zeros((b, h, dk, dv))
+        out, sf = wkv6(r, k, v, w, u, s0, chunk=8, interpret=True)
+        want_o, want_s = ref.wkv6_ref(r, k, v, w, u, s0)
+        # tokens past the reset are finite and exact in kernel and oracle
+        assert np.all(np.isfinite(np.asarray(out[:, 9:])))
+        assert np.all(np.isfinite(np.asarray(want_o[:, 9:])))
+        np.testing.assert_allclose(np.asarray(out[:, 9:]),
+                                   np.asarray(want_o[:, 9:]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(want_s),
+                                   rtol=1e-4, atol=1e-4)
