@@ -205,6 +205,91 @@ def bench_backends(backends=("local", "scan", "scan-mxu", "flat-sax"),
 
 
 # --------------------------------------------------------------------------
+# Persistence / out-of-core: build throughput, save/load latency, ooc scan
+# --------------------------------------------------------------------------
+
+def bench_persistence(num=16384, n=128, nq=8, k=1, chunk=4096,
+                      memory_budget_mb=2.0, save_path=None, load_path=None):
+    """The ingest-path trajectory rows: one-shot vs chunked build throughput
+    (series/sec), index save/load wall time and on-disk size, and the
+    out-of-core streamed scan vs the in-memory scan on the same saved index.
+
+    ``save_path``/``load_path`` (benchmarks.run --save-index/--load-index)
+    pin the index directory; by default a temp dir is used and cleaned up.
+    ``load_path`` skips building and benches serving a pre-built index.
+    """
+    import os
+    import shutil
+    import tempfile
+    import time as _time
+
+    from repro.core import make_disk_backend
+    from repro.data.pipeline import ArrayChunkSource
+    from repro.storage import load_index, open_index, save_index
+
+    cfg = IndexConfig(build=BuildConfig(leaf_capacity=128),
+                      search=SearchConfig(k=k, **_SEARCH))
+    data = random_walks(jax.random.PRNGKey(21), num, n)
+    q = make_query_workload(jax.random.PRNGKey(22), data, nq, "5%")
+
+    tmp = None
+    path = load_path or save_path
+    if path is None:
+        tmp = tempfile.mkdtemp(prefix="bench_idx_")
+        path = os.path.join(tmp, "idx")
+    try:
+        if load_path is None:
+            t0 = _time.perf_counter()
+            idx = HerculesIndex.build(data, cfg)
+            dt = _time.perf_counter() - t0
+            emit("build_oneshot", dt * 1e6, f"series_per_s={num / dt:.0f}",
+                 series_per_second=round(num / dt, 1), num_series=num)
+
+            src = ArrayChunkSource(np.asarray(data), chunk)
+            t0 = _time.perf_counter()
+            HerculesIndex.build_streaming(src, cfg)
+            dt = _time.perf_counter() - t0
+            emit("build_chunked", dt * 1e6,
+                 f"series_per_s={num / dt:.0f};chunk={chunk}",
+                 series_per_second=round(num / dt, 1), chunk_size=chunk,
+                 num_series=num)
+
+            t0 = _time.perf_counter()
+            save_index(idx, path)
+            dt = _time.perf_counter() - t0
+            size = sum(os.path.getsize(os.path.join(path, f))
+                       for f in os.listdir(path))
+            emit("save_index", dt * 1e6, f"mib={size / 2**20:.1f}",
+                 bytes=size)
+
+        t0 = _time.perf_counter()
+        loaded = load_index(path)
+        dt = _time.perf_counter() - t0
+        emit("load_index", dt * 1e6,
+             f"series={loaded.layout.num_series}", load_seconds=round(dt, 4))
+
+        eng = QueryEngine(LocalBackend(loaded))
+        res = eng.knn(q, k=k)
+        _check_exact(res.dists, data, q, k)
+        t = time_call(lambda: eng.knn(q, k=k))
+        emit("backend_local_loaded", t / nq, "from_disk=1")
+
+        scfg = SearchConfig(k=k, **{**_SEARCH, "scan_block": 512})
+        ooc = make_disk_backend("ooc-scan", path, search=scfg,
+                                memory_budget_mb=memory_budget_mb)
+        r_ooc = ooc.knn(q, k=k)
+        _check_exact(r_ooc.dists, data, q, k)
+        t = time_call(lambda: ooc.knn(q, k=k))
+        st = ooc.stats()
+        emit("backend_ooc_scan", t / nq,
+             f"budget_mb={memory_budget_mb};blocks={st['blocks']}",
+             memory_budget_mb=memory_budget_mb)
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+# --------------------------------------------------------------------------
 # kernel microbenches: ref (jnp oracle) vs Pallas kernel, per op
 # --------------------------------------------------------------------------
 

@@ -13,8 +13,15 @@ comparison for it; without the flag the full figure suite runs.
 dispatch for the benched SearchConfigs — ``--backend scan --kernel-mode
 interpret`` is the CI smoke that streams the scan through the kernel bodies.
 
+``--save-index DIR`` / ``--load-index DIR`` bench the persistence path
+(build-throughput series/sec rows, save/load latency, out-of-core scan)
+against a pinned index directory — ``--load-index`` serves a pre-built
+index without rebuilding. Without either flag the persistence rows still
+run (in a temp dir) as part of the suite.
+
 ``--json`` additionally writes every emitted row (including the per-op
-``speedup_vs_ref`` fields from ``bench_kernels``) as structured JSON.
+``speedup_vs_ref`` fields from ``bench_kernels`` and the ``series_per_second``
+ingest fields from ``bench_persistence``) as structured JSON.
 """
 from __future__ import annotations
 
@@ -38,10 +45,19 @@ def main(argv=None) -> None:
                     help="Pallas kernel dispatch for the benched configs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all emitted rows as JSON")
+    ap.add_argument("--save-index", default=None, metavar="DIR",
+                    help="persistence bench: build + save the index here")
+    ap.add_argument("--load-index", default=None, metavar="DIR",
+                    help="persistence bench: serve this pre-built index "
+                         "(skips building)")
     args = ap.parse_args(argv)
 
+    persist_kw = dict(save_path=args.save_index, load_path=args.load_index)
     print("name,us_per_call,derived")
-    if args.backend:
+    if args.save_index or args.load_index:
+        size = dict(num=4096, n=64, nq=4, chunk=1024) if args.quick else {}
+        B.bench_persistence(**size, **persist_kw)
+    elif args.backend:
         names = (("local", "scan", "scan-mxu", "flat-sax")
                  if args.backend == "all" else (args.backend,))
         size = dict(num=4096, nq=8) if args.quick else {}
@@ -55,6 +71,7 @@ def main(argv=None) -> None:
         B.bench_approx(num=8192, nq=8)
         B.bench_backends(num=4096, nq=8, kernel_mode=args.kernel_mode)
         B.bench_kernels(num=16384, nq=32, kernel_mode=args.kernel_mode)
+        B.bench_persistence(num=4096, n=64, nq=4, chunk=1024)
     else:
         B.bench_scalability_size()
         B.bench_series_length()
@@ -64,6 +81,7 @@ def main(argv=None) -> None:
         B.bench_approx()
         B.bench_backends(kernel_mode=args.kernel_mode)
         B.bench_kernels(kernel_mode=args.kernel_mode)
+        B.bench_persistence()
     if args.json:
         write_json(args.json)
 

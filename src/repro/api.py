@@ -14,18 +14,34 @@
 Backends (``local`` | ``scan`` | ``scan-mxu`` | ``sharded``) all answer
 exactly and interchangeably; the engine owns batching, the compiled-plan
 cache, and telemetry. See README.md for the full tour.
+
+Persistence & out-of-core (``repro.storage`` + the disk backends)::
+
+    api.save_index(index, "idx/")                 # versioned dir + checksums
+    index = api.load_index("idx/")                # bit-identical round-trip
+    src = api.NpyChunkSource("data.npy", 8192)
+    api.build_index_to_disk(src, "idx/")          # never materializes data
+    backend = api.make_disk_backend("ooc-scan", "idx/", memory_budget_mb=64)
 """
 from repro.core.engine import (  # noqa: F401
-    BACKEND_NAMES, EngineConfig, LocalBackend, QueryEngine, ScanBackend,
+    BACKEND_NAMES, DISK_BACKEND_NAMES, EngineConfig, LocalBackend,
+    OutOfCoreLocalBackend, OutOfCoreScanBackend, QueryEngine, ScanBackend,
     SearchBackend, ShardedBackend, dense_scan_knn, kernel_scan_knn,
-    make_backend,
+    make_backend, make_disk_backend,
 )
 from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401
 from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
 from repro.core.search import (  # noqa: F401
     KnnResult, SearchConfig, brute_force_knn, pscan_knn,
 )
-from repro.core.tree import BuildConfig  # noqa: F401
+from repro.core.tree import BuildConfig, build_tree_chunked  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    ArrayChunkSource, ChunkSource, NpyChunkSource, iter_device_chunks,
+)
 from repro.serve.engine import (  # noqa: F401
     KnnAnswer, KnnServeConfig, KnnServeEngine,
+)
+from repro.storage import (  # noqa: F401
+    FORMAT_VERSION, IndexFormatError, SavedIndex, build_index_streaming,
+    build_index_to_disk, load_index, open_index, save_index,
 )

@@ -1,20 +1,25 @@
 # The paper's primary contribution: the Hercules index — dual-summarization
 # (EAPCA + iSAX) exact similarity search with adaptive access-path selection.
 from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
-from repro.core.layout import HerculesLayout, build_layout  # noqa: F401
+from repro.core.layout import (  # noqa: F401
+    HerculesLayout, LayoutGeometry, assemble_layout, build_layout,
+    compute_layout_geometry,
+)
 from repro.core.search import (  # noqa: F401
     KnnResult, SearchConfig, approx_knn, brute_force_knn, exact_knn,
     pscan_knn, validate_runtime_config,
 )
 from repro.core.tree import (  # noqa: F401
-    BuildConfig, HerculesTree, build_tree, route_to_leaf, tree_stats,
+    BuildConfig, HerculesTree, build_tree, build_tree_chunked, route_to_leaf,
+    tree_stats,
 )
 # The unified serving surface: every caller above the core answers queries
 # through a backend-agnostic QueryEngine (compiled-plan cache + telemetry).
 from repro.core.engine import (  # noqa: F401
-    BACKEND_NAMES, EngineConfig, LocalBackend, QueryEngine, ScanBackend,
+    BACKEND_NAMES, DISK_BACKEND_NAMES, EngineConfig, LocalBackend,
+    OutOfCoreLocalBackend, OutOfCoreScanBackend, QueryEngine, ScanBackend,
     SearchBackend, ShardedBackend, dense_scan_knn, kernel_scan_knn,
-    make_backend,
+    make_backend, make_disk_backend,
 )
 # Kernel execution-mode policy (SearchConfig.kernel_mode values).
 from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401

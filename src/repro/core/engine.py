@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import summaries as S
 from repro.core.index import HerculesIndex, IndexConfig
 from repro.core.search import (INF, KnnResult, SearchConfig, _merge_topk,
                                exact_knn, pscan_knn, validate_runtime_config)
@@ -354,6 +355,323 @@ class ScanBackend(BackendBase):
 
 
 # ---------------------------------------------------------------------------
+# Out-of-core backends — serving a memory-mapped on-disk index under a budget
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "mode"))
+def _ooc_scan_block(rows: jax.Array, queries: jax.Array, base: jax.Array,
+                    *, k: int, block: int, mode: str):
+    """Top-k of one streamed row block through the in-memory scan hot path;
+    positions shifted to global layout coordinates."""
+    if mode == "ref":
+        d, p = dense_scan_knn(rows, queries, k=k, block=block)
+    else:
+        d, p = kernel_scan_knn(rows, queries, k=k, block=block, mode=mode)
+    return d, jnp.where(p >= 0, p + base, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ooc_merge(d0, p0, d1, p1, *, k: int):
+    merge = jax.vmap(lambda a, b, c, e: _merge_topk(a, b, c, e, k))
+    return merge(d0, p0, d1, p1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ooc_refine_block(rows: jax.Array, base: jax.Array, valid: jax.Array,
+                      queries: jax.Array, d0, p0, *, k: int):
+    """Merge exact difference-form distances of one padded row block into
+    each query's running top-k (rows beyond ``valid`` are masked)."""
+    r = rows.shape[0]
+    pos = base + jnp.arange(r, dtype=jnp.int32)
+    live = jnp.arange(r) < valid
+
+    def one(args):
+        q, d_top, p_top = args
+        d = jnp.sum(jnp.square(rows - q[None, :]), axis=1)
+        d = jnp.where(live, d, INF)
+        return _merge_topk(d_top, p_top, d, pos, k)
+
+    return jax.lax.map(one, (queries, d0, p0))
+
+
+class _OutOfCoreBase(BackendBase):
+    """Shared plumbing for backends that stream a :class:`SavedIndex`
+    (``repro.storage.open_index``): memory-mapped LRD rows move host→device
+    in blocks bounded by ``memory_budget_mb``; only small state (tree, leaf
+    tables, permutation) is resident."""
+
+    def __init__(self, saved, config: SearchConfig | None = None,
+                 memory_budget_mb: float = 64.0):
+        if memory_budget_mb <= 0:
+            raise ValueError("memory_budget_mb must be positive")
+        self.saved = saved
+        self.memory_budget_mb = float(memory_budget_mb)
+        self._config = config or saved.config.search
+        self._perm = jnp.asarray(saved.small["perm"])
+        self._t = {"calls": 0, "blocks": 0, "rows_streamed": 0,
+                   "bytes_streamed": 0}
+
+    @property
+    def series_len(self) -> int:
+        return self.saved.series_len
+
+    @property
+    def base_config(self) -> SearchConfig:
+        return self._config
+
+    def _budget_rows(self) -> int:
+        row_bytes = 4 * self.saved.series_len
+        return int(self.memory_budget_mb * (1 << 20)) // row_bytes
+
+    def _ids_of(self, p: jax.Array) -> jax.Array:
+        safe = jnp.clip(p, 0, self._perm.shape[0] - 1)
+        return jnp.where(p >= 0, self._perm[safe], -1)
+
+    def _count(self, rows: int) -> None:
+        self._t["blocks"] += 1
+        self._t["rows_streamed"] += rows
+        self._t["bytes_streamed"] += rows * 4 * self.saved.series_len
+
+    def make_plan(self, cfg, q_struct):
+        # Streaming plans are Python loops over jitted block kernels; the
+        # jit cache (keyed on block shapes, which the budget fixes) plays
+        # the role of the AOT executable here.
+        return self._bind(cfg)
+
+    def stats(self) -> dict:
+        return {"num_series": self.saved.num_series,
+                "series_len": self.saved.series_len,
+                "memory_budget_mb": self.memory_budget_mb,
+                **self._t}
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(self.stats(), path=self.saved.path)
+        return d
+
+
+class OutOfCoreScanBackend(_OutOfCoreBase):
+    """Exact kNN over an on-disk collection via a streamed blocked scan.
+
+    The memory-mapped LRD file is read in row blocks sized to half of
+    ``memory_budget_mb`` — the double-buffered stream keeps two blocks in
+    flight (one computing, one transferring), so the *budget* covers peak
+    residency, not one block. Each block runs the *same* in-memory scan hot
+    path (:func:`kernel_scan_knn` when the kernel mode resolves to Pallas,
+    else the difference-form :func:`dense_scan_knn`) and running top-k
+    merges through the shared :func:`_merge_topk` in file order. Distances
+    are bit-identical to :class:`ScanBackend`; ``ids`` are exact original
+    ids via the stored permutation and match the in-memory scan except when
+    distinct rows *tie exactly* at the top-k boundary (the streamed scan
+    visits rows in LRD order, the in-memory scan in original order, so ties
+    break differently). ``positions`` are layout (LRD) positions.
+    """
+
+    name = "ooc-scan"
+
+    def __init__(self, saved, config: SearchConfig | None = None,
+                 memory_budget_mb: float = 64.0):
+        super().__init__(saved, config, memory_budget_mb)
+        self._config = dataclasses.replace(self._config, force_scan=True)
+
+    def _validate(self, cfg: SearchConfig) -> None:
+        if cfg.scan_block <= 0:
+            raise ValueError("scan_block must be positive")
+        if self.stream_rows() < cfg.scan_block:
+            raise ValueError(
+                f"memory_budget_mb={self.memory_budget_mb} streams "
+                f"{self.stream_rows()} rows per block (two blocks in "
+                f"flight) — less than one scan_block={cfg.scan_block}; "
+                f"lower scan_block or raise the budget")
+
+    def stream_rows(self) -> int:
+        """Rows per streamed block: half the budget, since the prefetching
+        stream holds two blocks (compute + transfer) at peak."""
+        return max(self._budget_rows() // 2, 1)
+
+    def _block_rows(self, cfg: SearchConfig) -> int:
+        return (self.stream_rows() // cfg.scan_block) * cfg.scan_block
+
+    def _bind(self, cfg):
+        mode = resolve_kernel_mode(cfg.kernel_mode)
+        return lambda q: self._stream_knn(jnp.asarray(q), cfg, mode)
+
+    def _stream_knn(self, q: jax.Array, cfg: SearchConfig,
+                    mode: str) -> KnnResult:
+        from repro.data.pipeline import ArrayChunkSource, iter_device_chunks
+
+        num = self.saved.num_series
+        R = self._block_rows(cfg)
+        qn = q.shape[0]
+        d = jnp.full((qn, cfg.k), INF)
+        p = jnp.full((qn, cfg.k), -1, jnp.int32)
+        blocks = ArrayChunkSource(self.saved.lrd[:num], R)
+        for start, rows in iter_device_chunks(blocks):
+            d_b, p_b = _ooc_scan_block(rows, q, jnp.int32(start), k=cfg.k,
+                                       block=cfg.scan_block, mode=mode)
+            d, p = _ooc_merge(d, p, d_b, p_b, k=cfg.k)
+            self._count(rows.shape[0])
+        self._t["calls"] += 1
+        return self._fill_result(d, p, self._ids_of(p), path=3, accessed=num)
+
+
+class OutOfCoreLocalBackend(_OutOfCoreBase):
+    """Index-pruned out-of-core answering (the paper's reason to build the
+    tree at all: touch only the leaves the bounds cannot exclude).
+
+    Resident state is the tree plus the per-leaf pruning tables; raw series
+    stay on disk. Per batch: (1) route every query to its home leaf and seed
+    BSF_k from those leaf extents; (2) one vectorized LB_EAPCA pass over all
+    leaf synopses; (3) stream only the leaves some query cannot prune, as
+    contiguous LRD runs (leaf in-order == file order) cut into
+    budget-bounded pieces, refining with exact difference-form distances.
+    Leaf-granularity pruning only — the in-memory backend's per-series SAX
+    phase needs the LSD column resident; streaming it is a ROADMAP
+    follow-on. Exact by the paper's no-false-dismissal argument: a leaf is
+    skipped only if ``lb * (1 - lb_slack)`` ≥ the seeded BSF_k, which upper-
+    bounds the final kth distance.
+    """
+
+    name = "ooc-local"
+
+    def __init__(self, saved, config: SearchConfig | None = None,
+                 memory_budget_mb: float = 64.0):
+        super().__init__(saved, config, memory_budget_mb)
+        s = saved.small
+        self._leaf_start = s["leaf_start"]
+        self._leaf_count = s["leaf_count"]
+        self._leaf_rank = jnp.asarray(s["leaf_rank"])
+        self._leaf_endpoints = jnp.asarray(s["leaf_endpoints"])
+        self._leaf_synopsis = jnp.asarray(s["leaf_synopsis"])
+        self._leaf_seg_lens = jnp.asarray(s["leaf_seg_lens"])
+
+    def _validate(self, cfg: SearchConfig) -> None:
+        if self.stream_rows() < self.saved.max_leaf:
+            raise ValueError(
+                f"memory_budget_mb={self.memory_budget_mb} streams "
+                f"{self.stream_rows()} rows per block — less than one leaf "
+                f"extent (max_leaf={self.saved.max_leaf}); raise the budget "
+                f"or rebuild with a smaller leaf_capacity")
+
+    def stream_rows(self) -> int:
+        """Cap on rows per streamed piece: half the budget, leaving headroom
+        for the staging buffer + in-flight device copy of the next piece."""
+        return max(self._budget_rows() // 2, 1)
+
+    def _bind(self, cfg):
+        return lambda q: self._stream_knn(jnp.asarray(q), cfg)
+
+    def _pad_bucket(self, count: int, cap: int) -> int:
+        """Pad a piece to a small set of shapes (powers of two between
+        max_leaf and the streaming cap) so refine kernels compile O(log)
+        times while tiny pieces don't pay a full-budget zero-fill/copy."""
+        b = max(self.saved.max_leaf, 1)
+        while b < count:
+            b <<= 1
+        return min(max(b, 1), max(cap, count))
+
+    def _fetch(self, start: int, count: int, pad_to: int) -> np.ndarray:
+        rows = np.zeros((pad_to, self.saved.series_len), np.float32)
+        rows[:count] = self.saved.lrd[start:start + count]
+        return rows
+
+    def _leaf_lbs(self, q: jax.Array) -> jax.Array:
+        """(Q, L) squared LB_EAPCA of every query to every leaf synopsis."""
+        from repro.core.lower_bounds import lb_eapca_node
+        from repro.core.search import _query_seg_stats
+
+        qp, qp2 = S.prefix_sums(q)
+
+        def one(args):
+            p_row, p2_row = args
+            qm, qs = _query_seg_stats(p_row, p2_row, self._leaf_endpoints)
+            return lb_eapca_node(qm, qs, self._leaf_synopsis,
+                                 self._leaf_seg_lens)
+
+        lbs = jax.lax.map(one, (qp, qp2))
+        dead = jnp.asarray(self._leaf_count) <= 0
+        return jnp.where(dead[None, :], INF, lbs)
+
+    def _stream_knn(self, q: jax.Array, cfg: SearchConfig) -> KnnResult:
+        from repro.core.tree import route_to_leaf
+
+        k = cfg.k
+        qn = q.shape[0]
+        max_leaf = self.saved.max_leaf
+        rows_before = self._t["rows_streamed"]
+        d = jnp.full((qn, k), INF)
+        p = jnp.full((qn, k), -1, jnp.int32)
+
+        # -- phase 1 (Alg. 11): seed BSF from each query's home leaf plus its
+        # l_max best leaves by LB_EAPCA — same visit set as the in-memory
+        # pipeline, so the bound entering phase 2 is comparably tight.
+        lbs = self._leaf_lbs(q)                          # (Q, L)
+        home_nodes = route_to_leaf(self.saved.tree, q, self.saved.max_depth)
+        home_ranks = np.asarray(self._leaf_rank)[np.asarray(home_nodes)]
+        l_max = min(cfg.l_max, self.saved.num_leaves)
+        _, best = jax.lax.top_k(-lbs, l_max)             # (Q, l_max)
+        seeded = sorted(set(int(r) for r in home_ranks if r >= 0)
+                        | set(int(r) for r in np.asarray(best).ravel()))
+        for r in seeded:
+            start = int(self._leaf_start[r])
+            cnt = int(self._leaf_count[r])
+            if cnt <= 0:
+                continue
+            rows = self._fetch(start, cnt, max_leaf)
+            d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(start),
+                                     jnp.int32(cnt), q, d, p, k=k)
+            self._count(cnt)
+
+        # -- phase 2: leaf-level pruning over resident synopses --------------
+        slack = jnp.float32(1.0 - cfg.lb_slack)
+        bsf = d[:, k - 1]
+        cand = lbs * slack < bsf[:, None]                # (Q, L)
+        needed = np.array(jnp.any(cand, axis=0))
+        needed[seeded] = False
+        n_alive = max(int((np.asarray(self._leaf_count) > 0).sum()), 1)
+        eapca_pr = 1.0 - np.asarray(
+            jnp.sum(cand, axis=1), np.float32) / n_alive
+
+        # -- phase 3: stream non-prunable leaves as contiguous runs ----------
+        R = self.stream_rows()
+        pieces = self._runs(needed, R)
+        for start, cnt in pieces:
+            rows = self._fetch(start, cnt, self._pad_bucket(cnt, R))
+            d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(start),
+                                     jnp.int32(cnt), q, d, p, k=k)
+            self._count(cnt)
+        self._t["calls"] += 1
+
+        res = self._fill_result(
+            d, p, self._ids_of(p), path=2,
+            accessed=self._t["rows_streamed"] - rows_before)
+        return res._replace(
+            eapca_pr=jnp.asarray(eapca_pr, jnp.float32),
+            visited_leaves=jnp.full((qn,), len(seeded) + int(needed.sum()),
+                                    jnp.int32))
+
+    def _runs(self, needed: np.ndarray, max_rows: int):
+        """Merge needed leaves' extents into contiguous row intervals (leaf
+        in-order == file order), then cut into ≤ max_rows pieces."""
+        starts = np.asarray(self._leaf_start)
+        counts = np.asarray(self._leaf_count)
+        intervals: list[list[int]] = []
+        for r in np.flatnonzero(needed):
+            lo, hi = int(starts[r]), int(starts[r] + counts[r])
+            if hi <= lo:
+                continue
+            if intervals and intervals[-1][1] == lo:
+                intervals[-1][1] = hi
+            else:
+                intervals.append([lo, hi])
+        pieces = []
+        for lo, hi in intervals:
+            for s in range(lo, hi, max_rows):
+                pieces.append((s, min(max_rows, hi - s)))
+        return pieces
+
+
+# ---------------------------------------------------------------------------
 # Sharded backend — the distributed StackedIndex under a mesh
 # ---------------------------------------------------------------------------
 
@@ -623,3 +941,38 @@ def make_backend(name: str, data: jax.Array, *,
         stacked = build_distributed_index(data, shards, cfg)
         return ShardedBackend(stacked, mesh)
     raise ValueError(f"unknown backend {name!r}; expected one of {BACKEND_NAMES}")
+
+
+DISK_BACKEND_NAMES = ("local", "scan", "ooc-scan", "ooc-local")
+
+
+def make_disk_backend(name: str, path: str, *,
+                      search: SearchConfig | None = None,
+                      memory_budget_mb: float = 64.0,
+                      verify: bool = True) -> SearchBackend:
+    """Serve a saved index directory (``repro.storage``) by backend name.
+
+    ``local``/``scan`` materialize the saved arrays into the ordinary
+    in-memory backends (bit-identical to the ones built from the original
+    data); ``ooc-scan``/``ooc-local`` keep the raw series memory-mapped and
+    stream them under ``memory_budget_mb``.
+    """
+    from repro.storage import open_index
+
+    saved = open_index(path, verify=verify)
+    if name == "local":
+        idx = saved.to_index()
+        if search is not None:
+            idx.config = dataclasses.replace(idx.config, search=search)
+        return LocalBackend(idx)
+    if name == "scan":
+        return ScanBackend(jnp.asarray(saved.original_data()),
+                           search or saved.config.search)
+    if name == "ooc-scan":
+        return OutOfCoreScanBackend(saved, search,
+                                    memory_budget_mb=memory_budget_mb)
+    if name == "ooc-local":
+        return OutOfCoreLocalBackend(saved, search,
+                                     memory_budget_mb=memory_budget_mb)
+    raise ValueError(f"unknown disk backend {name!r}; expected one of "
+                     f"{DISK_BACKEND_NAMES}")

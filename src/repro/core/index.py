@@ -57,6 +57,17 @@ class HerculesIndex:
         max_depth = tree_stats(tree)["max_depth"]
         return cls(tree, layout, config, max_depth)
 
+    @classmethod
+    def build_streaming(cls, source,
+                        config: "IndexConfig | None" = None) -> "HerculesIndex":
+        """Chunk-streamed build from a :class:`repro.data.pipeline.ChunkSource`
+        — device residency bounded by one chunk during construction, result
+        bit-identical to :meth:`build` on the concatenated data. To keep the
+        collection on disk end to end, use
+        :func:`repro.storage.build_index_to_disk` instead."""
+        from repro.storage.build import build_index_streaming
+        return build_index_streaming(source, config)
+
     # -- query answering ------------------------------------------------------
 
     def knn(self, queries: jax.Array, k: int | None = None,
@@ -87,6 +98,10 @@ class HerculesIndex:
         return tree_stats(self.tree)
 
     # -- persistence (checkpoint/restart story for the index itself) ---------
+    # Single-file .npz snapshot, kept for in-process checkpointing. The
+    # serving persistence story — versioned directory format, checksums,
+    # memory-mappable LRD/LSD for out-of-core backends — is
+    # repro/storage/format.py (save_index / load_index / open_index).
 
     def save(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)

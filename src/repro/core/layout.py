@@ -62,79 +62,140 @@ class HerculesLayout:
         return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
 
 
+@dataclasses.dataclass(frozen=True)
+class LayoutGeometry:
+    """Host-side placement plan for the LRD/LSD files.
+
+    Everything :func:`build_layout` decides *about positions* — which layout
+    row each series lands in, leaf extents, padding — separated from the
+    data movement itself, so the streaming index writer
+    (``repro/storage/build.py``) can scatter chunks straight into an on-disk
+    memmap without ever materializing the collection. All arrays are host
+    numpy; derived purely from (tree, node_of), so the one-shot and chunked
+    builds compute identical geometry.
+    """
+    perm: np.ndarray              # (N,) layout pos -> original id
+    inv_perm: np.ndarray          # (N,) original id -> layout pos
+    leaf_rank: np.ndarray         # (max_nodes,)
+    leaf_node: np.ndarray         # (L,)
+    leaf_start: np.ndarray        # (L,)
+    leaf_count: np.ndarray        # (L,)
+    series_leaf_rank: np.ndarray  # (n_pad,)
+    series_len: int
+    max_leaf: int
+    num_leaves: int
+    num_series: int
+    n_pad: int
+
+
+def compute_layout_geometry(tree: HerculesTree, node_of,
+                            num_series: int, series_len: int,
+                            pad_leaves_to: int | None = None,
+                            pad_series_to_multiple: int = 1) -> LayoutGeometry:
+    """Leaf in-order placement plan from a built tree (host-side, no data).
+
+    ``pad_series_to_multiple`` rounds the series axis up (pad rows are zeros
+    with sentinel leaf rank L) so blocked scans never need clamped slices.
+    """
+    node_of_np = np.asarray(node_of)
+    order = inorder_leaves(tree)                    # (num_leaves,)
+    num_leaves = len(order)
+    L = pad_leaves_to or num_leaves
+
+    leaf_rank = np.full((tree.max_nodes,), -1, np.int32)
+    leaf_rank[order] = np.arange(num_leaves, dtype=np.int32)
+
+    # stable sort series by (leaf rank, original id) -> layout order
+    ranks = leaf_rank[node_of_np]
+    perm = np.argsort(ranks, kind="stable").astype(np.int32)
+    inv_perm = np.argsort(perm).astype(np.int32)
+
+    counts = np.zeros((L,), np.int32)
+    cnt_by_node = np.bincount(node_of_np, minlength=tree.max_nodes)
+    counts[:num_leaves] = cnt_by_node[order]
+    starts = np.zeros((L,), np.int32)
+    starts[:num_leaves] = np.concatenate(
+        [[0], np.cumsum(counts[:num_leaves])[:-1]])
+    # padded (empty) leaf slots point at the end with count 0
+    starts[num_leaves:] = num_series
+    max_leaf = int(counts.max(initial=1))
+
+    # pad the series axis so (a) blocked scans need no clamped slices and
+    # (b) every leaf extent [start, start+max_leaf) stays in bounds
+    blk = max(1, pad_series_to_multiple)
+    n_pad = -(-(num_series + max_leaf) // blk) * blk
+    srank = np.concatenate(
+        [ranks[perm], np.full((n_pad - num_series,), L, np.int32)])
+
+    leaf_node = np.zeros((L,), np.int32)
+    leaf_node[:num_leaves] = order
+
+    return LayoutGeometry(
+        perm=perm, inv_perm=inv_perm, leaf_rank=leaf_rank,
+        leaf_node=leaf_node, leaf_start=starts, leaf_count=counts,
+        series_leaf_rank=srank.astype(np.int32),
+        series_len=series_len, max_leaf=max_leaf, num_leaves=num_leaves,
+        num_series=num_series, n_pad=n_pad)
+
+
+def leaf_tables(tree: HerculesTree, geo: LayoutGeometry):
+    """(leaf_synopsis, leaf_endpoints, leaf_seg_lens) densely packed per
+    in-order rank — the per-leaf pruning tables phase 2 sweeps."""
+    ln = jnp.asarray(geo.leaf_node)
+    syn = tree.synopsis[ln]
+    ep = tree.endpoints[ln]
+    seg_lens = S.segment_lengths(ep)
+    # zero out padded slots so their LB is 0 (never pruned incorrectly; they
+    # have count 0 and contribute nothing)
+    L = geo.leaf_node.shape[0]
+    pad_mask = jnp.arange(L) >= geo.num_leaves
+    syn = jnp.where(pad_mask[:, None, None], 0.0, syn)
+    return syn, ep, seg_lens
+
+
+def assemble_layout(tree: HerculesTree, geo: LayoutGeometry,
+                    lrd, lsd) -> HerculesLayout:
+    """HerculesLayout from a placement plan plus already-materialized
+    LRD/LSD arrays (device, host, or memmap — promoted with jnp.asarray)."""
+    syn, ep, seg_lens = leaf_tables(tree, geo)
+    return HerculesLayout(
+        lrd=jnp.asarray(lrd), lsd=jnp.asarray(lsd),
+        perm=jnp.asarray(geo.perm), inv_perm=jnp.asarray(geo.inv_perm),
+        leaf_rank=jnp.asarray(geo.leaf_rank),
+        leaf_node=jnp.asarray(geo.leaf_node),
+        leaf_start=jnp.asarray(geo.leaf_start),
+        leaf_count=jnp.asarray(geo.leaf_count),
+        leaf_synopsis=syn,
+        leaf_endpoints=ep,
+        leaf_seg_lens=seg_lens,
+        series_leaf_rank=jnp.asarray(geo.series_leaf_rank),
+        series_len=geo.series_len,
+        max_leaf=geo.max_leaf,
+        num_leaves=geo.num_leaves,
+        num_series=geo.num_series,
+    )
+
+
 def build_layout(tree: HerculesTree, node_of: jax.Array, data: jax.Array,
                  sax_segments: int = S.NUM_SAX_SEGMENTS,
                  pad_leaves_to: int | None = None,
                  pad_series_to_multiple: int = 1) -> HerculesLayout:
     """Materialize the leaf in-order layout from a built tree.
 
-    Host-side orchestration (tree is small); the heavy reorders stay on device.
-    ``pad_series_to_multiple`` rounds the series axis up (pad rows are zeros
-    with sentinel leaf rank L) so blocked scans never need clamped slices.
+    Host-side orchestration (tree is small); the heavy reorders stay on
+    device. The streaming writer shares :func:`compute_layout_geometry` and
+    scatters chunks to disk instead (storage/build.py).
     """
     num, n = data.shape
-    order = inorder_leaves(tree)                    # (num_leaves,)
-    num_leaves = len(order)
-    L = pad_leaves_to or num_leaves
+    geo = compute_layout_geometry(
+        tree, node_of, num, n, pad_leaves_to=pad_leaves_to,
+        pad_series_to_multiple=pad_series_to_multiple)
 
-    leaf_rank_np = np.full((tree.max_nodes,), -1, np.int32)
-    leaf_rank_np[order] = np.arange(num_leaves, dtype=np.int32)
-    leaf_rank = jnp.asarray(leaf_rank_np)
-
-    # stable sort series by (leaf rank, original id) -> layout order
-    ranks = leaf_rank[node_of]
-    perm = jnp.argsort(ranks, stable=True).astype(jnp.int32)
-    inv_perm = jnp.argsort(perm).astype(jnp.int32)
-
-    counts_np = np.zeros((L,), np.int32)
-    cnt_by_node = np.asarray(
-        jax.ops.segment_sum(jnp.ones_like(node_of), node_of,
-                            num_segments=tree.max_nodes))
-    counts_np[:num_leaves] = cnt_by_node[order]
-    starts_np = np.zeros((L,), np.int32)
-    starts_np[:num_leaves] = np.concatenate(
-        [[0], np.cumsum(counts_np[:num_leaves])[:-1]])
-    # padded (empty) leaf slots point at the end with count 0
-    starts_np[num_leaves:] = num
-    max_leaf = int(counts_np.max(initial=1))
-
-    lrd = data[perm]
+    lrd = jnp.asarray(data)[jnp.asarray(geo.perm)]
     lsd = S.isax(lrd, sax_segments)
-    srank = ranks[perm]
-
-    # pad the series axis so (a) blocked scans need no clamped slices and
-    # (b) every leaf extent [start, start+max_leaf) stays in bounds
-    blk = max(1, pad_series_to_multiple)
-    n_pad = -(-(num + max_leaf) // blk) * blk
-    if n_pad != num:
-        pad = n_pad - num
+    pad = geo.n_pad - num
+    if pad:
         lrd = jnp.concatenate([lrd, jnp.zeros((pad, n), lrd.dtype)], axis=0)
-        lsd = jnp.concatenate([lsd, jnp.zeros((pad, lsd.shape[1]), lsd.dtype)], axis=0)
-        srank = jnp.concatenate([srank, jnp.full((pad,), L, srank.dtype)], axis=0)
-
-    leaf_node_np = np.zeros((L,), np.int32)
-    leaf_node_np[:num_leaves] = order
-
-    syn = tree.synopsis[jnp.asarray(leaf_node_np)]
-    ep = tree.endpoints[jnp.asarray(leaf_node_np)]
-    seg_lens = S.segment_lengths(ep)
-    # zero out padded slots so their LB is 0 (never pruned incorrectly; they
-    # have count 0 and contribute nothing)
-    pad_mask = jnp.arange(L) >= num_leaves
-    syn = jnp.where(pad_mask[:, None, None], 0.0, syn)
-
-    return HerculesLayout(
-        lrd=lrd, lsd=lsd, perm=perm, inv_perm=inv_perm,
-        leaf_rank=leaf_rank,
-        leaf_node=jnp.asarray(leaf_node_np),
-        leaf_start=jnp.asarray(starts_np),
-        leaf_count=jnp.asarray(counts_np),
-        leaf_synopsis=syn,
-        leaf_endpoints=ep,
-        leaf_seg_lens=seg_lens,
-        series_leaf_rank=srank.astype(jnp.int32),
-        series_len=n,
-        max_leaf=max_leaf,
-        num_leaves=num_leaves,
-        num_series=num,
-    )
+        lsd = jnp.concatenate(
+            [lsd, jnp.zeros((pad, lsd.shape[1]), lsd.dtype)], axis=0)
+    return assemble_layout(tree, geo, lrd, lsd)

@@ -141,16 +141,43 @@ def _seg_minmax(vals: jax.Array, seg_ids: jax.Array, num_segments: int):
     return mn, mx
 
 
-@functools.partial(jax.jit, static_argnames=("tau",), donate_argnums=(0, 1))
-def _build_round(tree: HerculesTree, node_of: jax.Array,
-                 p: jax.Array, p2: jax.Array, *, tau: int):
-    """One level-synchronous split round. Returns (tree, node_of, num_split)."""
+class RoundStats(NamedTuple):
+    """Per-node associative reductions feeding one split round's decision.
+
+    Everything :func:`_round_decide` consumes is either a per-node member
+    count (a sum) or a per-node/per-segment min/max of per-series statistics
+    — all associative, order-independent reductions. A round's statistics
+    can therefore be computed over any partition of the collection into
+    chunks and merged exactly (:func:`_merge_round_stats`), which is what
+    the out-of-core chunked build does; the one-shot build is the
+    single-chunk special case, so both produce bit-identical trees.
+
+    ``counts`` is (max_nodes,) int32; every other field is (max_nodes, M)
+    float32 with min-identity +inf / max-identity -inf for nodes that saw
+    no members (never read: only over-capacity leaves are consulted).
+    """
+    counts: jax.Array
+    mu_mn: jax.Array
+    mu_mx: jax.Array
+    sd_mn: jax.Array
+    sd_mx: jax.Array
+    h1m_mn: jax.Array
+    h1m_mx: jax.Array
+    h1s_mn: jax.Array
+    h1s_mx: jax.Array
+    h2m_mn: jax.Array
+    h2m_mx: jax.Array
+    h2s_mn: jax.Array
+    h2s_mx: jax.Array
+
+
+def _round_stats(tree: HerculesTree, node_of: jax.Array,
+                 p: jax.Array, p2: jax.Array) -> RoundStats:
+    """Per-leaf reductions over one chunk of members (round phase 1+3 stats)."""
     max_nodes = tree.max_nodes
-    m = tree.max_segments
-    n = p.shape[1] - 1
     num = p.shape[0]
 
-    # ---- 1. per-series segment geometry under the current leaf ------------
+    # per-series segment geometry under the current leaf
     ep = tree.endpoints[node_of]                       # (N, M)
     starts = jnp.concatenate([jnp.zeros((num, 1), jnp.int32), ep[:, :-1]], axis=1)
     lens = ep - starts                                  # (N, M) int32
@@ -165,34 +192,54 @@ def _build_round(tree: HerculesTree, node_of: jax.Array,
     h2m = s1b / ln2
     h2s = jnp.sqrt(jnp.maximum(s2b / ln2 - jnp.square(h2m), 0.0))
 
-    # ---- 2. which leaves split this round ---------------------------------
     counts = jax.ops.segment_sum(jnp.ones((num,), jnp.int32), node_of,
                                  num_segments=max_nodes)
+    parts = [counts]
+    for vals in (means, stds, h1m, h1s, h2m, h2s):
+        mn, mx = _seg_minmax(vals, node_of, max_nodes + 1)
+        parts += [mn[:max_nodes], mx[:max_nodes]]
+    return RoundStats(*parts)
+
+
+def _merge_round_stats(a: RoundStats, b: RoundStats) -> RoundStats:
+    """Exact merge of two chunks' reductions (sum / min / max per field)."""
+    merged = [a.counts + b.counts]
+    for name in RoundStats._fields[1:]:
+        va, vb = getattr(a, name), getattr(b, name)
+        merged.append(jnp.minimum(va, vb) if name.endswith("_mn")
+                      else jnp.maximum(va, vb))
+    return RoundStats(*merged)
+
+
+def _round_decide(tree: HerculesTree, stats: RoundStats, *, tau: int):
+    """Pick split policies and scatter children from merged round stats.
+
+    Returns (tree, num_split). Pure function of (tree, stats): identical
+    inputs give identical trees whether the stats came from one chunk or
+    many.
+    """
+    max_nodes = tree.max_nodes
+    m = tree.max_segments
+
+    # ---- 2. which leaves split this round ---------------------------------
+    counts = stats.counts
     want = tree.is_leaf & ~tree.no_split & (counts > tau)
     budget = (max_nodes - tree.num_nodes) // 2
     rank = jnp.cumsum(want.astype(jnp.int32)) - 1      # (max_nodes,)
     splitting = want & (rank < budget)
 
     # ---- 3. per-leaf synopsis ranges + QoS policy scores -------------------
-    drop = jnp.where(splitting[node_of], node_of, max_nodes)  # reduce only for
-    mu_mn, mu_mx = _seg_minmax(means, drop, max_nodes + 1)    # splitting leaves
-    sd_mn, sd_mx = _seg_minmax(stds, drop, max_nodes + 1)
-    h1m_mn, h1m_mx = _seg_minmax(h1m, drop, max_nodes + 1)
-    h1s_mn, h1s_mx = _seg_minmax(h1s, drop, max_nodes + 1)
-    h2m_mn, h2m_mx = _seg_minmax(h2m, drop, max_nodes + 1)
-    h2s_mn, h2s_mx = _seg_minmax(h2s, drop, max_nodes + 1)
-
     node_ep = tree.endpoints                            # (max_nodes, M)
     node_st = jnp.concatenate(
         [jnp.zeros((max_nodes, 1), jnp.int32), node_ep[:, :-1]], axis=1)
-    node_len = (node_ep - node_st).astype(jnp.float32)  # (max_nodes[+1 via :max], M)
+    node_len = (node_ep - node_st).astype(jnp.float32)  # (max_nodes, M)
 
     def rng(mx, mn):
-        return jnp.maximum(mx[:max_nodes] - mn[:max_nodes], 0.0)
+        return jnp.maximum(mx - mn, 0.0)
 
-    r_mu, r_sd = rng(mu_mx, mu_mn), rng(sd_mx, sd_mn)
-    r1_mu, r1_sd = rng(h1m_mx, h1m_mn), rng(h1s_mx, h1s_mn)
-    r2_mu, r2_sd = rng(h2m_mx, h2m_mn), rng(h2s_mx, h2s_mn)
+    r_mu, r_sd = rng(stats.mu_mx, stats.mu_mn), rng(stats.sd_mx, stats.sd_mn)
+    r1_mu, r1_sd = rng(stats.h1m_mx, stats.h1m_mn), rng(stats.h1s_mx, stats.h1s_mn)
+    r2_mu, r2_sd = rng(stats.h2m_mx, stats.h2m_mn), rng(stats.h2s_mx, stats.h2s_mn)
 
     valid_seg = node_len >= 1.0
     l1 = jnp.floor(node_len / 2.0)
@@ -245,12 +292,16 @@ def _build_round(tree: HerculesTree, node_of: jax.Array,
     new_std = jnp.where(is_v, v_use_std, kind == 1)
 
     def mid_of(mn, mx):
-        return (sel(mn[:max_nodes]) + sel(mx[:max_nodes])) / 2.0
+        return (sel(mn) + sel(mx)) / 2.0
 
-    thr_h = jnp.where(kind == 1, mid_of(sd_mn, sd_mx), mid_of(mu_mn, mu_mx))
-    thr_v = jnp.where(v_use_h2,
-                      jnp.where(v_use_std, mid_of(h2s_mn, h2s_mx), mid_of(h2m_mn, h2m_mx)),
-                      jnp.where(v_use_std, mid_of(h1s_mn, h1s_mx), mid_of(h1m_mn, h1m_mx)))
+    thr_h = jnp.where(kind == 1, mid_of(stats.sd_mn, stats.sd_mx),
+                      mid_of(stats.mu_mn, stats.mu_mx))
+    thr_v = jnp.where(
+        v_use_h2,
+        jnp.where(v_use_std, mid_of(stats.h2s_mn, stats.h2s_mx),
+                  mid_of(stats.h2m_mn, stats.h2m_mx)),
+        jnp.where(v_use_std, mid_of(stats.h1s_mn, stats.h1s_mx),
+                  mid_of(stats.h1m_mn, stats.h1m_mx)))
     new_value = jnp.where(is_v, thr_v, thr_h)
 
     # child segmentation: V-split inserts g_mid (pad slot M-1 is always n)
@@ -284,19 +335,77 @@ def _build_round(tree: HerculesTree, node_of: jax.Array,
         num_segs=sc(sc(tree.num_segs, left_id, child_nsegs), right_id, child_nsegs),
         num_nodes=tree.num_nodes + 2 * jnp.sum(splitting.astype(jnp.int32)),
     )
+    return tree, jnp.sum(splitting.astype(jnp.int32))
 
-    # ---- 6. re-partition member series -------------------------------------
-    moved = splitting[node_of]
+
+def _route_members(tree: HerculesTree, node_of: jax.Array,
+                   p: jax.Array, p2: jax.Array) -> jax.Array:
+    """Round phase 6: move members of just-split leaves to the winning child.
+
+    A member moves iff its node stopped being a leaf this round (earlier
+    splits already re-homed their members), so this needs only the
+    post-decide tree — it runs independently per chunk.
+    """
+    moved = ~tree.is_leaf[node_of]
     stat = _range_stat(p, p2, tree.split_lo[node_of], tree.split_hi[node_of],
                        tree.split_use_std[node_of])
     go_right = stat >= tree.split_value[node_of]
     new_node = jnp.where(go_right, tree.right[node_of], tree.left[node_of])
-    node_of = jnp.where(moved, new_node, node_of).astype(jnp.int32)
+    return jnp.where(moved, new_node, node_of).astype(jnp.int32)
 
-    counts = jax.ops.segment_sum(jnp.ones((num,), jnp.int32), node_of,
-                                 num_segments=max_nodes)
+
+def _leaf_member_counts(node_of: jax.Array, max_nodes: int) -> jax.Array:
+    return jax.ops.segment_sum(jnp.ones(node_of.shape, jnp.int32), node_of,
+                               num_segments=max_nodes)
+
+
+@functools.partial(jax.jit, static_argnames=("tau",), donate_argnums=(0, 1))
+def _build_round(tree: HerculesTree, node_of: jax.Array,
+                 p: jax.Array, p2: jax.Array, *, tau: int):
+    """One level-synchronous split round. Returns (tree, node_of, num_split).
+
+    Composition of the chunkable primitives with a single chunk — the
+    chunked driver (:func:`build_tree_chunked`) runs the same stats /
+    decide / route functions over many chunks and merges, so both paths
+    build bit-identical trees.
+    """
+    stats = _round_stats(tree, node_of, p, p2)
+    tree, num_split = _round_decide(tree, stats, tau=tau)
+    node_of = _route_members(tree, node_of, p, p2)
+    counts = _leaf_member_counts(node_of, tree.max_nodes)
     tree = tree._replace(count=jnp.where(tree.is_leaf, counts, tree.count))
-    return tree, node_of, jnp.sum(splitting.astype(jnp.int32))
+    return tree, node_of, num_split
+
+
+def _synopsis_chunk_minmax(tree: HerculesTree, anc: jax.Array,
+                           p: jax.Array, p2: jax.Array):
+    """One chunk's contribution to the current-level synopsis fold:
+    (mu_mn, mu_mx, sd_mn, sd_mx), each (max_nodes, M). Associative —
+    chunks merge exactly via :func:`_merge_synopsis_minmax`."""
+    max_nodes = tree.max_nodes
+    ep = tree.endpoints[jnp.maximum(anc, 0)]
+    means, stds = S.segment_stats_from_prefix(p, p2, ep)
+    ids = jnp.where(anc >= 0, anc, max_nodes)
+    mu_mn, mu_mx = _seg_minmax(means, ids, max_nodes + 1)
+    sd_mn, sd_mx = _seg_minmax(stds, ids, max_nodes + 1)
+    return (mu_mn[:max_nodes], mu_mx[:max_nodes],
+            sd_mn[:max_nodes], sd_mx[:max_nodes])
+
+
+def _merge_synopsis_minmax(a, b):
+    return (jnp.minimum(a[0], b[0]), jnp.maximum(a[1], b[1]),
+            jnp.minimum(a[2], b[2]), jnp.maximum(a[3], b[3]))
+
+
+def _synopsis_fold(tree: HerculesTree, mm) -> HerculesTree:
+    """Fold merged (mu_mn, mu_mx, sd_mn, sd_mx) into the running synopsis.
+    Min/max identities mean untouched slots keep their +-big init."""
+    old = tree.synopsis
+    syn = jnp.stack([jnp.minimum(old[..., 0], mm[0]),
+                     jnp.maximum(old[..., 1], mm[1]),
+                     jnp.minimum(old[..., 2], mm[2]),
+                     jnp.maximum(old[..., 3], mm[3])], axis=-1)
+    return tree._replace(synopsis=syn)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -309,20 +418,10 @@ def _synopsis_level(tree: HerculesTree, anc: jax.Array,
     (Algorithms 7–9): instead of per-leaf worker threads walking up with
     locks, one vectorized reduction per tree level.
     """
-    max_nodes = tree.max_nodes
-    ep = tree.endpoints[jnp.maximum(anc, 0)]
-    means, stds = S.segment_stats_from_prefix(p, p2, ep)
-    ids = jnp.where(anc >= 0, anc, max_nodes)
-    mu_mn, mu_mx = _seg_minmax(means, ids, max_nodes + 1)
-    sd_mn, sd_mx = _seg_minmax(stds, ids, max_nodes + 1)
-    old = tree.synopsis
-    # fold with min/max identities: untouched slots keep their +-big init
-    syn = jnp.stack([jnp.minimum(old[..., 0], mu_mn[:max_nodes]),
-                     jnp.maximum(old[..., 1], mu_mx[:max_nodes]),
-                     jnp.minimum(old[..., 2], sd_mn[:max_nodes]),
-                     jnp.maximum(old[..., 3], sd_mx[:max_nodes])], axis=-1)
+    mm = _synopsis_chunk_minmax(tree, anc, p, p2)
+    tree = _synopsis_fold(tree, mm)
     anc = jnp.where(anc >= 0, tree.parent[jnp.maximum(anc, 0)], -1)
-    return tree._replace(synopsis=syn), anc
+    return tree, anc
 
 
 _SYN_BIG = 3.0e38
@@ -380,6 +479,101 @@ def build_tree(data: jax.Array, config: BuildConfig) -> tuple[HerculesTree, jax.
     max_depth = int(jnp.max(jnp.where(jnp.arange(max_nodes) < tree.num_nodes,
                                       tree.depth, 0)))
     tree = compute_synopses(tree, node_of, p, p2, max_depth)
+    return tree, node_of
+
+
+# ---------------------------------------------------------------------------
+# Chunked (out-of-core) build driver
+# ---------------------------------------------------------------------------
+
+_round_stats_jit = jax.jit(_round_stats)
+_merge_round_stats_jit = jax.jit(_merge_round_stats, donate_argnums=(0,))
+_round_decide_jit = functools.partial(jax.jit, static_argnames=("tau",),
+                                      donate_argnums=(0,))(_round_decide)
+_route_members_jit = jax.jit(_route_members)
+_synopsis_chunk_minmax_jit = jax.jit(_synopsis_chunk_minmax)
+_merge_synopsis_minmax_jit = jax.jit(_merge_synopsis_minmax, donate_argnums=(0,))
+_synopsis_fold_jit = jax.jit(_synopsis_fold, donate_argnums=(0,))
+
+
+def compute_synopses_chunked(tree: HerculesTree, node_of: jax.Array,
+                             source, max_depth: int) -> HerculesTree:
+    """Chunk-streamed :func:`compute_synopses` — bit-identical synopses
+    without ever holding the collection (or its prefix sums) on device."""
+    from repro.data.pipeline import iter_device_chunks
+
+    init = jnp.stack([jnp.full(tree.synopsis.shape[:-1], _SYN_BIG, jnp.float32),
+                      jnp.full(tree.synopsis.shape[:-1], -_SYN_BIG, jnp.float32),
+                      jnp.full(tree.synopsis.shape[:-1], _SYN_BIG, jnp.float32),
+                      jnp.full(tree.synopsis.shape[:-1], -_SYN_BIG, jnp.float32)],
+                     axis=-1)
+    tree = tree._replace(synopsis=init)
+    anc = node_of
+    for _ in range(max_depth + 1):
+        mm = None
+        for start, chunk in iter_device_chunks(source):
+            p, p2 = S.prefix_sums(chunk)
+            cm = _synopsis_chunk_minmax_jit(
+                tree, anc[start:start + chunk.shape[0]], p, p2)
+            mm = cm if mm is None else _merge_synopsis_minmax_jit(mm, cm)
+        tree = _synopsis_fold_jit(tree, mm)
+        anc = jnp.where(anc >= 0, tree.parent[jnp.maximum(anc, 0)], -1)
+    untouched = tree.synopsis[..., 0] >= _SYN_BIG
+    syn = jnp.where(untouched[..., None], 0.0, tree.synopsis)
+    return tree._replace(synopsis=syn)
+
+
+def build_tree_chunked(source, config: BuildConfig) -> tuple[HerculesTree, jax.Array]:
+    """Out-of-core :func:`build_tree`: stream the collection in chunks.
+
+    ``source`` is a :class:`repro.data.pipeline.ChunkSource` (re-iterable,
+    fixed chunk boundaries). Each round makes two streamed passes — one to
+    accumulate :class:`RoundStats` (merged with exact min/max/sum), one to
+    re-partition members — so device residency is bounded by the two
+    in-flight chunks of the double-buffered stream plus O(max_nodes * M)
+    tree state plus the (N,) node assignment, never the (N, n) collection. Because every cross-series reduction is
+    associative and per-series statistics depend only on that series' own
+    prefix sums, the resulting tree is **bit-identical** to the one-shot
+    build on the concatenated data (asserted in tests/test_storage.py).
+
+    Cost: prefix sums are recomputed per chunk per pass instead of being
+    materialized once — the classic out-of-core trade of FLOPs for memory
+    (the paper's disk-based build makes the same trade with its two-pass
+    leaf writes).
+    """
+    from repro.data.pipeline import iter_device_chunks
+
+    num, n = source.num_series, source.series_len
+    max_nodes = config.resolve_max_nodes(num)
+    if config.init_segments > config.max_segments:
+        raise ValueError("init_segments > max_segments")
+    tree = _empty_tree(max_nodes, config.max_segments, n, config.init_segments)
+    node_of = jnp.zeros((num,), jnp.int32)
+    tree = tree._replace(count=tree.count.at[0].set(num))
+
+    for _ in range(config.max_rounds):
+        stats = None
+        for start, chunk in iter_device_chunks(source):
+            p, p2 = S.prefix_sums(chunk)
+            cs = _round_stats_jit(tree, node_of[start:start + chunk.shape[0]],
+                                  p, p2)
+            stats = cs if stats is None else _merge_round_stats_jit(stats, cs)
+        tree, num_split = _round_decide_jit(tree, stats,
+                                            tau=config.leaf_capacity)
+        if int(num_split) == 0:
+            break
+        parts = []
+        for start, chunk in iter_device_chunks(source):
+            p, p2 = S.prefix_sums(chunk)
+            parts.append(_route_members_jit(
+                tree, node_of[start:start + chunk.shape[0]], p, p2))
+        node_of = jnp.concatenate(parts)
+        counts = _leaf_member_counts(node_of, max_nodes)
+        tree = tree._replace(count=jnp.where(tree.is_leaf, counts, tree.count))
+
+    max_depth = int(jnp.max(jnp.where(jnp.arange(max_nodes) < tree.num_nodes,
+                                      tree.depth, 0)))
+    tree = compute_synopses_chunked(tree, node_of, source, max_depth)
     return tree, node_of
 
 

@@ -6,10 +6,21 @@ device compute: while the device works on batch t, the host prepares and
 transfers batch t+1 (``jax.device_put`` is async). State is (seed, step) so
 a restarted worker regenerates exactly the same stream (the fault-tolerance
 contract used by launch/train.py).
+
+This module also owns the **chunk sources** feeding the out-of-core build
+(``core/tree.py::build_tree_chunked`` and ``repro/storage``): a
+:class:`ChunkSource` carves one series collection into fixed-size row chunks
+with stable boundaries, re-iterable any number of times (the chunked build
+makes two passes per round). :class:`ArrayChunkSource` wraps an in-memory
+array; :class:`NpyChunkSource` memory-maps a ``.npy`` file so a chunk's rows
+are only read from disk when sliced. :func:`iter_device_chunks` streams any
+source through the two-slot buffer: chunk i+1's (async) host→device transfer
+is issued before chunk i is handed to the consumer, so the copy overlaps the
+consumer's compute.
 """
 from __future__ import annotations
 
-from typing import Callable, Iterator
+from typing import Callable, Iterator, Protocol, runtime_checkable
 
 import jax
 import numpy as np
@@ -46,3 +57,95 @@ class DoubleBufferedLoader:
     def state(self) -> int:
         """Checkpointable pipeline state: the next step index."""
         return self._step
+
+
+# ---------------------------------------------------------------------------
+# Chunk sources (out-of-core ingest)
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ChunkSource(Protocol):
+    """A series collection carved into fixed-size row chunks.
+
+    Chunk boundaries are a pure function of (num_series, chunk_size), so
+    repeated iterations see identical chunks — the contract the two-pass
+    chunked build rounds rely on. ``chunk(i)`` returns host rows
+    ``[i * chunk_size, min((i + 1) * chunk_size, num_series))`` as float32.
+    """
+
+    num_series: int
+    series_len: int
+    chunk_size: int
+
+    @property
+    def num_chunks(self) -> int: ...
+
+    def chunk(self, i: int) -> np.ndarray: ...
+
+
+class _ChunkedBase:
+    """Shared chunk arithmetic over a row-sliceable backing store."""
+
+    def __init__(self, rows, chunk_size: int):
+        if chunk_size <= 0:
+            raise ValueError("chunk_size must be positive")
+        self._rows = rows
+        self.num_series = int(rows.shape[0])
+        self.series_len = int(rows.shape[1])
+        self.chunk_size = int(chunk_size)
+
+    @property
+    def num_chunks(self) -> int:
+        return -(-self.num_series // self.chunk_size)
+
+    def chunk(self, i: int) -> np.ndarray:
+        if not 0 <= i < self.num_chunks:
+            raise IndexError(f"chunk {i} out of range ({self.num_chunks})")
+        lo = i * self.chunk_size
+        hi = min(lo + self.chunk_size, self.num_series)
+        return np.asarray(self._rows[lo:hi], dtype=np.float32)
+
+
+class ArrayChunkSource(_ChunkedBase):
+    """Chunk view over an in-memory (N, n) array — tests and the
+    chunked-vs-one-shot equality harness."""
+
+    def __init__(self, data, chunk_size: int):
+        super().__init__(np.asarray(data), chunk_size)
+
+
+class NpyChunkSource(_ChunkedBase):
+    """Chunk view over an on-disk ``.npy`` file via ``np.load(mmap_mode="r")``
+    — rows hit RAM only when a chunk is sliced, so the build's host
+    footprint is one chunk, not the collection."""
+
+    def __init__(self, path: str, chunk_size: int):
+        mm = np.load(path, mmap_mode="r")
+        if mm.ndim != 2:
+            raise ValueError(f"{path}: expected a 2-D series collection, "
+                             f"got shape {mm.shape}")
+        super().__init__(mm, chunk_size)
+        self.path = path
+
+
+def iter_chunks(source: ChunkSource) -> Iterator[tuple[int, np.ndarray]]:
+    """Yield (row_start, host_chunk) over the whole source."""
+    for i in range(source.num_chunks):
+        yield i * source.chunk_size, source.chunk(i)
+
+
+def iter_device_chunks(source: ChunkSource,
+                       device=None) -> Iterator[tuple[int, jax.Array]]:
+    """Yield (row_start, device_chunk) with two-slot prefetch (DBuffer):
+    chunk i+1's async ``device_put`` is issued before chunk i is yielded,
+    overlapping its copy with the consumer's compute on chunk i."""
+    device = device or jax.devices()[0]
+    n = source.num_chunks
+    if n == 0:
+        return
+    staged = jax.device_put(source.chunk(0), device)
+    for i in range(n):
+        cur = staged
+        if i + 1 < n:
+            staged = jax.device_put(source.chunk(i + 1), device)
+        yield i * source.chunk_size, cur

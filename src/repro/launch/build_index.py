@@ -1,0 +1,242 @@
+"""Index lifecycle CLI: chunked build → save; load → query/serve.
+
+The cross-process persistence harness CI runs (jobs in .github/workflows):
+process 1 builds an index out-of-core and saves it; process 2 regenerates
+the same deterministic collection, loads the index, and asserts the loaded
+backends answer **bit-identically** to ones built in memory — plus an
+out-of-core scan over a collection several times larger than its memory
+budget.
+
+    # build (chunked, streamed to disk) + one-shot equality check
+    PYTHONPATH=src python -m repro.launch.build_index build \
+        --out idx --num 8192 --length 64 --seed 7 --chunk-size 1024 \
+        --verify-one-shot --json build.json
+
+    # fresh process: load + bit-identical parity vs in-memory backends
+    PYTHONPATH=src python -m repro.launch.build_index query \
+        --index idx --verify parity --json parity.json
+
+    # out-of-core scan, collection >= 4x the budget
+    PYTHONPATH=src python -m repro.launch.build_index query \
+        --index idx --backend ooc-scan --memory-budget-mb 0.5 --verify exact
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.api import (DISK_BACKEND_NAMES, BuildConfig, HerculesIndex,
+                       IndexConfig, LocalBackend, NpyChunkSource, QueryEngine,
+                       ScanBackend, SearchConfig, ArrayChunkSource,
+                       brute_force_knn, build_index_to_disk, make_disk_backend,
+                       open_index)
+from repro.data import make_query_workload, random_walks
+
+
+def _write_json(path: str | None, payload: dict) -> None:
+    if not path:
+        return
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+
+
+def _index_config(args) -> IndexConfig:
+    return IndexConfig(
+        build=BuildConfig(leaf_capacity=args.leaf_size),
+        search=SearchConfig(k=args.k, l_max=args.l_max,
+                            chunk=min(1024, args.num),
+                            scan_block=min(4096, args.num)))
+
+
+def _synthetic(num: int, length: int, seed: int) -> np.ndarray:
+    return np.asarray(random_walks(jax.random.PRNGKey(seed), num, length))
+
+
+def cmd_build(args) -> None:
+    if args.input:
+        source = NpyChunkSource(args.input, args.chunk_size)
+        args.num, args.length = source.num_series, source.series_len
+        provenance = {"kind": "npy", "path": args.input}
+    else:
+        data = _synthetic(args.num, args.length, args.seed)
+        source = ArrayChunkSource(data, args.chunk_size)
+        provenance = {"kind": "synthetic", "seed": args.seed,
+                      "num": args.num, "length": args.length}
+
+    cfg = _index_config(args)
+    t0 = time.perf_counter()
+    manifest = build_index_to_disk(source, args.out, cfg,
+                                   extra_meta={"data": provenance})
+    build_s = time.perf_counter() - t0
+    thr = source.num_series / max(build_s, 1e-9)
+    print(f"built + saved {source.num_series} x {source.series_len} in "
+          f"{build_s:.2f}s ({thr:.0f} series/s, chunks of {args.chunk_size}) "
+          f"-> {args.out}")
+
+    rows = {"num_series": source.num_series, "series_len": source.series_len,
+            "chunk_size": args.chunk_size, "build_seconds": round(build_s, 3),
+            "series_per_second": round(thr, 1),
+            "manifest_build": manifest["extra"]["build"]}
+
+    if args.verify_one_shot:
+        if args.input:
+            raise SystemExit("--verify-one-shot needs a synthetic build "
+                             "(regenerates the data in memory)")
+        t0 = time.perf_counter()
+        mem = HerculesIndex.build(data, cfg)
+        rows["oneshot_build_seconds"] = round(time.perf_counter() - t0, 3)
+        loaded = make_disk_backend("local", args.out).index
+        for name in mem.tree._fields:
+            a = np.asarray(getattr(mem.tree, name))
+            b = np.asarray(getattr(loaded.tree, name))
+            if not np.array_equal(a, b):
+                raise SystemExit(f"chunked tree differs from one-shot: {name}")
+        for name in ("lrd", "lsd", "perm", "leaf_start", "leaf_count",
+                     "leaf_synopsis"):
+            a = np.asarray(getattr(mem.layout, name))
+            b = np.asarray(getattr(loaded.layout, name))
+            if not np.array_equal(a, b):
+                raise SystemExit(f"chunked layout differs from one-shot: {name}")
+        print("chunked streamed build == one-shot in-memory build "
+              "(tree + layout bit-identical)")
+        rows["oneshot_equal"] = True
+    _write_json(args.json, rows)
+
+
+def _regenerate(saved) -> np.ndarray:
+    prov = saved.manifest["extra"].get("data", {})
+    if prov.get("kind") == "synthetic":
+        return _synthetic(prov["num"], prov["length"], prov["seed"])
+    # fall back to the collection recorded in the LRD file itself
+    return saved.original_data()
+
+
+def _assert_same(name: str, a, b) -> None:
+    for field, x, y in (("dists", a.dists, b.dists), ("ids", a.ids, b.ids)):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            raise SystemExit(f"{name}: {field} differ between disk-fed and "
+                             f"in-memory backends")
+    print(f"{name}: bit-identical")
+
+
+def cmd_query(args) -> None:
+    saved = open_index(args.index)
+    k = args.k
+    data = _regenerate(saved)
+    queries = np.asarray(make_query_workload(
+        jax.random.PRNGKey(args.query_seed), data, args.queries,
+        args.difficulty))
+
+    rows: dict = {"index": args.index, "backend": args.backend, "k": k,
+                  "num_series": saved.num_series,
+                  "memory_budget_mb": args.memory_budget_mb}
+
+    search = None
+    if args.backend == "ooc-scan":
+        # fit the scan block inside the per-block streaming cap (half the
+        # budget: two blocks in flight; validation rejects anything larger)
+        stream_rows = max(int(args.memory_budget_mb * (1 << 20)
+                              // (4 * saved.series_len)) // 2, 1)
+        base = saved.config.search
+        if stream_rows < base.scan_block:
+            import dataclasses
+            search = dataclasses.replace(base, scan_block=stream_rows)
+            print(f"scan_block {base.scan_block} -> {search.scan_block} "
+                  f"(fits the {args.memory_budget_mb} MiB budget)")
+
+    t0 = time.perf_counter()
+    backend = make_disk_backend(args.backend, args.index, search=search,
+                                memory_budget_mb=args.memory_budget_mb)
+    rows["load_seconds"] = round(time.perf_counter() - t0, 3)
+
+    eng = QueryEngine(backend)
+    t0 = time.perf_counter()
+    res = eng.knn(queries, k=k)
+    rows["query_seconds"] = round(time.perf_counter() - t0, 3)
+    print(f"{args.backend}: loaded in {rows['load_seconds']}s, answered "
+          f"{len(queries)} queries in {rows['query_seconds']}s")
+
+    if args.verify == "parity":
+        # disk-fed vs in-memory, all three backends, bit-identical
+        cfg = saved.config
+        scfg = dict(k=k)
+        mem_local = LocalBackend(HerculesIndex.build(data, cfg))
+        _assert_same("local", make_disk_backend("local", args.index)
+                     .knn(queries, **scfg), mem_local.knn(queries, **scfg))
+        mem_scan = ScanBackend(data, cfg.search)
+        disk_scan = make_disk_backend("scan", args.index)
+        _assert_same("scan", disk_scan.knn(queries, **scfg),
+                     mem_scan.knn(queries, **scfg))
+        from repro.core.engine import ShardedBackend
+        from repro.distributed.search import build_distributed_index
+        shards = len(jax.devices())
+        if saved.num_series % shards == 0:
+            mem_sh = ShardedBackend(build_distributed_index(
+                jax.numpy.asarray(data), shards, cfg))
+            disk_sh = ShardedBackend(build_distributed_index(
+                jax.numpy.asarray(saved.original_data()), shards, cfg))
+            _assert_same("sharded", disk_sh.knn(queries, **scfg),
+                         mem_sh.knn(queries, **scfg))
+        rows["parity"] = "bit-identical"
+    elif args.verify == "exact":
+        bf_d, _ = brute_force_knn(jax.numpy.asarray(data),
+                                  jax.numpy.asarray(queries), k)
+        if not np.allclose(np.asarray(res.dists), np.asarray(bf_d),
+                           rtol=1e-5, atol=1e-5):
+            raise SystemExit(f"{args.backend}: answers not exact vs brute "
+                             f"force")
+        budget_bytes = args.memory_budget_mb * (1 << 20)
+        coll_bytes = saved.num_series * saved.series_len * 4
+        print(f"exact vs brute force — OK (collection {coll_bytes / 2**20:.2f}"
+              f" MiB = {coll_bytes / budget_bytes:.1f}x the "
+              f"{args.memory_budget_mb} MiB budget)")
+        rows["exact"] = True
+        rows["collection_over_budget"] = round(coll_bytes / budget_bytes, 2)
+        rows["backend_stats"] = backend.stats()
+    _write_json(args.json, rows)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("build", help="chunked build -> save to disk")
+    b.add_argument("--out", required=True)
+    b.add_argument("--input", default=None,
+                   help=".npy collection (memory-mapped); else synthetic")
+    b.add_argument("--num", type=int, default=8192)
+    b.add_argument("--length", type=int, default=64)
+    b.add_argument("--seed", type=int, default=7)
+    b.add_argument("--chunk-size", type=int, default=4096)
+    b.add_argument("--leaf-size", type=int, default=128)
+    b.add_argument("--k", type=int, default=1)
+    b.add_argument("--l-max", type=int, default=8)
+    b.add_argument("--verify-one-shot", action="store_true",
+                   help="assert chunked build == one-shot build bit-for-bit")
+    b.add_argument("--json", default=None)
+    b.set_defaults(fn=cmd_build)
+
+    q = sub.add_parser("query", help="load a saved index and answer queries")
+    q.add_argument("--index", required=True)
+    q.add_argument("--backend", choices=DISK_BACKEND_NAMES, default="local")
+    q.add_argument("--memory-budget-mb", type=float, default=64.0)
+    q.add_argument("--queries", type=int, default=16)
+    q.add_argument("--difficulty", default="5%")
+    q.add_argument("--query-seed", type=int, default=1)
+    q.add_argument("--k", type=int, default=1)
+    q.add_argument("--verify", choices=("none", "parity", "exact"),
+                   default="none")
+    q.add_argument("--json", default=None)
+    q.set_defaults(fn=cmd_query)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

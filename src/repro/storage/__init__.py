@@ -1,0 +1,11 @@
+# Persistence + out-of-core subsystem: the versioned on-disk index format
+# (save/load/open with manifest + checksums) and the chunked streaming
+# builders that never materialize the collection. The serving-side
+# out-of-core backends live in core/engine.py and consume SavedIndex.
+from repro.storage.build import (  # noqa: F401
+    build_index_streaming, build_index_to_disk,
+)
+from repro.storage.format import (  # noqa: F401
+    FORMAT_NAME, FORMAT_VERSION, IndexFormatError, SavedIndex, load_index,
+    open_index, read_manifest, save_index, verify_files,
+)

@@ -1,0 +1,144 @@
+"""Chunked streaming index construction (build-side out-of-core).
+
+Two entry points over the same machinery:
+
+* :func:`build_index_streaming` — chunked build to an **in-memory** index.
+  Device residency during the build is bounded by one chunk (plus tree
+  state); the finished layout is then materialized normally. Bit-identical
+  to ``HerculesIndex.build`` on the same data (tests/test_storage.py).
+
+* :func:`build_index_to_disk` — chunked build straight to an **index
+  directory**: the LRD/LSD files are created as on-disk memmaps and each
+  ingest chunk is scattered to its layout positions, so the full collection
+  is never materialized in host or device memory. The result loads
+  bit-identically to a save of the in-memory build.
+
+Both consume a :class:`repro.data.pipeline.ChunkSource` (re-iterable, fixed
+chunk boundaries) and move chunks host→device through the double-buffered
+:func:`iter_device_chunks` stream.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import summaries as S
+from repro.core.index import HerculesIndex, IndexConfig
+from repro.core.layout import (assemble_layout, compute_layout_geometry,
+                               leaf_tables, LayoutGeometry)
+from repro.core.tree import HerculesTree, build_tree_chunked, tree_stats
+from repro.data.pipeline import ChunkSource, iter_chunks, iter_device_chunks
+from repro.storage.format import (LAYOUT_FILE, LAYOUT_STATIC_FIELDS, LRD_FILE,
+                                  LSD_FILE, SMALL_LAYOUT_FIELDS, TREE_FILE,
+                                  write_manifest)
+
+
+def _check_series_len(source: ChunkSource, config: IndexConfig) -> None:
+    if source.series_len % config.sax_segments:
+        raise ValueError(
+            f"series length {source.series_len} must be divisible by "
+            f"{config.sax_segments} iSAX segments")
+
+
+def _chunked_tree_and_geometry(source: ChunkSource, config: IndexConfig):
+    tree, node_of = build_tree_chunked(source, config.build)
+    geo = compute_layout_geometry(
+        tree, node_of, source.num_series, source.series_len,
+        pad_series_to_multiple=config.search.pad_multiple())
+    return tree, geo
+
+
+def build_index_streaming(source: ChunkSource,
+                          config: IndexConfig | None = None) -> HerculesIndex:
+    """Chunk-streamed build of an in-memory index (never more than one chunk
+    of raw series on device during construction)."""
+    config = config or IndexConfig()
+    _check_series_len(source, config)
+    tree, geo = _chunked_tree_and_geometry(source, config)
+
+    n = source.series_len
+    lrd = np.zeros((geo.n_pad, n), np.float32)
+    lsd = np.zeros((geo.n_pad, config.sax_segments), np.uint8)
+    for start, chunk in iter_device_chunks(source):
+        pos = geo.inv_perm[start:start + chunk.shape[0]]
+        lrd[pos] = np.asarray(chunk)
+        lsd[pos] = np.asarray(S.isax(chunk, config.sax_segments))
+
+    layout = assemble_layout(tree, geo, lrd, lsd)
+    return HerculesIndex(tree, layout, config, tree_stats(tree)["max_depth"])
+
+
+def _write_small_arrays(path: str, tree: HerculesTree, geo: LayoutGeometry):
+    """tree.npz + layout.npz from a built tree and its placement plan —
+    identical bytes to what save_index writes for the same index."""
+    np.savez_compressed(
+        os.path.join(path, TREE_FILE),
+        **{name: np.asarray(val) for name, val in tree._asdict().items()})
+    syn, ep, seg_lens = leaf_tables(tree, geo)
+    small = {
+        "perm": geo.perm, "inv_perm": geo.inv_perm,
+        "leaf_rank": geo.leaf_rank, "leaf_node": geo.leaf_node,
+        "leaf_start": geo.leaf_start, "leaf_count": geo.leaf_count,
+        "leaf_synopsis": np.asarray(syn), "leaf_endpoints": np.asarray(ep),
+        "leaf_seg_lens": np.asarray(seg_lens),
+        "series_leaf_rank": geo.series_leaf_rank,
+    }
+    assert set(small) == set(SMALL_LAYOUT_FIELDS)
+    np.savez_compressed(os.path.join(path, LAYOUT_FILE), **small)
+
+
+def build_index_to_disk(source: ChunkSource, path: str,
+                        config: IndexConfig | None = None,
+                        extra_meta: dict | None = None) -> dict:
+    """Chunk-streamed build straight to an index directory; the collection
+    only ever exists as the on-disk LRD file. Returns the manifest (plus
+    timing under ``extra["build"]``)."""
+    config = config or IndexConfig()
+    _check_series_len(source, config)
+    t0 = time.perf_counter()
+    tree, geo = _chunked_tree_and_geometry(source, config)
+    t_tree = time.perf_counter() - t0
+
+    os.makedirs(path, exist_ok=True)
+    stale = os.path.join(path, "manifest.json")
+    if os.path.exists(stale):
+        os.remove(stale)
+
+    # LRD/LSD as on-disk memmaps, scattered chunk by chunk. Pad rows beyond
+    # num_series stay zero (ftruncate zero-fill) — the same bytes the
+    # in-memory layout pads with.
+    t0 = time.perf_counter()
+    n = source.series_len
+    lrd = np.lib.format.open_memmap(
+        os.path.join(path, LRD_FILE), mode="w+", dtype=np.float32,
+        shape=(geo.n_pad, n))
+    lsd = np.lib.format.open_memmap(
+        os.path.join(path, LSD_FILE), mode="w+", dtype=np.uint8,
+        shape=(geo.n_pad, config.sax_segments))
+    for start, chunk in iter_chunks(source):
+        dev = jnp.asarray(chunk)
+        pos = geo.inv_perm[start:start + chunk.shape[0]]
+        lrd[pos] = chunk
+        lsd[pos] = np.asarray(S.isax(dev, config.sax_segments))
+    lrd.flush()
+    lsd.flush()
+    del lrd, lsd
+    t_write = time.perf_counter() - t0
+
+    _write_small_arrays(path, tree, geo)
+    statics = {k: getattr(geo, k) for k in LAYOUT_STATIC_FIELDS}
+    extra = dict(extra_meta or {})
+    extra["build"] = {
+        "streaming": True,
+        "chunk_size": source.chunk_size,
+        "num_chunks": source.num_chunks,
+        "tree_seconds": round(t_tree, 3),
+        "write_seconds": round(t_write, 3),
+        "series_per_second": round(source.num_series / max(t_tree + t_write,
+                                                           1e-9), 1),
+    }
+    return write_manifest(path, config, tree_stats(tree)["max_depth"],
+                          statics, extra=extra)

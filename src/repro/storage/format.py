@@ -1,0 +1,298 @@
+"""Versioned on-disk Hercules index format (the paper's persisted artifacts).
+
+An index directory holds the three files the paper names plus a sidecar of
+small arrays and a manifest that commits the whole set:
+
+    <dir>/
+      manifest.json   format name + version, build/search config, statics,
+                      per-file byte sizes and CRC32 checksums. Written last
+                      (atomically) — its presence commits the save.
+      tree.npz        HTree: every HerculesTree array (small, compressed).
+      layout.npz      small layout arrays (perm, leaf extents, pruning
+                      tables) — everything but the two big files.
+      lrd.npy         LRDFile: raw series, leaf in-order, (n_pad, n) float32.
+                      A plain ``np.save`` array => ``np.load(mmap_mode="r")``
+                      serves it without reading it into RAM.
+      lsd.npy         LSDFile: position-aligned iSAX sidecar, (n_pad, m) uint8.
+
+Loading offers two shapes: :func:`load_index` materializes a full in-memory
+:class:`HerculesIndex` (bit-identical to the one that was saved), while
+:func:`open_index` returns a :class:`SavedIndex` handle whose LRD/LSD stay
+memory-mapped — the out-of-core backends (``core/engine.py``) stream leaf and
+scan blocks from it under a memory budget.
+
+Every load validates the manifest (format name, version <= supported) and,
+with ``verify=True`` (the default), re-checksums every file — truncation or
+corruption surfaces as a clear :class:`IndexFormatError` instead of garbage
+answers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import HerculesIndex, IndexConfig
+from repro.core.layout import HerculesLayout
+from repro.core.search import SearchConfig
+from repro.core.tree import BuildConfig, HerculesTree
+
+FORMAT_NAME = "hercules-index"
+FORMAT_VERSION = 1
+
+MANIFEST_FILE = "manifest.json"
+TREE_FILE = "tree.npz"
+LAYOUT_FILE = "layout.npz"
+LRD_FILE = "lrd.npy"
+LSD_FILE = "lsd.npy"
+_ARRAY_FILES = (TREE_FILE, LAYOUT_FILE, LRD_FILE, LSD_FILE)
+
+# HerculesLayout fields persisted in layout.npz (everything but lrd/lsd and
+# the static ints, which live in the manifest)
+SMALL_LAYOUT_FIELDS = (
+    "perm", "inv_perm", "leaf_rank", "leaf_node", "leaf_start", "leaf_count",
+    "leaf_synopsis", "leaf_endpoints", "leaf_seg_lens", "series_leaf_rank")
+LAYOUT_STATIC_FIELDS = ("series_len", "max_leaf", "num_leaves", "num_series")
+
+
+class IndexFormatError(RuntimeError):
+    """A saved index is missing, truncated, corrupted, or from an
+    unsupported format version."""
+
+
+# ---------------------------------------------------------------------------
+# checksums
+# ---------------------------------------------------------------------------
+
+def _crc32_file(path: str, blocksize: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(blocksize)
+            if not block:
+                return crc & 0xFFFFFFFF
+            crc = zlib.crc32(block, crc)
+
+
+def _file_entry(path: str) -> dict:
+    return {"bytes": os.path.getsize(path), "crc32": _crc32_file(path)}
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+
+def _config_meta(config: IndexConfig) -> dict:
+    return {"build": dataclasses.asdict(config.build),
+            "search": dataclasses.asdict(config.search),
+            "sax_segments": config.sax_segments}
+
+
+def write_manifest(path: str, config: IndexConfig, max_depth: int,
+                   statics: dict, extra: dict | None = None) -> dict:
+    """Checksum the four array files already present under ``path`` and
+    commit them with an atomically-published manifest. Shared by
+    :func:`save_index` and the streaming writer (storage/build.py)."""
+    files = {}
+    for name in _ARRAY_FILES:
+        fp = os.path.join(path, name)
+        if not os.path.exists(fp):
+            raise IndexFormatError(f"cannot commit {path}: missing {name}")
+        files[name] = _file_entry(fp)
+    manifest = {
+        "format": FORMAT_NAME,
+        "version": FORMAT_VERSION,
+        "created_unix": time.time(),
+        "config": _config_meta(config),
+        "max_depth": int(max_depth),
+        "layout_static": {k: int(v) for k, v in statics.items()},
+        "files": files,
+        "extra": dict(extra or {}),
+    }
+    tmp = os.path.join(path, MANIFEST_FILE + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    os.replace(tmp, os.path.join(path, MANIFEST_FILE))
+    return manifest
+
+
+def save_index(index: HerculesIndex, path: str,
+               extra_meta: dict | None = None) -> dict:
+    """Persist an in-memory index as an index directory. Returns the
+    manifest. Overwrites any previous index at ``path`` (the stale manifest
+    is removed first, so a failed overwrite never half-validates)."""
+    os.makedirs(path, exist_ok=True)
+    stale = os.path.join(path, MANIFEST_FILE)
+    if os.path.exists(stale):
+        os.remove(stale)
+
+    np.savez_compressed(
+        os.path.join(path, TREE_FILE),
+        **{name: np.asarray(val) for name, val in index.tree._asdict().items()})
+    lay = index.layout
+    np.savez_compressed(
+        os.path.join(path, LAYOUT_FILE),
+        **{name: np.asarray(getattr(lay, name)) for name in SMALL_LAYOUT_FIELDS})
+    np.save(os.path.join(path, LRD_FILE), np.asarray(lay.lrd))
+    np.save(os.path.join(path, LSD_FILE), np.asarray(lay.lsd))
+
+    statics = {k: getattr(lay, k) for k in LAYOUT_STATIC_FIELDS}
+    return write_manifest(path, index.config, index.max_depth, statics,
+                          extra=extra_meta)
+
+
+# ---------------------------------------------------------------------------
+# load
+# ---------------------------------------------------------------------------
+
+def read_manifest(path: str) -> dict:
+    mf = os.path.join(path, MANIFEST_FILE)
+    if not os.path.isdir(path) or not os.path.exists(mf):
+        raise IndexFormatError(
+            f"{path!r} is not an index directory (no {MANIFEST_FILE})")
+    try:
+        with open(mf) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise IndexFormatError(f"unreadable manifest in {path!r}: {e}") from e
+    if manifest.get("format") != FORMAT_NAME:
+        raise IndexFormatError(
+            f"{path!r}: format {manifest.get('format')!r} is not "
+            f"{FORMAT_NAME!r}")
+    version = manifest.get("version")
+    if not isinstance(version, int) or version > FORMAT_VERSION or version < 1:
+        raise IndexFormatError(
+            f"{path!r}: format version {version!r} not supported "
+            f"(this build reads versions 1..{FORMAT_VERSION})")
+    return manifest
+
+
+def verify_files(path: str, manifest: dict) -> None:
+    """Check every manifest-listed file's size and CRC32. Raises
+    :class:`IndexFormatError` naming the first bad file."""
+    for name, entry in manifest.get("files", {}).items():
+        fp = os.path.join(path, name)
+        if not os.path.exists(fp):
+            raise IndexFormatError(f"{path!r}: missing file {name}")
+        size = os.path.getsize(fp)
+        if size != entry["bytes"]:
+            raise IndexFormatError(
+                f"{path!r}: {name} is {size} bytes, manifest says "
+                f"{entry['bytes']} (truncated or overwritten)")
+        crc = _crc32_file(fp)
+        if crc != entry["crc32"]:
+            raise IndexFormatError(
+                f"{path!r}: {name} checksum mismatch "
+                f"(crc32 {crc:#010x} != {entry['crc32']:#010x}; corrupted)")
+
+
+def _load_npz(path: str, name: str) -> dict[str, np.ndarray]:
+    try:
+        with np.load(os.path.join(path, name), allow_pickle=False) as z:
+            return {k: z[k] for k in z.files}
+    except (OSError, ValueError, zlib.error) as e:
+        raise IndexFormatError(f"{path!r}: cannot read {name}: {e}") from e
+
+
+def _restore_config(manifest: dict) -> IndexConfig:
+    cfg = manifest["config"]
+    try:
+        return IndexConfig(build=BuildConfig(**cfg["build"]),
+                           search=SearchConfig(**cfg["search"]),
+                           sax_segments=cfg["sax_segments"])
+    except (KeyError, TypeError) as e:
+        raise IndexFormatError(f"manifest config does not match this build's "
+                               f"schema: {e}") from e
+
+
+@dataclasses.dataclass
+class SavedIndex:
+    """An opened on-disk index: small state resident, big files memory-mapped.
+
+    ``tree`` and the ``small`` layout arrays (a few MB) are loaded; ``lrd``
+    and ``lsd`` stay as read-only memmaps until someone slices rows out of
+    them — the handle the out-of-core backends stream from.
+    """
+    path: str
+    manifest: dict
+    config: IndexConfig
+    max_depth: int
+    tree: HerculesTree
+    small: dict[str, np.ndarray]
+    lrd: np.ndarray   # (n_pad, n) float32 memmap
+    lsd: np.ndarray   # (n_pad, m_sax) uint8 memmap
+    series_len: int
+    max_leaf: int
+    num_leaves: int
+    num_series: int
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.lrd.shape[0])
+
+    def to_layout(self) -> HerculesLayout:
+        kw = {name: jnp.asarray(arr) for name, arr in self.small.items()}
+        return HerculesLayout(
+            lrd=jnp.asarray(np.asarray(self.lrd)),
+            lsd=jnp.asarray(np.asarray(self.lsd)),
+            series_len=self.series_len, max_leaf=self.max_leaf,
+            num_leaves=self.num_leaves, num_series=self.num_series, **kw)
+
+    def to_index(self) -> HerculesIndex:
+        """Materialize the full in-memory index (device-resident layout)."""
+        return HerculesIndex(self.tree, self.to_layout(), self.config,
+                             self.max_depth)
+
+    def original_data(self) -> np.ndarray:
+        """The collection in original id order, (num_series, n) host float32
+        (reads the whole LRD file — for verification harnesses, not the
+        out-of-core serving path)."""
+        return np.asarray(self.lrd)[self.small["inv_perm"]]
+
+
+def open_index(path: str, verify: bool = True) -> SavedIndex:
+    """Open an index directory without materializing the big files."""
+    manifest = read_manifest(path)
+    if verify:
+        verify_files(path, manifest)
+    config = _restore_config(manifest)
+    tree_arrays = _load_npz(path, TREE_FILE)
+    try:
+        tree = HerculesTree(**{name: jnp.asarray(tree_arrays[name])
+                               for name in HerculesTree._fields})
+    except KeyError as e:
+        raise IndexFormatError(f"{path!r}: {TREE_FILE} is missing tree "
+                               f"array {e}") from e
+    small = _load_npz(path, LAYOUT_FILE)
+    missing = set(SMALL_LAYOUT_FIELDS) - set(small)
+    if missing:
+        raise IndexFormatError(
+            f"{path!r}: {LAYOUT_FILE} is missing {sorted(missing)}")
+    try:
+        lrd = np.load(os.path.join(path, LRD_FILE), mmap_mode="r",
+                      allow_pickle=False)
+        lsd = np.load(os.path.join(path, LSD_FILE), mmap_mode="r",
+                      allow_pickle=False)
+    except (OSError, ValueError) as e:
+        raise IndexFormatError(f"{path!r}: cannot map raw arrays: {e}") from e
+    statics = manifest["layout_static"]
+    if (lrd.ndim != 2 or lrd.shape[1] != int(statics["series_len"])
+            or lrd.shape[0] < int(statics["num_series"])):
+        raise IndexFormatError(
+            f"{path!r}: {LRD_FILE} shape {tuple(lrd.shape)} does not match "
+            f"manifest statics {statics}")
+    return SavedIndex(
+        path=path, manifest=manifest, config=config,
+        max_depth=int(manifest["max_depth"]), tree=tree, small=small,
+        lrd=lrd, lsd=lsd, **{k: int(statics[k]) for k in LAYOUT_STATIC_FIELDS})
+
+
+def load_index(path: str, verify: bool = True) -> HerculesIndex:
+    """Load a saved index fully into memory — bit-identical arrays to the
+    index that was saved."""
+    return open_index(path, verify=verify).to_index()
