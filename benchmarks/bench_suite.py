@@ -284,6 +284,37 @@ def bench_persistence(num=16384, n=128, nq=8, k=1, chunk=4096,
         emit("backend_ooc_scan", t / nq,
              f"budget_mb={memory_budget_mb};blocks={st['blocks']}",
              memory_budget_mb=memory_budget_mb)
+
+        if load_path is None:
+            # incremental ingest: append a journal segment (no base rewrite)
+            # then compact it into the next base generation — the insert-
+            # workload trajectory rows (series/sec for each half)
+            from repro.storage import Hercules
+
+            n_extra = max(num // 4, 1)
+            extra = random_walks(jax.random.PRNGKey(23), n_extra, n)
+            with Hercules.open(path, "a") as hx:
+                t0 = _time.perf_counter()
+                hx.append(np.asarray(extra), chunk_size=chunk)
+                dt = _time.perf_counter() - t0
+                emit("append_journal", dt * 1e6,
+                     f"series_per_s={n_extra / dt:.0f};rows={n_extra}",
+                     series_per_second=round(n_extra / dt, 1),
+                     rows_appended=n_extra)
+
+                t0 = _time.perf_counter()
+                hx.compact(chunk_size=chunk)
+                dt = _time.perf_counter() - t0
+                total = hx.num_series
+                emit("compact_journal", dt * 1e6,
+                     f"series_per_s={total / dt:.0f};generation="
+                     f"{hx.generation}",
+                     series_per_second=round(total / dt, 1),
+                     rows_total=total)
+
+                data_all = jnp.concatenate([jnp.asarray(data), extra])
+                res = hx.engine("local").knn(q, k=k)
+                _check_exact(res.dists, data_all, q, k)
     finally:
         if tmp is not None:
             shutil.rmtree(tmp, ignore_errors=True)

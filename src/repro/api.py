@@ -1,27 +1,57 @@
-"""``repro.api`` — the one import for answering and serving kNN queries.
+"""``repro.api`` — the one import for the whole index lifecycle.
+
+The central object is the :class:`Hercules` store: one handle that owns an
+index directory from creation through incremental ingest, compaction, and
+query serving::
 
     from repro import api
 
-    backend = api.make_backend("local", data, search=api.SearchConfig(k=5))
-    engine = api.QueryEngine(backend)
-    result = engine.knn(queries)                  # KnnResult, exact
-    engine.telemetry()["plan_cache"]              # hits/misses/compiles
+    # create -> append -> compact -> query, one handle, context-managed
+    with api.Hercules.create("idx/", api.IndexConfig(), data=chunks_a) as hx:
+        hx.append(chunks_b)            # journal segment; atomic commit
+        res = hx.query(queries, k=5)   # exact: base index + journal merge
+        hx.compact()                   # fold the journal into the base —
+                                       # bit-identical to a from-scratch
+                                       # build over A concat B
+        engine = hx.engine("ooc-local", memory_budget_mb=64)
+        engine.knn(queries)            # compiled-plan-cached serving
+        engine.telemetry()["plan_cache"]   # hits/misses/invalidations
 
-    serve = api.KnnServeEngine(engine, api.KnnServeConfig(batch_slots=32))
-    rid = serve.submit(one_query)
-    serve.drain()                                 # {rid: KnnAnswer}
+    hx = api.Hercules.open("idx/", mode="a")   # reopen later; "r" = serve only
 
-Backends (``local`` | ``scan`` | ``scan-mxu`` | ``sharded``) all answer
-exactly and interchangeably; the engine owns batching, the compiled-plan
-cache, and telemetry. See README.md for the full tour.
+Appends land in checksummed journal segments (the manifest republish is the
+single atomic commit point — a crash before it leaves only orphans the next
+writable open sweeps away); ``compact`` replays base + journal rows through
+the chunked-build primitives into a new file generation, so append+compact
+answers bit-identically to building once over the concatenated collection
+on every backend (``tests/test_store.py``).
 
-Persistence & out-of-core (``repro.storage`` + the disk backends)::
+Purely in-memory serving (no directory on disk) still goes through
+:func:`make_backend` + :class:`QueryEngine`; ``local`` | ``scan`` |
+``scan-mxu`` | ``sharded`` all answer exactly and interchangeably, and
+:class:`KnnServeEngine` adds slot-based submit/poll/drain serving.
 
-    api.save_index(index, "idx/")                 # versioned dir + checksums
-    index = api.load_index("idx/")                # bit-identical round-trip
-    src = api.NpyChunkSource("data.npy", 8192)
-    api.build_index_to_disk(src, "idx/")          # never materializes data
-    backend = api.make_disk_backend("ooc-scan", "idx/", memory_budget_mb=64)
+Deprecated entry points (kept working; each docstring names its successor):
+
+======================================  ===================================
+old surface                             store-API successor
+======================================  ===================================
+``HerculesIndex.build(data, cfg)``      ``Hercules.create(path, cfg,
+                                        data=data)`` (in-memory: unchanged)
+``HerculesIndex.build_streaming(src)``  ``Hercules.create(path, cfg,
+                                        data=src)``
+``build_index_streaming(src, cfg)``     ``Hercules.create(...)`` +
+                                        ``.index()``
+``build_index_to_disk(src, path)``      ``Hercules.create(path, cfg,
+                                        data=src)``
+``save_index(index, path)``             ``Hercules.from_index(path, index)``
+``load_index(path)``                    ``Hercules.open(path).index()``
+``open_index(path)``                    ``Hercules.open(path)`` (``.saved``
+                                        is the SavedIndex)
+``make_disk_backend(name, path)``       ``Hercules.open(path).engine(name)``
+======================================  ===================================
+
+See README.md for the full tour.
 """
 from repro.core.engine import (  # noqa: F401
     BACKEND_NAMES, DISK_BACKEND_NAMES, EngineConfig, LocalBackend,
@@ -42,6 +72,7 @@ from repro.serve.engine import (  # noqa: F401
     KnnAnswer, KnnServeConfig, KnnServeEngine,
 )
 from repro.storage import (  # noqa: F401
-    FORMAT_VERSION, IndexFormatError, SavedIndex, build_index_streaming,
-    build_index_to_disk, load_index, open_index, save_index,
+    FORMAT_VERSION, Hercules, IndexFormatError, SavedIndex,
+    build_index_streaming, build_index_to_disk, load_index, open_index,
+    save_index,
 )

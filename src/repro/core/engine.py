@@ -394,6 +394,19 @@ def _ooc_refine_block(rows: jax.Array, base: jax.Array, valid: jax.Array,
     return jax.lax.map(one, (queries, d0, p0))
 
 
+def _alive_runs(alive: np.ndarray, base: int) -> list[tuple[int, int]]:
+    """Contiguous True runs of a row-survival mask as absolute
+    (start, count) pairs — the sub-extents the SAX filter could not prune."""
+    idx = np.flatnonzero(alive)
+    if idx.size == 0:
+        return []
+    breaks = np.flatnonzero(np.diff(idx) > 1)
+    starts = np.concatenate([[0], breaks + 1])
+    ends = np.concatenate([breaks, [idx.size - 1]])
+    return [(base + int(idx[s]), int(idx[e] - idx[s] + 1))
+            for s, e in zip(starts, ends)]
+
+
 class _OutOfCoreBase(BackendBase):
     """Shared plumbing for backends that stream a :class:`SavedIndex`
     (``repro.storage.open_index``): memory-mapped LRD rows move host→device
@@ -409,7 +422,15 @@ class _OutOfCoreBase(BackendBase):
         self._config = config or saved.config.search
         self._perm = jnp.asarray(saved.small["perm"])
         self._t = {"calls": 0, "blocks": 0, "rows_streamed": 0,
-                   "bytes_streamed": 0}
+                   "bytes_streamed": 0, "sax_rows_read": 0}
+
+    def _lrd(self) -> np.ndarray:
+        """The LRD memmap, failing loudly if the SavedIndex was closed
+        (e.g. the store compacted underneath a stale backend)."""
+        return self.saved._mapped("lrd")
+
+    def _lsd(self) -> np.ndarray:
+        return self.saved._mapped("lsd")
 
     @property
     def series_len(self) -> int:
@@ -505,7 +526,7 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
         qn = q.shape[0]
         d = jnp.full((qn, cfg.k), INF)
         p = jnp.full((qn, cfg.k), -1, jnp.int32)
-        blocks = ArrayChunkSource(self.saved.lrd[:num], R)
+        blocks = ArrayChunkSource(self._lrd()[:num], R)
         for start, rows in iter_device_chunks(blocks):
             d_b, p_b = _ooc_scan_block(rows, q, jnp.int32(start), k=cfg.k,
                                        block=cfg.scan_block, mode=mode)
@@ -517,19 +538,22 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
 
 class OutOfCoreLocalBackend(_OutOfCoreBase):
     """Index-pruned out-of-core answering (the paper's reason to build the
-    tree at all: touch only the leaves the bounds cannot exclude).
+    tree at all: touch only the leaves — and series — the bounds cannot
+    exclude).
 
     Resident state is the tree plus the per-leaf pruning tables; raw series
     stay on disk. Per batch: (1) route every query to its home leaf and seed
     BSF_k from those leaf extents; (2) one vectorized LB_EAPCA pass over all
-    leaf synopses; (3) stream only the leaves some query cannot prune, as
-    contiguous LRD runs (leaf in-order == file order) cut into
-    budget-bounded pieces, refining with exact difference-form distances.
-    Leaf-granularity pruning only — the in-memory backend's per-series SAX
-    phase needs the LSD column resident; streaming it is a ROADMAP
-    follow-on. Exact by the paper's no-false-dismissal argument: a leaf is
-    skipped only if ``lb * (1 - lb_slack)`` ≥ the seeded BSF_k, which upper-
-    bounds the final kth distance.
+    leaf synopses; (3) for the leaves some query cannot prune, stream the
+    **LSD sidecar** (m bytes/series — tiny next to the n-float rows) and
+    apply the per-series LB_SAX filter, then fetch only the surviving rows
+    as contiguous LRD runs (leaf in-order == file order) cut into
+    budget-bounded pieces, refining with exact difference-form distances —
+    the paper's phase-3 LSDFile stream, restored for the out-of-core path.
+    ``use_sax=False`` falls back to leaf-granularity pruning. Exact by the
+    paper's no-false-dismissal argument: a leaf (or series) is skipped only
+    if ``lb * (1 - lb_slack)`` ≥ the running BSF_k, which upper-bounds the
+    final kth distance.
     """
 
     name = "ooc-local"
@@ -544,6 +568,7 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
         self._leaf_endpoints = jnp.asarray(s["leaf_endpoints"])
         self._leaf_synopsis = jnp.asarray(s["leaf_synopsis"])
         self._leaf_seg_lens = jnp.asarray(s["leaf_seg_lens"])
+        self._srank = np.asarray(s["series_leaf_rank"])
 
     def _validate(self, cfg: SearchConfig) -> None:
         if self.stream_rows() < self.saved.max_leaf:
@@ -572,7 +597,7 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
 
     def _fetch(self, start: int, count: int, pad_to: int) -> np.ndarray:
         rows = np.zeros((pad_to, self.saved.series_len), np.float32)
-        rows[:count] = self.saved.lrd[start:start + count]
+        rows[:count] = self._lrd()[start:start + count]
         return rows
 
     def _leaf_lbs(self, q: jax.Array) -> jax.Array:
@@ -632,21 +657,60 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
         eapca_pr = 1.0 - np.asarray(
             jnp.sum(cand, axis=1), np.float32) / n_alive
 
-        # -- phase 3: stream non-prunable leaves as contiguous runs ----------
+        # -- phase 3: stream the LSD sidecar over non-prunable leaves, keep
+        # only series the per-row LB_SAX filter cannot exclude, and fetch
+        # those as contiguous LRD runs (the paper's LSDFile pass: m bytes of
+        # codes buy skipping n floats of raw series) ------------------------
         R = self.stream_rows()
         pieces = self._runs(needed, R)
+        use_sax = bool(cfg.use_sax)
+        alive_counts = jnp.zeros((qn,), jnp.int32)
+        if use_sax:
+            n = self.saved.series_len
+            m_sax = int(self._lsd().shape[1])
+            q_paa = S.paa(q, m_sax)
+            kmode = resolve_kernel_mode(cfg.kernel_mode)
         for start, cnt in pieces:
-            rows = self._fetch(start, cnt, self._pad_bucket(cnt, R))
-            d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(start),
-                                     jnp.int32(cnt), q, d, p, k=k)
-            self._count(cnt)
+            if not use_sax:
+                rows = self._fetch(start, cnt, self._pad_bucket(cnt, R))
+                d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(start),
+                                         jnp.int32(cnt), q, d, p, k=k)
+                self._count(cnt)
+                continue
+            # codes padded to the same bucketed shapes as the row fetches,
+            # so the LB kernel compiles O(log) times, not once per piece
+            # length; pad columns are masked out of `live` below
+            pad_to = self._pad_bucket(cnt, R)
+            codes = np.zeros((pad_to, m_sax), np.uint8)
+            codes[:cnt] = self._lsd()[start:start + cnt]
+            ranks = np.zeros((pad_to,), np.int32)
+            ranks[:cnt] = self._srank[start:start + cnt]
+            self._t["sax_rows_read"] += cnt
+            lb_row = jnp.maximum(
+                kops.lb_sax(q_paa, jnp.asarray(codes), n, mode=kmode),
+                lbs[:, ranks])                                # (Q, pad_to)
+            bsf = d[:, k - 1]
+            live = ((lb_row * slack < bsf[:, None])
+                    & (jnp.arange(pad_to) < cnt)[None, :])    # (Q, pad_to)
+            alive_counts = alive_counts + jnp.sum(live, axis=1,
+                                                  dtype=jnp.int32)
+            for s0, c0 in _alive_runs(np.asarray(jnp.any(live, axis=0))[:cnt],
+                                      start):
+                rows = self._fetch(s0, c0, self._pad_bucket(c0, R))
+                d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(s0),
+                                         jnp.int32(c0), q, d, p, k=k)
+                self._count(c0)
         self._t["calls"] += 1
 
         res = self._fill_result(
             d, p, self._ids_of(p), path=2,
             accessed=self._t["rows_streamed"] - rows_before)
+        sax_pr = (1.0 - alive_counts.astype(jnp.float32)
+                  / max(self.saved.num_series, 1)
+                  if use_sax else jnp.zeros((qn,), jnp.float32))
         return res._replace(
             eapca_pr=jnp.asarray(eapca_pr, jnp.float32),
+            sax_pr=sax_pr,
             visited_leaves=jnp.full((qn,), len(seeded) + int(needed.sum()),
                                     jnp.int32))
 
@@ -781,10 +845,19 @@ class QueryEngine:
         self._plans: collections.OrderedDict = collections.OrderedDict()
         self._t = {
             "calls": 0, "queries": 0, "hits": 0, "misses": 0, "evictions": 0,
+            "invalidations": 0,
             "compile_s": 0.0, "exec_s": 0.0, "last_exec_s": 0.0,
             "paths": np.zeros(4, np.int64), "path_unknown": 0,
             "eapca_pr_sum": 0.0, "sax_pr_sum": 0.0, "stat_queries": 0,
         }
+
+    def invalidate(self) -> None:
+        """Drop every cached compiled plan. Called when the data a plan was
+        compiled against changes underneath the backend — e.g. the store
+        handle (``repro.storage.store.Hercules``) appended or compacted —
+        so a stale executable can never serve the mutated collection."""
+        self._plans.clear()
+        self._t["invalidations"] += 1
 
     # -- batching -----------------------------------------------------------
 
@@ -876,6 +949,7 @@ class QueryEngine:
                 "evictions": t["evictions"], "size": len(self._plans),
                 "capacity": self.config.plan_cache_size,
                 "compiles": t["misses"], "compile_s": t["compile_s"],
+                "invalidations": t["invalidations"],
             },
             "latency_s": {
                 "total": t["exec_s"], "last": t["last_exec_s"],
@@ -946,20 +1020,37 @@ def make_backend(name: str, data: jax.Array, *,
 DISK_BACKEND_NAMES = ("local", "scan", "ooc-scan", "ooc-local")
 
 
-def make_disk_backend(name: str, path: str, *,
+def make_disk_backend(name: str, store, *,
                       search: SearchConfig | None = None,
                       memory_budget_mb: float = 64.0,
                       verify: bool = True) -> SearchBackend:
-    """Serve a saved index directory (``repro.storage``) by backend name.
+    """Serve a saved index by backend name.
 
-    ``local``/``scan`` materialize the saved arrays into the ordinary
-    in-memory backends (bit-identical to the ones built from the original
-    data); ``ooc-scan``/``ooc-local`` keep the raw series memory-mapped and
+    ``store`` is an index-directory path, an already-open ``SavedIndex``,
+    or a ``Hercules`` store handle (backends then resolve their data
+    through the handle's current base index). ``local``/``scan``
+    materialize the saved arrays into the ordinary in-memory backends
+    (bit-identical to the ones built from the original data);
+    ``ooc-scan``/``ooc-local`` keep the raw series memory-mapped and
     stream them under ``memory_budget_mb``.
+
+    .. deprecated:: store API
+        For directory paths prefer ``repro.api.Hercules.open(path)
+        .engine(name)``, which additionally caches engines and invalidates
+        compiled plans across ``append``/``compact``; this remains the
+        low-level constructor the store delegates to.
     """
     from repro.storage import open_index
 
-    saved = open_index(path, verify=verify)
+    if isinstance(store, str):
+        saved = open_index(store, verify=verify)
+    else:
+        # a Hercules handle exposes .saved; a SavedIndex is used directly
+        saved = getattr(store, "saved", store)
+        if saved is None:
+            raise ValueError(
+                f"{store!r} has no base index to serve — append rows and "
+                f"compact() first")
     if name == "local":
         idx = saved.to_index()
         if search is not None:

@@ -45,6 +45,13 @@ class HerculesIndex:
 
     @classmethod
     def build(cls, data: jax.Array, config: IndexConfig | None = None) -> "HerculesIndex":
+        """One-shot in-memory build.
+
+        .. deprecated:: store API
+            For a persistent index with incremental ingest, prefer
+            ``repro.api.Hercules.create(path, config, data=data)`` — this
+            remains the in-memory builder the store compares against.
+        """
         config = config or IndexConfig()
         if data.shape[1] % config.sax_segments:
             raise ValueError(
@@ -62,9 +69,13 @@ class HerculesIndex:
                         config: "IndexConfig | None" = None) -> "HerculesIndex":
         """Chunk-streamed build from a :class:`repro.data.pipeline.ChunkSource`
         — device residency bounded by one chunk during construction, result
-        bit-identical to :meth:`build` on the concatenated data. To keep the
-        collection on disk end to end, use
-        :func:`repro.storage.build_index_to_disk` instead."""
+        bit-identical to :meth:`build` on the concatenated data.
+
+        .. deprecated:: store API
+            Prefer ``repro.api.Hercules.create(path, config, data=source)``
+            for the on-disk lifecycle (append/compact included); this
+            remains the low-level in-memory delegate.
+        """
         from repro.storage.build import build_index_streaming
         return build_index_streaming(source, config)
 

@@ -1,11 +1,13 @@
 # Persistence + out-of-core subsystem: the versioned on-disk index format
-# (save/load/open with manifest + checksums) and the chunked streaming
-# builders that never materialize the collection. The serving-side
-# out-of-core backends live in core/engine.py and consume SavedIndex.
+# (manifest + checksums + append journal), the chunked streaming builders,
+# and the Hercules store facade owning the whole lifecycle
+# (create -> append -> compact -> query). The serving-side out-of-core
+# backends live in core/engine.py and consume SavedIndex.
 from repro.storage.build import (  # noqa: F401
-    build_index_streaming, build_index_to_disk,
+    build_index_streaming, build_index_to_disk, stream_base_files,
 )
 from repro.storage.format import (  # noqa: F401
     FORMAT_NAME, FORMAT_VERSION, IndexFormatError, SavedIndex, load_index,
     open_index, read_manifest, save_index, verify_files,
 )
+from repro.storage.store import Hercules  # noqa: F401

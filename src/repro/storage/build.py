@@ -16,6 +16,19 @@ Two entry points over the same machinery:
 Both consume a :class:`repro.data.pipeline.ChunkSource` (re-iterable, fixed
 chunk boundaries) and move chunks host→device through the double-buffered
 :func:`iter_device_chunks` stream.
+
+The directory-writing half is factored as :func:`stream_base_files` so the
+store-level compaction (``repro.storage.store.Hercules.compact``) can replay
+base + journal rows through the *same* primitives into a new file
+generation — which is what makes append+compact bit-identical to a
+from-scratch build.
+
+.. deprecated:: store API
+    For new code, the one handle for the whole lifecycle is
+    ``repro.api.Hercules`` (``create`` → ``append`` → ``compact`` →
+    ``query``); ``build_index_to_disk`` is equivalent to
+    ``Hercules.create(path, config, data=source)`` and both entry points
+    here remain as the low-level builders the store delegates to.
 """
 from __future__ import annotations
 
@@ -33,7 +46,7 @@ from repro.core.tree import HerculesTree, build_tree_chunked, tree_stats
 from repro.data.pipeline import ChunkSource, iter_chunks, iter_device_chunks
 from repro.storage.format import (LAYOUT_FILE, LAYOUT_STATIC_FIELDS, LRD_FILE,
                                   LSD_FILE, SMALL_LAYOUT_FIELDS, TREE_FILE,
-                                  write_manifest)
+                                  generation_name, write_manifest)
 
 
 def _check_series_len(source: ChunkSource, config: IndexConfig) -> None:
@@ -54,7 +67,12 @@ def _chunked_tree_and_geometry(source: ChunkSource, config: IndexConfig):
 def build_index_streaming(source: ChunkSource,
                           config: IndexConfig | None = None) -> HerculesIndex:
     """Chunk-streamed build of an in-memory index (never more than one chunk
-    of raw series on device during construction)."""
+    of raw series on device during construction).
+
+    .. deprecated:: store API
+        Prefer ``repro.api.Hercules`` for on-disk stores; this remains the
+        low-level in-memory builder.
+    """
     config = config or IndexConfig()
     _check_series_len(source, config)
     tree, geo = _chunked_tree_and_geometry(source, config)
@@ -71,11 +89,12 @@ def build_index_streaming(source: ChunkSource,
     return HerculesIndex(tree, layout, config, tree_stats(tree)["max_depth"])
 
 
-def _write_small_arrays(path: str, tree: HerculesTree, geo: LayoutGeometry):
+def _write_small_arrays(path: str, tree: HerculesTree, geo: LayoutGeometry,
+                        names: dict[str, str]):
     """tree.npz + layout.npz from a built tree and its placement plan —
     identical bytes to what save_index writes for the same index."""
     np.savez_compressed(
-        os.path.join(path, TREE_FILE),
+        os.path.join(path, names[TREE_FILE]),
         **{name: np.asarray(val) for name, val in tree._asdict().items()})
     syn, ep, seg_lens = leaf_tables(tree, geo)
     small = {
@@ -87,25 +106,28 @@ def _write_small_arrays(path: str, tree: HerculesTree, geo: LayoutGeometry):
         "series_leaf_rank": geo.series_leaf_rank,
     }
     assert set(small) == set(SMALL_LAYOUT_FIELDS)
-    np.savez_compressed(os.path.join(path, LAYOUT_FILE), **small)
+    np.savez_compressed(os.path.join(path, names[LAYOUT_FILE]), **small)
 
 
-def build_index_to_disk(source: ChunkSource, path: str,
-                        config: IndexConfig | None = None,
-                        extra_meta: dict | None = None) -> dict:
-    """Chunk-streamed build straight to an index directory; the collection
-    only ever exists as the on-disk LRD file. Returns the manifest (plus
-    timing under ``extra["build"]``)."""
-    config = config or IndexConfig()
+def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
+                      generation: int = 0):
+    """Chunk-streamed build of one base-file generation under ``path``.
+
+    Writes ``tree.npz``/``layout.npz``/``lrd.npy``/``lsd.npy`` (suffixed by
+    ``generation`` when nonzero) WITHOUT committing a manifest — callers
+    (:func:`build_index_to_disk`, the store's ``compact``) publish the
+    manifest as their own atomic commit step. Returns
+    ``(names, statics, max_depth, timings)`` where ``names`` maps logical
+    file names to the generation's actual names.
+    """
     _check_series_len(source, config)
     t0 = time.perf_counter()
     tree, geo = _chunked_tree_and_geometry(source, config)
     t_tree = time.perf_counter() - t0
 
     os.makedirs(path, exist_ok=True)
-    stale = os.path.join(path, "manifest.json")
-    if os.path.exists(stale):
-        os.remove(stale)
+    names = {name: generation_name(name, generation)
+             for name in (TREE_FILE, LAYOUT_FILE, LRD_FILE, LSD_FILE)}
 
     # LRD/LSD as on-disk memmaps, scattered chunk by chunk. Pad rows beyond
     # num_series stay zero (ftruncate zero-fill) — the same bytes the
@@ -113,10 +135,10 @@ def build_index_to_disk(source: ChunkSource, path: str,
     t0 = time.perf_counter()
     n = source.series_len
     lrd = np.lib.format.open_memmap(
-        os.path.join(path, LRD_FILE), mode="w+", dtype=np.float32,
+        os.path.join(path, names[LRD_FILE]), mode="w+", dtype=np.float32,
         shape=(geo.n_pad, n))
     lsd = np.lib.format.open_memmap(
-        os.path.join(path, LSD_FILE), mode="w+", dtype=np.uint8,
+        os.path.join(path, names[LSD_FILE]), mode="w+", dtype=np.uint8,
         shape=(geo.n_pad, config.sax_segments))
     for start, chunk in iter_chunks(source):
         dev = jnp.asarray(chunk)
@@ -128,10 +150,9 @@ def build_index_to_disk(source: ChunkSource, path: str,
     del lrd, lsd
     t_write = time.perf_counter() - t0
 
-    _write_small_arrays(path, tree, geo)
+    _write_small_arrays(path, tree, geo, names)
     statics = {k: getattr(geo, k) for k in LAYOUT_STATIC_FIELDS}
-    extra = dict(extra_meta or {})
-    extra["build"] = {
+    timings = {
         "streaming": True,
         "chunk_size": source.chunk_size,
         "num_chunks": source.num_chunks,
@@ -140,5 +161,30 @@ def build_index_to_disk(source: ChunkSource, path: str,
         "series_per_second": round(source.num_series / max(t_tree + t_write,
                                                            1e-9), 1),
     }
-    return write_manifest(path, config, tree_stats(tree)["max_depth"],
-                          statics, extra=extra)
+    return names, statics, tree_stats(tree)["max_depth"], timings
+
+
+def build_index_to_disk(source: ChunkSource, path: str,
+                        config: IndexConfig | None = None,
+                        extra_meta: dict | None = None) -> dict:
+    """Chunk-streamed build straight to an index directory; the collection
+    only ever exists as the on-disk LRD file. Returns the manifest (plus
+    timing under ``extra["build"]``).
+
+    .. deprecated:: store API
+        Equivalent to ``repro.api.Hercules.create(path, config,
+        data=source)``, which additionally returns a live store handle;
+        this remains the low-level writer the store delegates to.
+    """
+    config = config or IndexConfig()
+    os.makedirs(path, exist_ok=True)
+    stale = os.path.join(path, "manifest.json")
+    if os.path.exists(stale):
+        os.remove(stale)
+
+    names, statics, max_depth, timings = stream_base_files(
+        source, path, config, generation=0)
+    extra = dict(extra_meta or {})
+    extra["build"] = timings
+    return write_manifest(path, config, max_depth, statics, extra=extra,
+                          files=names)

@@ -1,12 +1,15 @@
 """Versioned on-disk Hercules index format (the paper's persisted artifacts).
 
 An index directory holds the three files the paper names plus a sidecar of
-small arrays and a manifest that commits the whole set:
+small arrays, an **append journal**, and a manifest that commits the whole
+set:
 
     <dir>/
       manifest.json   format name + version, build/search config, statics,
-                      per-file byte sizes and CRC32 checksums. Written last
-                      (atomically) — its presence commits the save.
+                      per-file byte sizes and CRC32 checksums, journal
+                      segment list. Written last (atomically) — its presence
+                      commits every other file; anything on disk the
+                      manifest does not name is an uncommitted orphan.
       tree.npz        HTree: every HerculesTree array (small, compressed).
       layout.npz      small layout arrays (perm, leaf extents, pruning
                       tables) — everything but the two big files.
@@ -14,12 +17,27 @@ small arrays and a manifest that commits the whole set:
                       A plain ``np.save`` array => ``np.load(mmap_mode="r")``
                       serves it without reading it into RAM.
       lsd.npy         LSDFile: position-aligned iSAX sidecar, (n_pad, m) uint8.
+      journal/        append segments (``seg-00000.lrd.npy`` + matching
+                      ``.lsd.npy``): rows inserted since the last compaction,
+                      in original append order — the store-level insert path
+                      (``repro.storage.store.Hercules``) lands new chunks
+                      here so appends never rewrite the base files.
+
+Format version 2 (this build) adds the journal section and an optional
+per-file ``path`` indirection: a compaction writes its new base files under
+*generation-numbered* names (``lrd-00001.npy``) and republishes the manifest
+atomically, so the old index stays valid until the single
+``os.replace(manifest)`` commit point — the ParIS+-style "organize for
+appends, never rewrite in place" discipline. Version-1 directories (no
+journal, plain file names) still load unchanged.
 
 Loading offers two shapes: :func:`load_index` materializes a full in-memory
 :class:`HerculesIndex` (bit-identical to the one that was saved), while
 :func:`open_index` returns a :class:`SavedIndex` handle whose LRD/LSD stay
 memory-mapped — the out-of-core backends (``core/engine.py``) stream leaf and
-scan blocks from it under a memory budget.
+scan blocks from it under a memory budget. Both read the committed **base**
+index only; journal rows are layered on top by the
+:class:`~repro.storage.store.Hercules` store handle.
 
 Every load validates the manifest (format name, version <= supported) and,
 with ``verify=True`` (the default), re-checksums every file — truncation or
@@ -43,7 +61,7 @@ from repro.core.search import SearchConfig
 from repro.core.tree import BuildConfig, HerculesTree
 
 FORMAT_NAME = "hercules-index"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 
 MANIFEST_FILE = "manifest.json"
 TREE_FILE = "tree.npz"
@@ -51,6 +69,8 @@ LAYOUT_FILE = "layout.npz"
 LRD_FILE = "lrd.npy"
 LSD_FILE = "lsd.npy"
 _ARRAY_FILES = (TREE_FILE, LAYOUT_FILE, LRD_FILE, LSD_FILE)
+
+JOURNAL_DIR = "journal"
 
 # HerculesLayout fields persisted in layout.npz (everything but lrd/lsd and
 # the static ints, which live in the manifest)
@@ -84,7 +104,7 @@ def _file_entry(path: str) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# save
+# manifest helpers (base files, journal section, generation naming)
 # ---------------------------------------------------------------------------
 
 def _config_meta(config: IndexConfig) -> dict:
@@ -93,17 +113,83 @@ def _config_meta(config: IndexConfig) -> dict:
             "sax_segments": config.sax_segments}
 
 
+def array_path(manifest: dict, name: str) -> str:
+    """Directory-relative path of a logical base file (``tree.npz`` …).
+
+    Version-1 manifests (and version-2 saves before any compaction) store
+    files under their logical names; after a compaction each entry carries a
+    ``path`` pointing at the current generation's file.
+    """
+    entry = manifest.get("files", {}).get(name, {})
+    return entry.get("path", name)
+
+
+def generation_of(manifest: dict) -> int:
+    return int(manifest.get("generation", 0))
+
+
+def generation_name(name: str, generation: int) -> str:
+    """``lrd.npy`` at generation 3 -> ``lrd-00003.npy`` (generation 0 keeps
+    the plain v1 name so fresh saves remain byte-compatible)."""
+    if generation == 0:
+        return name
+    stem, ext = os.path.splitext(name)
+    return f"{stem}-{generation:05d}{ext}"
+
+
+def journal_of(manifest: dict) -> dict:
+    """The journal section, normalized (v1 manifests have none)."""
+    j = manifest.get("journal") or {}
+    return {"segments": list(j.get("segments", [])),
+            "rows": int(j.get("rows", 0))}
+
+
+def has_base(manifest: dict) -> bool:
+    """Whether the directory holds a committed base index (an empty store
+    created by ``Hercules.create`` has only a manifest + journal)."""
+    return bool(manifest.get("files"))
+
+
+def segment_file_names(seg_id: int) -> tuple[str, str]:
+    """(lrd, lsd) file names of journal segment ``seg_id``, dir-relative."""
+    return (f"{JOURNAL_DIR}/seg-{seg_id:05d}.lrd.npy",
+            f"{JOURNAL_DIR}/seg-{seg_id:05d}.lsd.npy")
+
+
 def write_manifest(path: str, config: IndexConfig, max_depth: int,
-                   statics: dict, extra: dict | None = None) -> dict:
-    """Checksum the four array files already present under ``path`` and
-    commit them with an atomically-published manifest. Shared by
-    :func:`save_index` and the streaming writer (storage/build.py)."""
-    files = {}
-    for name in _ARRAY_FILES:
-        fp = os.path.join(path, name)
-        if not os.path.exists(fp):
-            raise IndexFormatError(f"cannot commit {path}: missing {name}")
-        files[name] = _file_entry(fp)
+                   statics: dict, extra: dict | None = None, *,
+                   files: dict[str, str] | None = None,
+                   entries: dict[str, dict] | None = None,
+                   journal: dict | None = None,
+                   generation: int = 0,
+                   base: bool = True) -> dict:
+    """Checksum the base array files already present under ``path`` and
+    commit them — together with the journal segment list — by atomically
+    publishing the manifest. The ``os.replace`` here is the single commit
+    point of every store mutation (save, append, compact).
+
+    ``files`` maps logical names to their directory-relative actual paths
+    (identity by default); ``entries`` supplies already-computed checksum
+    entries verbatim (an append republishes the untouched base files
+    without re-reading them); ``base=False`` commits a manifest with no
+    base index at all (an empty store awaiting its first compaction).
+    """
+    if entries is None:
+        entries = {}
+        if base:
+            names = files or {}
+            for name in _ARRAY_FILES:
+                actual = names.get(name, name)
+                fp = os.path.join(path, actual)
+                if not os.path.exists(fp):
+                    raise IndexFormatError(
+                        f"cannot commit {path}: missing {actual}")
+                entry = _file_entry(fp)
+                if actual != name:
+                    entry["path"] = actual
+                entries[name] = entry
+    else:
+        entries = {name: dict(entry) for name, entry in entries.items()}
     manifest = {
         "format": FORMAT_NAME,
         "version": FORMAT_VERSION,
@@ -111,12 +197,16 @@ def write_manifest(path: str, config: IndexConfig, max_depth: int,
         "config": _config_meta(config),
         "max_depth": int(max_depth),
         "layout_static": {k: int(v) for k, v in statics.items()},
-        "files": files,
+        "files": entries,
+        "generation": int(generation),
+        "journal": journal_of({"journal": journal} if journal else {}),
         "extra": dict(extra or {}),
     }
     tmp = os.path.join(path, MANIFEST_FILE + ".tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f, indent=2, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, os.path.join(path, MANIFEST_FILE))
     return manifest
 
@@ -125,7 +215,13 @@ def save_index(index: HerculesIndex, path: str,
                extra_meta: dict | None = None) -> dict:
     """Persist an in-memory index as an index directory. Returns the
     manifest. Overwrites any previous index at ``path`` (the stale manifest
-    is removed first, so a failed overwrite never half-validates)."""
+    is removed first, so a failed overwrite never half-validates).
+
+    .. deprecated:: store API
+        Prefer ``repro.api.Hercules.from_index(path, index)``, which returns
+        a live store handle supporting ``append``/``compact``. This function
+        remains as the low-level writer the store delegates to.
+    """
     os.makedirs(path, exist_ok=True)
     stale = os.path.join(path, MANIFEST_FILE)
     if os.path.exists(stale):
@@ -172,31 +268,39 @@ def read_manifest(path: str) -> dict:
     return manifest
 
 
+def _verify_one(path: str, rel: str, entry: dict) -> None:
+    fp = os.path.join(path, rel)
+    if not os.path.exists(fp):
+        raise IndexFormatError(f"{path!r}: missing file {rel}")
+    size = os.path.getsize(fp)
+    if size != entry["bytes"]:
+        raise IndexFormatError(
+            f"{path!r}: {rel} is {size} bytes, manifest says "
+            f"{entry['bytes']} (truncated or overwritten)")
+    crc = _crc32_file(fp)
+    if crc != entry["crc32"]:
+        raise IndexFormatError(
+            f"{path!r}: {rel} checksum mismatch "
+            f"(crc32 {crc:#010x} != {entry['crc32']:#010x}; corrupted)")
+
+
 def verify_files(path: str, manifest: dict) -> None:
-    """Check every manifest-listed file's size and CRC32. Raises
-    :class:`IndexFormatError` naming the first bad file."""
+    """Check every manifest-listed file's size and CRC32 — base array files
+    *and* journal segments. Raises :class:`IndexFormatError` naming the
+    first bad file."""
     for name, entry in manifest.get("files", {}).items():
-        fp = os.path.join(path, name)
-        if not os.path.exists(fp):
-            raise IndexFormatError(f"{path!r}: missing file {name}")
-        size = os.path.getsize(fp)
-        if size != entry["bytes"]:
-            raise IndexFormatError(
-                f"{path!r}: {name} is {size} bytes, manifest says "
-                f"{entry['bytes']} (truncated or overwritten)")
-        crc = _crc32_file(fp)
-        if crc != entry["crc32"]:
-            raise IndexFormatError(
-                f"{path!r}: {name} checksum mismatch "
-                f"(crc32 {crc:#010x} != {entry['crc32']:#010x}; corrupted)")
+        _verify_one(path, entry.get("path", name), entry)
+    for seg in journal_of(manifest)["segments"]:
+        for rel, entry in seg.get("files", {}).items():
+            _verify_one(path, rel, entry)
 
 
-def _load_npz(path: str, name: str) -> dict[str, np.ndarray]:
+def _load_npz(path: str, rel: str) -> dict[str, np.ndarray]:
     try:
-        with np.load(os.path.join(path, name), allow_pickle=False) as z:
+        with np.load(os.path.join(path, rel), allow_pickle=False) as z:
             return {k: z[k] for k in z.files}
     except (OSError, ValueError, zlib.error) as e:
-        raise IndexFormatError(f"{path!r}: cannot read {name}: {e}") from e
+        raise IndexFormatError(f"{path!r}: cannot read {rel}: {e}") from e
 
 
 def _restore_config(manifest: dict) -> IndexConfig:
@@ -217,6 +321,12 @@ class SavedIndex:
     ``tree`` and the ``small`` layout arrays (a few MB) are loaded; ``lrd``
     and ``lsd`` stay as read-only memmaps until someone slices rows out of
     them — the handle the out-of-core backends stream from.
+
+    The handle is a context manager; :meth:`close` (or leaving the ``with``
+    block) releases the LRD/LSD memory maps deterministically instead of
+    waiting for garbage collection — required for prompt file-descriptor
+    release and for deleting the index directory on platforms that refuse to
+    unlink mapped files.
     """
     path: str
     manifest: dict
@@ -233,13 +343,48 @@ class SavedIndex:
 
     @property
     def n_pad(self) -> int:
-        return int(self.lrd.shape[0])
+        return int(self._mapped("lrd").shape[0])
+
+    @property
+    def closed(self) -> bool:
+        return self.lrd is None
+
+    def _mapped(self, name: str) -> np.ndarray:
+        arr = getattr(self, name)
+        if arr is None:
+            raise IndexFormatError(
+                f"{self.path!r}: SavedIndex is closed (its memory maps were "
+                f"released); reopen the index to read {name}")
+        return arr
+
+    def close(self) -> None:
+        """Release the LRD/LSD memory maps. Idempotent. Any backend still
+        holding this handle will fail loudly instead of reading a dead map."""
+        for name in ("lrd", "lsd"):
+            arr = getattr(self, name)
+            setattr(self, name, None)
+            mm = getattr(arr, "_mmap", None)
+            if mm is not None:
+                try:
+                    mm.close()
+                except BufferError:
+                    # live views (e.g. a backend mid-stream) still export the
+                    # buffer; dropping our reference lets GC finish the job
+                    pass
+
+    def __enter__(self) -> "SavedIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def to_layout(self) -> HerculesLayout:
         kw = {name: jnp.asarray(arr) for name, arr in self.small.items()}
+        # explicit host copies: jnp.asarray may zero-copy alias an aligned
+        # memmap on CPU, and the materialized layout must survive close()
         return HerculesLayout(
-            lrd=jnp.asarray(np.asarray(self.lrd)),
-            lsd=jnp.asarray(np.asarray(self.lsd)),
+            lrd=jnp.asarray(np.array(self._mapped("lrd"))),
+            lsd=jnp.asarray(np.array(self._mapped("lsd"))),
             series_len=self.series_len, max_leaf=self.max_leaf,
             num_leaves=self.num_leaves, num_series=self.num_series, **kw)
 
@@ -252,32 +397,34 @@ class SavedIndex:
         """The collection in original id order, (num_series, n) host float32
         (reads the whole LRD file — for verification harnesses, not the
         out-of-core serving path)."""
-        return np.asarray(self.lrd)[self.small["inv_perm"]]
+        return np.asarray(self._mapped("lrd"))[self.small["inv_perm"]]
 
 
-def open_index(path: str, verify: bool = True) -> SavedIndex:
-    """Open an index directory without materializing the big files."""
-    manifest = read_manifest(path)
-    if verify:
-        verify_files(path, manifest)
+def open_saved(path: str, manifest: dict) -> SavedIndex:
+    """Open the committed base index described by an already-read (and, if
+    desired, already-verified) manifest."""
+    if not has_base(manifest):
+        raise IndexFormatError(
+            f"{path!r}: store has no base index yet (journal-only; append "
+            f"then compact, or open it through repro.api.Hercules)")
     config = _restore_config(manifest)
-    tree_arrays = _load_npz(path, TREE_FILE)
+    tree_arrays = _load_npz(path, array_path(manifest, TREE_FILE))
     try:
         tree = HerculesTree(**{name: jnp.asarray(tree_arrays[name])
                                for name in HerculesTree._fields})
     except KeyError as e:
         raise IndexFormatError(f"{path!r}: {TREE_FILE} is missing tree "
                                f"array {e}") from e
-    small = _load_npz(path, LAYOUT_FILE)
+    small = _load_npz(path, array_path(manifest, LAYOUT_FILE))
     missing = set(SMALL_LAYOUT_FIELDS) - set(small)
     if missing:
         raise IndexFormatError(
             f"{path!r}: {LAYOUT_FILE} is missing {sorted(missing)}")
     try:
-        lrd = np.load(os.path.join(path, LRD_FILE), mmap_mode="r",
-                      allow_pickle=False)
-        lsd = np.load(os.path.join(path, LSD_FILE), mmap_mode="r",
-                      allow_pickle=False)
+        lrd = np.load(os.path.join(path, array_path(manifest, LRD_FILE)),
+                      mmap_mode="r", allow_pickle=False)
+        lsd = np.load(os.path.join(path, array_path(manifest, LSD_FILE)),
+                      mmap_mode="r", allow_pickle=False)
     except (OSError, ValueError) as e:
         raise IndexFormatError(f"{path!r}: cannot map raw arrays: {e}") from e
     statics = manifest["layout_static"]
@@ -292,7 +439,26 @@ def open_index(path: str, verify: bool = True) -> SavedIndex:
         lrd=lrd, lsd=lsd, **{k: int(statics[k]) for k in LAYOUT_STATIC_FIELDS})
 
 
+def open_index(path: str, verify: bool = True) -> SavedIndex:
+    """Open an index directory without materializing the big files.
+
+    Reads the committed **base** index; rows sitting in the append journal
+    (``Hercules.append`` without a ``compact``) are not visible through this
+    handle — open the directory through ``repro.api.Hercules`` to serve
+    base + journal together.
+    """
+    manifest = read_manifest(path)
+    if verify:
+        verify_files(path, manifest)
+    return open_saved(path, manifest)
+
+
 def load_index(path: str, verify: bool = True) -> HerculesIndex:
     """Load a saved index fully into memory — bit-identical arrays to the
-    index that was saved."""
+    index that was saved.
+
+    .. deprecated:: store API
+        Prefer ``repro.api.Hercules.open(path)`` (use ``.index()`` for the
+        in-memory materialization); this remains the low-level reader.
+    """
     return open_index(path, verify=verify).to_index()

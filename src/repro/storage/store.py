@@ -1,0 +1,587 @@
+"""``Hercules`` — one handle for the whole index lifecycle.
+
+The paper's index is a long-lived disk artifact that must absorb inserts,
+not a one-shot build. This module is the store facade over
+``repro.storage``: one object owns creation, incremental ingest, compaction,
+and query serving for an index directory::
+
+    from repro import api
+
+    with api.Hercules.create("idx/", config, data=chunks_a) as hx:
+        hx.append(chunks_b)          # journal segment; atomic manifest commit
+        hx.query(queries, k=5)       # exact: base index + journal merge
+        hx.compact()                 # replay journal through the chunked
+                                     # build; bit-identical to a from-scratch
+                                     # build over A concat B
+        hx.engine("ooc-local").knn(queries)
+
+Append discipline (the paper's insert workload; ParIS+'s append-without-
+rewriting organization):
+
+* ``append`` lands new rows in **journal segments** (raw LRD rows + iSAX
+  LSD sidecar, original append order, each file CRC-checksummed). The base
+  files are never touched; the atomic manifest ``os.replace`` is the single
+  commit point, so a crash between segment write and manifest commit leaves
+  uncommitted orphans that the next writable ``open`` sweeps away.
+* ``query`` stays **exact** with a pending journal: the base backend
+  answers as usual and journal rows are merged in with the same
+  difference-form squared-ED arithmetic every backend uses.
+* ``compact`` replays base + journal rows through the *existing* chunked
+  build primitives (``_round_stats``/``_route_members`` via
+  ``build_tree_chunked``; ``assemble_layout`` geometry via
+  ``stream_base_files``) into a new file **generation**, then republishes
+  the manifest atomically. Because the chunked build is bit-identical to
+  the one-shot build for any chunking, append+compact over A then B equals
+  a from-scratch build over A concat B, bit for bit.
+
+Engines handed out by :meth:`Hercules.engine` are cached per configuration;
+``append``/``compact`` invalidate every cached compiled plan
+(:meth:`repro.core.engine.QueryEngine.invalidate`) and re-resolve backends
+against the new store state, so a stale plan can never serve a mutated
+collection.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import re
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import summaries as S
+from repro.core.engine import QueryEngine, make_disk_backend
+from repro.core.index import HerculesIndex, IndexConfig
+from repro.core.search import INF, KnnResult, SearchConfig
+from repro.data.pipeline import ChunkSource, _ChunkedBase, iter_chunks
+from repro.storage.build import build_index_to_disk, stream_base_files
+from repro.storage.format import (LAYOUT_STATIC_FIELDS, MANIFEST_FILE,
+                                  IndexFormatError, SavedIndex, _file_entry,
+                                  generation_of, has_base, journal_of,
+                                  open_saved, read_manifest, save_index,
+                                  segment_file_names, verify_files,
+                                  write_manifest, JOURNAL_DIR)
+
+# files a crashed (uncommitted) mutation may leave behind; anything matching
+# that the manifest does not reference is swept by a writable open
+_ORPHAN_BASE_RE = re.compile(
+    r"^(?:tree|layout)(?:-\d{5})?\.npz$|^(?:lrd|lsd)(?:-\d{5})?\.npy$"
+    r"|^manifest\.json\.tmp$")
+_ORPHAN_SEG_RE = re.compile(r"^seg-\d{5}\.(?:lrd|lsd)\.npy$")
+
+_EMPTY_STATICS = {k: 0 for k in LAYOUT_STATIC_FIELDS}
+
+
+def _as_source(data, chunk_size: int) -> ChunkSource:
+    if all(hasattr(data, a) for a in ("chunk", "num_chunks", "num_series")):
+        return data                                  # already a ChunkSource
+    arr = np.asarray(data, np.float32)
+    if arr.ndim != 2:
+        raise ValueError(f"expected a 2-D series collection, got {arr.shape}")
+    return _ChunkedBase(arr, chunk_size)
+
+
+class _ConcatRows:
+    """Row-sliceable view over base rows (original id order, gathered lazily
+    from the LRD memmap) followed by journal segments (append order) — the
+    compaction replay source. Reads only the rows a slice asks for."""
+
+    def __init__(self, parts: list):
+        self._parts = parts               # row-sliceable, shape (rows, n)
+        self._offsets = np.cumsum([0] + [int(p.shape[0]) for p in parts])
+        self.shape = (int(self._offsets[-1]), int(parts[0].shape[1]))
+
+    def __getitem__(self, sl: slice) -> np.ndarray:
+        lo, hi, step = sl.indices(self.shape[0])
+        assert step == 1
+        out = []
+        for part, off in zip(self._parts, self._offsets[:-1]):
+            p_lo = max(lo - off, 0)
+            p_hi = min(hi - off, int(part.shape[0]))
+            if p_lo < p_hi:
+                out.append(np.asarray(part[p_lo:p_hi], np.float32))
+        return out[0] if len(out) == 1 else np.concatenate(out, axis=0)
+
+
+class _BaseRows:
+    """Original-id-order view of a SavedIndex's LRD memmap (rows permuted
+    back through ``inv_perm``; fancy indexing reads only the sliced rows)."""
+
+    def __init__(self, saved: SavedIndex):
+        self._saved = saved
+        self._inv_perm = np.asarray(saved.small["inv_perm"])
+        self.shape = (saved.num_series, saved.series_len)
+
+    def __getitem__(self, sl: slice) -> np.ndarray:
+        return self._saved._mapped("lrd")[self._inv_perm[sl]]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_triplet(d0, p0, i0, d1, p1, i1, *, k: int):
+    """Per-query merge of (dists, positions, ids) candidate sets into the
+    running top-k. Ties break toward the earlier array — base results before
+    journal rows, matching a from-scratch scan's id-order visit."""
+
+    def one(args):
+        a_d, a_p, a_i, b_d, b_p, b_i = args
+        d = jnp.concatenate([a_d, b_d])
+        p = jnp.concatenate([a_p, b_p])
+        i = jnp.concatenate([a_i, b_i])
+        neg, idx = jax.lax.top_k(-d, k)
+        return -neg, p[idx], i[idx]
+
+    return jax.lax.map(one, (d0, p0, i0, d1, p1, i1))
+
+
+@jax.jit
+def _journal_block_dists(rows: jax.Array, q: jax.Array) -> jax.Array:
+    """(Q, B) difference-form squared ED — the same arithmetic as every
+    exact backend path, so merged answers stay bit-identical."""
+    return jnp.sum(jnp.square(rows[None, :, :] - q[:, None, :]), axis=-1)
+
+
+class Hercules:
+    """A Hercules store: one index directory, one handle, whole lifecycle.
+
+    Modes: ``"r"`` (read/serve only) and ``"a"`` (append/compact allowed;
+    also sweeps uncommitted orphan files left by a crashed mutation).
+    Context-managed — ``close()`` releases the base memmaps and drops every
+    cached engine.
+    """
+
+    def __init__(self, path: str, mode: str, manifest: dict):
+        if mode not in ("r", "a"):
+            raise ValueError(f"mode must be 'r' or 'a', got {mode!r}")
+        self.path = path
+        self.mode = mode
+        self.manifest = manifest
+        self.recovered: list[str] = []
+        if mode == "a":
+            self.recovered = self._sweep_orphans()
+        self.saved: SavedIndex | None = (
+            open_saved(path, manifest) if has_base(manifest) else None)
+        self._engines: dict[Any, QueryEngine] = {}
+        self._data_version = 0
+        self._closed = False
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @classmethod
+    def create(cls, path: str, config: IndexConfig | None = None, *,
+               data=None, chunk_size: int = 8192, overwrite: bool = False,
+               extra_meta: dict | None = None) -> "Hercules":
+        """Create a store at ``path`` (mode ``"a"``). With ``data`` (an
+        array or :class:`ChunkSource`) the base index is built immediately
+        via the chunked streaming builder; without it the store starts
+        empty and the first ``append`` + ``compact`` builds the base."""
+        config = config or IndexConfig()
+        mf = os.path.join(path, MANIFEST_FILE)
+        if os.path.exists(mf):
+            if not overwrite:
+                raise IndexFormatError(
+                    f"{path!r} already holds an index (pass overwrite=True "
+                    f"to replace it, or Hercules.open(path, 'a') to extend)")
+            os.remove(mf)
+        os.makedirs(path, exist_ok=True)
+        if data is None:
+            write_manifest(path, config, 0, _EMPTY_STATICS, extra=extra_meta,
+                           base=False)
+        else:
+            build_index_to_disk(_as_source(data, chunk_size), path, config,
+                                extra_meta=extra_meta)
+        return cls.open(path, "a")
+
+    @classmethod
+    def open(cls, path: str, mode: str = "r",
+             verify: bool = True) -> "Hercules":
+        """Open an existing store. Version-1 directories open unchanged (no
+        journal); their first ``append`` migrates the manifest to v2."""
+        manifest = read_manifest(path)
+        if verify:
+            verify_files(path, manifest)
+        return cls(path, mode, manifest)
+
+    @classmethod
+    def from_index(cls, path: str, index: HerculesIndex,
+                   extra_meta: dict | None = None) -> "Hercules":
+        """Persist an in-memory :class:`HerculesIndex` and return the live
+        store handle (the ``save_index`` successor)."""
+        save_index(index, path, extra_meta=extra_meta)
+        return cls.open(path, "a")
+
+    def close(self) -> None:
+        """Release the base memmaps and drop cached engines. Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self._engines.clear()
+        if self.saved is not None:
+            self.saved.close()
+
+    def __enter__(self) -> "Hercules":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def config(self) -> IndexConfig:
+        from repro.storage.format import _restore_config
+        return _restore_config(self.manifest)
+
+    @property
+    def journal(self) -> dict:
+        return journal_of(self.manifest)
+
+    @property
+    def generation(self) -> int:
+        return generation_of(self.manifest)
+
+    @property
+    def base_rows(self) -> int:
+        return self.saved.num_series if self.saved is not None else 0
+
+    @property
+    def pending_rows(self) -> int:
+        """Rows appended since the last compaction (journal-resident)."""
+        return self.journal["rows"]
+
+    @property
+    def num_series(self) -> int:
+        return self.base_rows + self.pending_rows
+
+    @property
+    def series_len(self) -> int | None:
+        if self.saved is not None:
+            return self.saved.series_len
+        segs = self.journal["segments"]
+        return int(segs[0]["series_len"]) if segs else None
+
+    @property
+    def data_version(self) -> int:
+        """Bumped by every append/compact — the plan-invalidation epoch."""
+        return self._data_version
+
+    def index(self) -> HerculesIndex:
+        """Materialize the base as an in-memory index (``load_index``
+        successor). Refuses while journal rows are pending — compact first
+        so the materialization cannot silently drop appended rows."""
+        self._require_open()
+        if self.saved is None:
+            raise IndexFormatError(f"{self.path!r}: store has no base index")
+        if self.pending_rows:
+            raise IndexFormatError(
+                f"{self.path!r}: {self.pending_rows} journal rows pending — "
+                f"compact() before materializing the index")
+        return self.saved.to_index()
+
+    def describe(self) -> dict:
+        return {
+            "path": self.path,
+            "mode": self.mode,
+            "generation": self.generation,
+            "base_rows": self.base_rows,
+            "pending_rows": self.pending_rows,
+            "journal_segments": len(self.journal["segments"]),
+            "series_len": self.series_len,
+            "data_version": self._data_version,
+            "cached_engines": len(self._engines),
+        }
+
+    # -- guards -------------------------------------------------------------
+
+    def _require_open(self) -> None:
+        if self._closed:
+            raise IndexFormatError(f"{self.path!r}: store handle is closed")
+
+    def _require_writable(self) -> None:
+        self._require_open()
+        if self.mode != "a":
+            raise IndexFormatError(
+                f"{self.path!r} is open read-only; Hercules.open(path, 'a') "
+                f"to append or compact")
+
+    # -- crash recovery -----------------------------------------------------
+
+    def _sweep_orphans(self) -> list[str]:
+        """Delete files a crashed mutation left uncommitted (present on disk
+        but unreferenced by the manifest). Safe because the manifest commit
+        is atomic: anything it does not name was never part of the store."""
+        keep = set()
+        for name, entry in self.manifest.get("files", {}).items():
+            keep.add(entry.get("path", name))
+        for seg in journal_of(self.manifest)["segments"]:
+            keep.update(seg.get("files", {}))
+        removed = []
+        for fn in sorted(os.listdir(self.path)):
+            if fn in keep or not _ORPHAN_BASE_RE.match(fn):
+                continue
+            os.remove(os.path.join(self.path, fn))
+            removed.append(fn)
+        jdir = os.path.join(self.path, JOURNAL_DIR)
+        if os.path.isdir(jdir):
+            for fn in sorted(os.listdir(jdir)):
+                rel = f"{JOURNAL_DIR}/{fn}"
+                if rel in keep or not _ORPHAN_SEG_RE.match(fn):
+                    continue
+                os.remove(os.path.join(jdir, fn))
+                removed.append(rel)
+        return removed
+
+    # -- ingest -------------------------------------------------------------
+
+    def append(self, data, *, chunk_size: int = 8192,
+               provenance: dict | None = None) -> dict:
+        """Append rows as one journal segment; returns the segment record.
+
+        The segment's LRD rows (original append order) and iSAX LSD sidecar
+        are written and checksummed first; the atomic manifest republish is
+        the commit. Appended rows take original ids following the existing
+        collection (base then journal order), are immediately visible to
+        :meth:`query` (exact journal merge), and fold into the base at the
+        next :meth:`compact`. Cached engine plans are invalidated.
+        """
+        self._require_writable()
+        source = _as_source(data, chunk_size)
+        if source.num_series <= 0:
+            raise ValueError("append needs at least one row")
+        config = self.config
+        n = source.series_len
+        expect = self.series_len
+        if expect is not None and n != expect:
+            raise ValueError(f"appended series length {n} != store series "
+                             f"length {expect}")
+        if n % config.sax_segments:
+            raise ValueError(f"series length {n} must be divisible by "
+                             f"{config.sax_segments} iSAX segments")
+
+        journal = self.journal
+        seg_id = len(journal["segments"])
+        lrd_rel, lsd_rel = segment_file_names(seg_id)
+        os.makedirs(os.path.join(self.path, JOURNAL_DIR), exist_ok=True)
+        t0 = time.perf_counter()
+        lrd = np.lib.format.open_memmap(
+            os.path.join(self.path, lrd_rel), mode="w+", dtype=np.float32,
+            shape=(source.num_series, n))
+        lsd = np.lib.format.open_memmap(
+            os.path.join(self.path, lsd_rel), mode="w+", dtype=np.uint8,
+            shape=(source.num_series, config.sax_segments))
+        for start, chunk in iter_chunks(source):
+            lrd[start:start + chunk.shape[0]] = chunk
+            lsd[start:start + chunk.shape[0]] = np.asarray(
+                S.isax(jnp.asarray(chunk), config.sax_segments))
+        lrd.flush()
+        lsd.flush()
+        del lrd, lsd
+
+        segment = {
+            "name": f"seg-{seg_id:05d}",
+            "rows": int(source.num_series),
+            "series_len": int(n),
+            "files": {
+                lrd_rel: _file_entry(os.path.join(self.path, lrd_rel)),
+                lsd_rel: _file_entry(os.path.join(self.path, lsd_rel)),
+            },
+        }
+        journal["segments"].append(segment)
+        journal["rows"] += segment["rows"]
+        extra = self._extra_with_provenance(provenance)
+        extra["append"] = {
+            "last_rows": segment["rows"],
+            "seconds": round(time.perf_counter() - t0, 4),
+        }
+        self.manifest = write_manifest(
+            self.path, config, int(self.manifest.get("max_depth", 0)),
+            self.manifest.get("layout_static", _EMPTY_STATICS), extra=extra,
+            entries=self.manifest.get("files", {}), journal=journal,
+            generation=self.generation, base=has_base(self.manifest))
+        self._invalidate_engines()
+        return segment
+
+    def compact(self, chunk_size: int = 8192) -> dict:
+        """Fold every journal segment into a new base-file generation.
+
+        Replays base rows (original id order) followed by journal rows
+        through the same chunked-build primitives as a from-scratch
+        streaming build — leaf splits, LRD reordering, synopsis passes —
+        so the compacted index is **bit-identical** to building once over
+        the concatenated collection. The old generation stays valid until
+        the atomic manifest commit; its files and the journal segments are
+        swept afterwards. No-op when the journal is empty. Returns the
+        manifest.
+        """
+        self._require_writable()
+        journal = self.journal
+        if not journal["segments"]:
+            return self.manifest
+        config = self.config
+        parts: list = []
+        if self.saved is not None:
+            parts.append(_BaseRows(self.saved))
+        seg_maps = []
+        for seg in journal["segments"]:
+            lrd_rel = next(f for f in seg["files"] if f.endswith(".lrd.npy"))
+            seg_maps.append(np.load(os.path.join(self.path, lrd_rel),
+                                    mmap_mode="r"))
+        parts.extend(seg_maps)
+        source = _ChunkedBase(_ConcatRows(parts), chunk_size)
+
+        gen = self.generation + 1
+        t0 = time.perf_counter()
+        names, statics, max_depth, timings = stream_base_files(
+            source, self.path, config, generation=gen)
+        extra = self._extra_with_provenance(None)
+        extra["build"] = timings
+        extra["compact"] = {
+            "generation": gen,
+            "journal_rows": journal["rows"],
+            "segments": len(journal["segments"]),
+            "seconds": round(time.perf_counter() - t0, 4),
+        }
+        extra.pop("append", None)
+        manifest = write_manifest(
+            self.path, config, max_depth, statics, extra=extra, files=names,
+            journal=None, generation=gen, base=True)      # <- commit point
+        del seg_maps, source, parts
+
+        old = self.saved
+        self.manifest = manifest
+        if old is not None:
+            # loud staleness: anything still holding the pre-compact handle
+            # raises instead of silently serving the old collection. Closed
+            # *before* the sweep — platforms that refuse to unlink mapped
+            # files would otherwise fail deleting the old generation.
+            old.close()
+        self.recovered = self._sweep_orphans()   # old generation + journal
+        self.saved = open_saved(self.path, manifest)
+        self._invalidate_engines()
+        return manifest
+
+    def _extra_with_provenance(self, provenance: dict | None) -> dict:
+        extra = dict(self.manifest.get("extra", {}))
+        if provenance is not None:
+            old = extra.get("data")
+            if old is None:
+                extra["data"] = provenance
+            elif old.get("kind") == "concat":
+                extra["data"] = {"kind": "concat",
+                                 "parts": [*old["parts"], provenance]}
+            else:
+                extra["data"] = {"kind": "concat", "parts": [old, provenance]}
+        return extra
+
+    # -- serving ------------------------------------------------------------
+
+    def engine(self, backend: str = "local", *,
+               search: SearchConfig | None = None,
+               memory_budget_mb: float = 64.0,
+               engine_config=None) -> QueryEngine:
+        """A :class:`QueryEngine` over the base index, cached per
+        configuration. Serves the **base** only — use :meth:`query` to also
+        see journal rows pending compaction. ``append``/``compact``
+        invalidate every cached plan and re-resolve the backend against the
+        new store state on the next call."""
+        self._require_open()
+        if self.saved is None:
+            raise IndexFormatError(
+                f"{self.path!r}: store has no base index yet — append then "
+                f"compact() before serving")
+        # the budget only parameterizes the ooc backends — keep it out of
+        # the key otherwise, so budget variants don't duplicate an already
+        # fully materialized local/scan backend
+        budget = float(memory_budget_mb) if backend.startswith("ooc") else None
+        key = (backend, search, budget, engine_config)
+        eng = self._engines.get(key)
+        if eng is None:
+            be = make_disk_backend(backend, self, search=search,
+                                   memory_budget_mb=memory_budget_mb)
+            eng = QueryEngine(be, engine_config)
+            self._engines[key] = eng
+        return eng
+
+    def query(self, queries, k: int | None = None, *,
+              backend: str = "local", search: SearchConfig | None = None,
+              memory_budget_mb: float = 64.0, **overrides: Any) -> KnnResult:
+        """Exact kNN over the *whole* store: base index via the named
+        backend plus an exact merge of any journal rows still pending
+        compaction (same difference-form arithmetic, ids continuing the
+        collection)."""
+        self._require_open()
+        q = jnp.asarray(queries)
+        if q.ndim == 1:
+            q = q[None, :]
+        if self.saved is None:
+            return self._journal_only_knn(q, k, search, overrides)
+        eng = self.engine(backend, search=search,
+                          memory_budget_mb=memory_budget_mb)
+        res = eng.knn(q, k=k, **overrides)
+        if self.pending_rows:
+            res = self._merge_journal(res, q, res.dists.shape[1])
+        return res
+
+    def _journal_rows(self) -> list[np.ndarray]:
+        segs = self.journal["segments"]
+        parts = []
+        for seg in segs:
+            lrd_rel = next(f for f in seg["files"] if f.endswith(".lrd.npy"))
+            parts.append(np.load(os.path.join(self.path, lrd_rel),
+                                 mmap_mode="r"))
+        return parts
+
+    def _resolve_k(self, k: int | None, search: SearchConfig | None,
+                   overrides: dict) -> int:
+        if k is not None:
+            return k
+        if "k" in overrides:
+            return overrides["k"]
+        return (search or self.config.search).k
+
+    def _journal_only_knn(self, q: jax.Array, k: int | None,
+                          search: SearchConfig | None,
+                          overrides: dict) -> KnnResult:
+        if not self.pending_rows:
+            raise IndexFormatError(
+                f"{self.path!r}: store is empty — nothing to query")
+        kk = self._resolve_k(k, search, overrides)
+        qn = q.shape[0]
+        d0 = jnp.full((qn, kk), INF)
+        p0 = jnp.full((qn, kk), -1, jnp.int32)
+        base = KnnResult(
+            dists=d0, positions=p0, ids=p0,
+            path=jnp.full((qn,), 3, jnp.int32),
+            eapca_pr=jnp.zeros((qn,), jnp.float32),
+            sax_pr=jnp.zeros((qn,), jnp.float32),
+            accessed=jnp.zeros((qn,), jnp.int32),
+            visited_leaves=jnp.zeros((qn,), jnp.int32))
+        return self._merge_journal(base, q, kk)
+
+    def _merge_journal(self, res: KnnResult, q: jax.Array, k: int,
+                       block: int = 4096) -> KnnResult:
+        """Fold journal rows into a base result — blocked difference-form
+        scan, positions -1 (journal rows have no layout position yet)."""
+        d, p, i = res.dists, res.positions, res.ids
+        offset = self.base_rows
+        accessed = res.accessed
+        for seg_rows in self._journal_rows():
+            rows = np.asarray(seg_rows)
+            for lo in range(0, rows.shape[0], block):
+                blk = jnp.asarray(rows[lo:lo + block])
+                db = _journal_block_dists(blk, q)              # (Q, B)
+                ids = offset + lo + jnp.arange(blk.shape[0], dtype=jnp.int32)
+                ib = jnp.broadcast_to(ids, db.shape)
+                pb = jnp.full(db.shape, -1, jnp.int32)
+                d, p, i = _merge_triplet(d, p, i, db, pb, ib, k=k)
+            offset += rows.shape[0]
+            accessed = accessed + jnp.int32(rows.shape[0])
+        return res._replace(dists=d, positions=p, ids=i, accessed=accessed)
+
+    def _invalidate_engines(self) -> None:
+        self._data_version += 1
+        for eng in self._engines.values():
+            eng.invalidate()
+        self._engines.clear()

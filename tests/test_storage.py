@@ -99,7 +99,8 @@ class TestRoundTrip:
         from repro.distributed.search import build_distributed_index
         shards = len(jax.devices())
         mem = ShardedBackend(build_distributed_index(data, shards, CFG))
-        reread = jax.numpy.asarray(open_index(saved_dir).original_data())
+        with open_index(saved_dir) as saved:
+            reread = jax.numpy.asarray(saved.original_data())
         disk = ShardedBackend(build_distributed_index(reread, shards, CFG))
         _same_result(mem.knn(queries), disk.knn(queries), positions=False)
 
@@ -111,8 +112,12 @@ class TestRoundTrip:
         assert np.array_equal(np.asarray(i0), np.asarray(i1))
 
     def test_original_data_reconstruction(self, data, saved_dir):
-        assert np.array_equal(open_index(saved_dir).original_data(),
-                              np.asarray(data))
+        # context-managed: the memmaps are released deterministically, not
+        # whenever GC gets to the handle (tempdir teardown must not rely
+        # on collection order)
+        with open_index(saved_dir) as saved:
+            assert np.array_equal(saved.original_data(), np.asarray(data))
+        assert saved.closed
 
 
 class TestFormatHardening:
@@ -179,7 +184,7 @@ class TestFormatHardening:
         with open(fp, "r+b") as f:
             f.seek(size - 4)
             f.write(b"\xde\xad\xbe\xef")
-        open_index(path, verify=False)
+        open_index(path, verify=False).close()
         with pytest.raises(IndexFormatError):
             open_index(path, verify=True)
 
@@ -238,48 +243,58 @@ class TestOutOfCore:
     def test_ooc_scan_matches_memory_scan(self, data, saved_dir, queries):
         cfg = self._budget_cfg()
         mem = ScanBackend(data, cfg)
-        ooc = OutOfCoreScanBackend(open_index(saved_dir), cfg,
-                                   memory_budget_mb=self.BUDGET_MB)
-        r_mem, r_ooc = mem.knn(queries), ooc.knn(queries)
-        assert np.array_equal(np.asarray(r_mem.dists), np.asarray(r_ooc.dists))
-        assert np.array_equal(np.asarray(r_mem.ids), np.asarray(r_ooc.ids))
-        st = ooc.stats()
-        # streamed in blocks no larger than the budget, covering everything
-        budget_rows = int(self.BUDGET_MB * (1 << 20) // (4 * LEN))
-        assert st["blocks"] >= NUM // budget_rows
-        assert st["rows_streamed"] == NUM
+        with open_index(saved_dir) as saved:
+            ooc = OutOfCoreScanBackend(saved, cfg,
+                                       memory_budget_mb=self.BUDGET_MB)
+            r_mem, r_ooc = mem.knn(queries), ooc.knn(queries)
+            assert np.array_equal(np.asarray(r_mem.dists),
+                                  np.asarray(r_ooc.dists))
+            assert np.array_equal(np.asarray(r_mem.ids),
+                                  np.asarray(r_ooc.ids))
+            st = ooc.stats()
+            # streamed in budget-bounded blocks, covering everything
+            budget_rows = int(self.BUDGET_MB * (1 << 20) // (4 * LEN))
+            assert st["blocks"] >= NUM // budget_rows
+            assert st["rows_streamed"] == NUM
 
     def test_ooc_local_matches_local(self, index, saved_dir, queries):
         mem = LocalBackend(index)
-        ooc = OutOfCoreLocalBackend(open_index(saved_dir),
-                                    memory_budget_mb=self.BUDGET_MB)
-        r_mem, r_ooc = mem.knn(queries, k=1), ooc.knn(queries, k=1)
-        assert np.array_equal(np.asarray(r_mem.dists), np.asarray(r_ooc.dists))
-        assert np.array_equal(np.asarray(r_mem.ids), np.asarray(r_ooc.ids))
-        # index pruning means the streamed rows are a strict subset
-        assert 0 < ooc.stats()["rows_streamed"] < NUM
-        # telemetry mirrors the in-memory pruning ratio semantics
-        assert np.all(np.asarray(r_ooc.eapca_pr) >= 0)
-        # 'accessed' is per-call, not the backend-lifetime counter
-        r2 = ooc.knn(queries, k=1)
-        assert np.array_equal(np.asarray(r_ooc.accessed),
-                              np.asarray(r2.accessed))
+        with open_index(saved_dir) as saved:
+            ooc = OutOfCoreLocalBackend(saved,
+                                        memory_budget_mb=self.BUDGET_MB)
+            r_mem, r_ooc = mem.knn(queries, k=1), ooc.knn(queries, k=1)
+            assert np.array_equal(np.asarray(r_mem.dists),
+                                  np.asarray(r_ooc.dists))
+            assert np.array_equal(np.asarray(r_mem.ids),
+                                  np.asarray(r_ooc.ids))
+            # index pruning means the streamed rows are a strict subset
+            assert 0 < ooc.stats()["rows_streamed"] < NUM
+            # telemetry mirrors the in-memory pruning ratio semantics
+            assert np.all(np.asarray(r_ooc.eapca_pr) >= 0)
+            # the streamed LSD phase-3 filter was exercised
+            assert ooc.stats()["sax_rows_read"] > 0
+            # 'accessed' is per-call, not the backend-lifetime counter
+            r2 = ooc.knn(queries, k=1)
+            assert np.array_equal(np.asarray(r_ooc.accessed),
+                                  np.asarray(r2.accessed))
 
     def test_ooc_scan_budget_too_small(self, saved_dir):
-        ooc = OutOfCoreScanBackend(open_index(saved_dir), CFG.search,
-                                   memory_budget_mb=1e-4)
-        with pytest.raises(ValueError, match="memory_budget_mb"):
-            ooc.knn(np.zeros((1, LEN), np.float32))
+        with open_index(saved_dir) as saved:
+            ooc = OutOfCoreScanBackend(saved, CFG.search,
+                                       memory_budget_mb=1e-4)
+            with pytest.raises(ValueError, match="memory_budget_mb"):
+                ooc.knn(np.zeros((1, LEN), np.float32))
 
     def test_ooc_through_engine(self, data, saved_dir, queries):
         cfg = self._budget_cfg()
-        eng = QueryEngine(OutOfCoreScanBackend(
-            open_index(saved_dir), cfg, memory_budget_mb=self.BUDGET_MB))
-        res = eng.knn(queries, k=3)
-        mem = ScanBackend(data, cfg).knn(queries, k=3)
-        assert np.array_equal(np.asarray(res.dists), np.asarray(mem.dists))
-        tele = eng.telemetry()
-        assert tele["queries"] == queries.shape[0]
+        with open_index(saved_dir) as saved:
+            eng = QueryEngine(OutOfCoreScanBackend(
+                saved, cfg, memory_budget_mb=self.BUDGET_MB))
+            res = eng.knn(queries, k=3)
+            mem = ScanBackend(data, cfg).knn(queries, k=3)
+            assert np.array_equal(np.asarray(res.dists), np.asarray(mem.dists))
+            tele = eng.telemetry()
+            assert tele["queries"] == queries.shape[0]
 
     def test_make_disk_backend_names(self, saved_dir):
         with pytest.raises(ValueError, match="unknown disk backend"):
