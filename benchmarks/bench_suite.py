@@ -274,16 +274,58 @@ def bench_persistence(num=16384, n=128, nq=8, k=1, chunk=4096,
         t = time_call(lambda: eng.knn(q, k=k))
         emit("backend_local_loaded", t / nq, "from_disk=1")
 
+        # the streamed backends under both read schedulers: sync (reads
+        # block the consumer) vs thread (async reader + two-slot buffer).
+        # read_wait_seconds/overlap_blocks quantify the recovered overlap;
+        # answers are asserted identical across modes.
+        import dataclasses as _dc
+
         scfg = SearchConfig(k=k, **{**_SEARCH, "scan_block": 512})
-        ooc = make_disk_backend("ooc-scan", path, search=scfg,
-                                memory_budget_mb=memory_budget_mb)
-        r_ooc = ooc.knn(q, k=k)
-        _check_exact(r_ooc.dists, data, q, k)
-        t = time_call(lambda: ooc.knn(q, k=k))
-        st = ooc.stats()
-        emit("backend_ooc_scan", t / nq,
-             f"budget_mb={memory_budget_mb};blocks={st['blocks']}",
-             memory_budget_mb=memory_budget_mb)
+        prev = {}
+        for mode in ("sync", "thread"):
+            ooc = make_disk_backend(
+                "ooc-scan", path, search=_dc.replace(scfg, prefetch=mode),
+                memory_budget_mb=memory_budget_mb)
+            r_ooc = ooc.knn(q, k=k)
+            _check_exact(r_ooc.dists, data, q, k)
+            if prev:
+                assert np.array_equal(np.asarray(prev["dists"]),
+                                      np.asarray(r_ooc.dists)), \
+                    "prefetch modes disagree"
+            prev = {"dists": r_ooc.dists}
+            t = time_call(lambda: ooc.knn(q, k=k))
+            st = ooc.stats()
+            emit(f"backend_ooc_scan_prefetch_{mode}", t / nq,
+                 f"budget_mb={memory_budget_mb};blocks={st['blocks']}"
+                 f";read_wait_s={st['read_wait_seconds']:.4f}"
+                 f";overlap_blocks={st['overlap_blocks']}",
+                 memory_budget_mb=memory_budget_mb, prefetch=mode,
+                 read_wait_seconds=round(st["read_wait_seconds"], 4),
+                 overlap_blocks=int(st["overlap_blocks"]))
+
+        prev = {}
+        for mode in ("sync", "thread"):
+            oloc = make_disk_backend(
+                "ooc-local", path,
+                search=_dc.replace(cfg.search, k=k, prefetch=mode),
+                memory_budget_mb=memory_budget_mb)
+            r_loc = oloc.knn(q, k=k)
+            _check_exact(r_loc.dists, data, q, k)
+            if prev:
+                assert np.array_equal(np.asarray(prev["dists"]),
+                                      np.asarray(r_loc.dists)), \
+                    "prefetch modes disagree"
+            prev = {"dists": r_loc.dists}
+            t = time_call(lambda: oloc.knn(q, k=k))
+            st = oloc.stats()
+            emit(f"backend_ooc_local_prefetch_{mode}", t / nq,
+                 f"budget_mb={memory_budget_mb}"
+                 f";read_wait_s={st['read_wait_seconds']:.4f}"
+                 f";overlap_blocks={st['overlap_blocks']}"
+                 f";sax_pr={float(np.mean(np.asarray(r_loc.sax_pr))):.3f}",
+                 memory_budget_mb=memory_budget_mb, prefetch=mode,
+                 read_wait_seconds=round(st["read_wait_seconds"], 4),
+                 overlap_blocks=int(st["overlap_blocks"]))
 
         if load_path is None:
             # incremental ingest: append a journal segment (no base rewrite)

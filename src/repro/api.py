@@ -66,7 +66,9 @@ from repro.core.search import (  # noqa: F401
 )
 from repro.core.tree import BuildConfig, build_tree_chunked  # noqa: F401
 from repro.data.pipeline import (  # noqa: F401
-    ArrayChunkSource, ChunkSource, NpyChunkSource, iter_device_chunks,
+    ArrayChunkSource, AsyncChunkReader, ChunkSource, NpyChunkSource,
+    PREFETCH_MODES, SyncChunkReader, iter_device_chunks, iter_host_chunks,
+    make_chunk_reader,
 )
 from repro.serve.engine import (  # noqa: F401
     KnnAnswer, KnnServeConfig, KnnServeEngine,

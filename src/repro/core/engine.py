@@ -41,6 +41,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import logging
 import time
 from typing import Any, Callable, Protocol, runtime_checkable
 
@@ -54,6 +55,8 @@ from repro.core.search import (INF, KnnResult, SearchConfig, _merge_topk,
                                exact_knn, pscan_knn, validate_runtime_config)
 from repro.kernels import ops as kops
 from repro.kernels.compat import resolve_kernel_mode
+
+logger = logging.getLogger(__name__)
 
 
 @runtime_checkable
@@ -422,7 +425,9 @@ class _OutOfCoreBase(BackendBase):
         self._config = config or saved.config.search
         self._perm = jnp.asarray(saved.small["perm"])
         self._t = {"calls": 0, "blocks": 0, "rows_streamed": 0,
-                   "bytes_streamed": 0, "sax_rows_read": 0}
+                   "bytes_streamed": 0, "sax_rows_read": 0,
+                   "read_seconds": 0.0, "read_wait_seconds": 0.0,
+                   "overlap_blocks": 0}
 
     def _lrd(self) -> np.ndarray:
         """The LRD memmap, failing loudly if the SavedIndex was closed
@@ -440,9 +445,29 @@ class _OutOfCoreBase(BackendBase):
     def base_config(self) -> SearchConfig:
         return self._config
 
-    def _budget_rows(self) -> int:
-        row_bytes = 4 * self.saved.series_len
-        return int(self.memory_budget_mb * (1 << 20)) // row_bytes
+    @classmethod
+    def budget_stream_rows(cls, memory_budget_mb: float,
+                           series_len: int) -> int:
+        """Rows per streamed block/piece under ``memory_budget_mb``: half
+        the budget's rows, because the stream keeps two blocks in flight
+        (one being consumed, one being read/transferred) at peak. The one
+        budget→rows code path — backends, the store, and the CLI all
+        derive from here, so the arithmetic cannot drift."""
+        budget_rows = int(memory_budget_mb * (1 << 20)) // (4 * series_len)
+        return max(budget_rows // 2, 1)
+
+    def stream_rows(self) -> int:
+        """Cap on rows per streamed block (see :meth:`budget_stream_rows`)."""
+        return self.budget_stream_rows(self.memory_budget_mb,
+                                       self.saved.series_len)
+
+    def _reap_reader(self, reader) -> None:
+        """Close a chunk reader and fold its stats into the backend's."""
+        from repro.data.pipeline import READ_STAT_KEYS
+
+        reader.close()
+        for key in READ_STAT_KEYS:
+            self._t[key] += reader.stats[key]
 
     def _ids_of(self, p: jax.Array) -> jax.Array:
         safe = jnp.clip(p, 0, self._perm.shape[0] - 1)
@@ -475,9 +500,17 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
     """Exact kNN over an on-disk collection via a streamed blocked scan.
 
     The memory-mapped LRD file is read in row blocks sized to half of
-    ``memory_budget_mb`` — the double-buffered stream keeps two blocks in
-    flight (one computing, one transferring), so the *budget* covers peak
-    residency, not one block. Each block runs the *same* in-memory scan hot
+    ``memory_budget_mb`` — the stream keeps two blocks in flight (one
+    computing, one being read/transferred), so the *budget* covers peak
+    residency, not one block. ``cfg.prefetch`` picks the scheduler:
+    ``"sync"`` double-buffers only the host→device copy (the memmap read
+    blocks the consumer), ``"thread"`` adds the reader thread + two-slot
+    host buffer so the disk read overlaps compute as well — answers are
+    bit-identical either way, and ``stats()`` exposes
+    ``read_wait_seconds``/``overlap_blocks`` to compare the two. A base
+    ``scan_block`` too large for the budget's streamed blocks is
+    auto-shrunk (logged) at construction, so small budgets behave the same
+    from every entry point. Each block runs the *same* in-memory scan hot
     path (:func:`kernel_scan_knn` when the kernel mode resolves to Pallas,
     else the difference-form :func:`dense_scan_knn`) and running top-k
     merges through the shared :func:`_merge_topk` in file order. Distances
@@ -494,6 +527,17 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
                  memory_budget_mb: float = 64.0):
         super().__init__(saved, config, memory_budget_mb)
         self._config = dataclasses.replace(self._config, force_scan=True)
+        # auto-fit: a base scan_block that cannot fit one streamed block is
+        # shrunk to the budget's block size, so every entry point (store,
+        # CLI, direct construction) behaves identically on small budgets.
+        # Explicit per-call scan_block overrides still fail validation.
+        rows = self.stream_rows()
+        if rows < self._config.scan_block:
+            logger.warning(
+                "ooc-scan: scan_block=%d exceeds the %g MiB budget's "
+                "%d-row streamed blocks; auto-shrinking scan_block to %d",
+                self._config.scan_block, self.memory_budget_mb, rows, rows)
+            self._config = dataclasses.replace(self._config, scan_block=rows)
 
     def _validate(self, cfg: SearchConfig) -> None:
         if cfg.scan_block <= 0:
@@ -504,11 +548,6 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
                 f"{self.stream_rows()} rows per block (two blocks in "
                 f"flight) — less than one scan_block={cfg.scan_block}; "
                 f"lower scan_block or raise the budget")
-
-    def stream_rows(self) -> int:
-        """Rows per streamed block: half the budget, since the prefetching
-        stream holds two blocks (compute + transfer) at peak."""
-        return max(self._budget_rows() // 2, 1)
 
     def _block_rows(self, cfg: SearchConfig) -> int:
         return (self.stream_rows() // cfg.scan_block) * cfg.scan_block
@@ -527,7 +566,8 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
         d = jnp.full((qn, cfg.k), INF)
         p = jnp.full((qn, cfg.k), -1, jnp.int32)
         blocks = ArrayChunkSource(self._lrd()[:num], R)
-        for start, rows in iter_device_chunks(blocks):
+        for start, rows in iter_device_chunks(blocks, prefetch=cfg.prefetch,
+                                              telemetry=self._t):
             d_b, p_b = _ooc_scan_block(rows, q, jnp.int32(start), k=cfg.k,
                                        block=cfg.scan_block, mode=mode)
             d, p = _ooc_merge(d, p, d_b, p_b, k=cfg.k)
@@ -578,11 +618,6 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
                 f"extent (max_leaf={self.saved.max_leaf}); raise the budget "
                 f"or rebuild with a smaller leaf_capacity")
 
-    def stream_rows(self) -> int:
-        """Cap on rows per streamed piece: half the budget, leaving headroom
-        for the staging buffer + in-flight device copy of the next piece."""
-        return max(self._budget_rows() // 2, 1)
-
     def _bind(self, cfg):
         return lambda q: self._stream_knn(jnp.asarray(q), cfg)
 
@@ -594,11 +629,6 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
         while b < count:
             b <<= 1
         return min(max(b, 1), max(cap, count))
-
-    def _fetch(self, start: int, count: int, pad_to: int) -> np.ndarray:
-        rows = np.zeros((pad_to, self.saved.series_len), np.float32)
-        rows[:count] = self._lrd()[start:start + count]
-        return rows
 
     def _leaf_lbs(self, q: jax.Array) -> jax.Array:
         """(Q, L) squared LB_EAPCA of every query to every leaf synopsis."""
@@ -619,88 +649,118 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
 
     def _stream_knn(self, q: jax.Array, cfg: SearchConfig) -> KnnResult:
         from repro.core.tree import route_to_leaf
+        from repro.data.pipeline import make_chunk_reader
 
         k = cfg.k
         qn = q.shape[0]
+        n = self.saved.series_len
         max_leaf = self.saved.max_leaf
+        R = self.stream_rows()
         rows_before = self._t["rows_streamed"]
         d = jnp.full((qn, k), INF)
         p = jnp.full((qn, k), -1, jnp.int32)
 
-        # -- phase 1 (Alg. 11): seed BSF from each query's home leaf plus its
-        # l_max best leaves by LB_EAPCA — same visit set as the in-memory
-        # pipeline, so the bound entering phase 2 is comparably tight.
-        lbs = self._leaf_lbs(q)                          # (Q, L)
-        home_nodes = route_to_leaf(self.saved.tree, q, self.saved.max_depth)
-        home_ranks = np.asarray(self._leaf_rank)[np.asarray(home_nodes)]
-        l_max = min(cfg.l_max, self.saved.num_leaves)
-        _, best = jax.lax.top_k(-lbs, l_max)             # (Q, l_max)
-        seeded = sorted(set(int(r) for r in home_ranks if r >= 0)
-                        | set(int(r) for r in np.asarray(best).ravel()))
-        for r in seeded:
-            start = int(self._leaf_start[r])
-            cnt = int(self._leaf_count[r])
-            if cnt <= 0:
-                continue
-            rows = self._fetch(start, cnt, max_leaf)
-            d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(start),
-                                     jnp.int32(cnt), q, d, p, k=k)
-            self._count(cnt)
+        # every raw-row fetch of this call (seeded leaves, then alive runs)
+        # flows through one reader: extents are submitted ahead of
+        # consumption, so with prefetch="thread" the next extent's page
+        # faults land in a slot buffer while the current one refines
+        lrd_reader = make_chunk_reader(self._lrd(), R, n,
+                                       prefetch=cfg.prefetch)
+        lsd_reader = None
 
-        # -- phase 2: leaf-level pruning over resident synopses --------------
-        slack = jnp.float32(1.0 - cfg.lb_slack)
-        bsf = d[:, k - 1]
-        cand = lbs * slack < bsf[:, None]                # (Q, L)
-        needed = np.array(jnp.any(cand, axis=0))
-        needed[seeded] = False
-        n_alive = max(int((np.asarray(self._leaf_count) > 0).sum()), 1)
-        eapca_pr = 1.0 - np.asarray(
-            jnp.sum(cand, axis=1), np.float32) / n_alive
-
-        # -- phase 3: stream the LSD sidecar over non-prunable leaves, keep
-        # only series the per-row LB_SAX filter cannot exclude, and fetch
-        # those as contiguous LRD runs (the paper's LSDFile pass: m bytes of
-        # codes buy skipping n floats of raw series) ------------------------
-        R = self.stream_rows()
-        pieces = self._runs(needed, R)
-        use_sax = bool(cfg.use_sax)
-        alive_counts = jnp.zeros((qn,), jnp.int32)
-        if use_sax:
-            n = self.saved.series_len
-            m_sax = int(self._lsd().shape[1])
-            q_paa = S.paa(q, m_sax)
-            kmode = resolve_kernel_mode(cfg.kernel_mode)
-        for start, cnt in pieces:
-            if not use_sax:
-                rows = self._fetch(start, cnt, self._pad_bucket(cnt, R))
-                d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(start),
+        def refine_all(d, p, extents):
+            """Refine (start, cnt, pad_to) extents — all submitted before
+            the first is consumed, the reader's lookahead window."""
+            for start, cnt, pad_to in extents:
+                lrd_reader.submit(start, cnt, pad_to)
+            for start, cnt, _ in extents:
+                rows = lrd_reader.stage(lrd_reader.get())
+                d, p = _ooc_refine_block(rows, jnp.int32(start),
                                          jnp.int32(cnt), q, d, p, k=k)
                 self._count(cnt)
-                continue
-            # codes padded to the same bucketed shapes as the row fetches,
-            # so the LB kernel compiles O(log) times, not once per piece
-            # length; pad columns are masked out of `live` below
-            pad_to = self._pad_bucket(cnt, R)
-            codes = np.zeros((pad_to, m_sax), np.uint8)
-            codes[:cnt] = self._lsd()[start:start + cnt]
-            ranks = np.zeros((pad_to,), np.int32)
-            ranks[:cnt] = self._srank[start:start + cnt]
-            self._t["sax_rows_read"] += cnt
-            lb_row = jnp.maximum(
-                kops.lb_sax(q_paa, jnp.asarray(codes), n, mode=kmode),
-                lbs[:, ranks])                                # (Q, pad_to)
+            return d, p
+
+        try:
+            # -- phase 1 (Alg. 11): seed BSF from each query's home leaf plus
+            # its l_max best leaves by LB_EAPCA — same visit set as the
+            # in-memory pipeline, so the bound entering phase 2 is comparably
+            # tight.
+            lbs = self._leaf_lbs(q)                          # (Q, L)
+            home_nodes = route_to_leaf(self.saved.tree, q,
+                                       self.saved.max_depth)
+            home_ranks = np.asarray(self._leaf_rank)[np.asarray(home_nodes)]
+            l_max = min(cfg.l_max, self.saved.num_leaves)
+            _, best = jax.lax.top_k(-lbs, l_max)             # (Q, l_max)
+            seeded = sorted(set(int(r) for r in home_ranks if r >= 0)
+                            | set(int(r) for r in np.asarray(best).ravel()))
+            seeds = [(int(self._leaf_start[r]), int(self._leaf_count[r]),
+                      max_leaf) for r in seeded
+                     if int(self._leaf_count[r]) > 0]
+            seed_rows = sum(cnt for _, cnt, _ in seeds)
+            d, p = refine_all(d, p, seeds)
+
+            # -- phase 2: leaf-level pruning over resident synopses ----------
+            slack = jnp.float32(1.0 - cfg.lb_slack)
             bsf = d[:, k - 1]
-            live = ((lb_row * slack < bsf[:, None])
-                    & (jnp.arange(pad_to) < cnt)[None, :])    # (Q, pad_to)
-            alive_counts = alive_counts + jnp.sum(live, axis=1,
-                                                  dtype=jnp.int32)
-            for s0, c0 in _alive_runs(np.asarray(jnp.any(live, axis=0))[:cnt],
-                                      start):
-                rows = self._fetch(s0, c0, self._pad_bucket(c0, R))
-                d, p = _ooc_refine_block(jnp.asarray(rows), jnp.int32(s0),
-                                         jnp.int32(c0), q, d, p, k=k)
-                self._count(c0)
-        self._t["calls"] += 1
+            cand = lbs * slack < bsf[:, None]                # (Q, L)
+            needed = np.array(jnp.any(cand, axis=0))
+            needed[seeded] = False
+            n_alive = max(int((np.asarray(self._leaf_count) > 0).sum()), 1)
+            eapca_pr = 1.0 - np.asarray(
+                jnp.sum(cand, axis=1), np.float32) / n_alive
+
+            # -- phase 3: stream the LSD sidecar over non-prunable leaves,
+            # keep only series the per-row LB_SAX filter cannot exclude, and
+            # fetch those as contiguous LRD runs (the paper's LSDFile pass:
+            # m bytes of codes buy skipping n floats of raw series) ---------
+            pieces = self._runs(needed, R)
+            use_sax = bool(cfg.use_sax)
+            # seeded-leaf rows were read and refined for every query — they
+            # count as alive, or sax_pr would overstate pruning (rows the
+            # phase-3 filter never saw are not rows it pruned)
+            alive_counts = jnp.full((qn,), seed_rows, jnp.int32)
+            if not use_sax:
+                d, p = refine_all(d, p, [(s, c, self._pad_bucket(c, R))
+                                         for s, c in pieces])
+            else:
+                m_sax = int(self._lsd().shape[1])
+                q_paa = S.paa(q, m_sax)
+                kmode = resolve_kernel_mode(cfg.kernel_mode)
+                lsd_reader = make_chunk_reader(self._lsd(), R, m_sax,
+                                               np.uint8,
+                                               prefetch=cfg.prefetch)
+                # the sidecar stream is submitted up front: piece j+1's
+                # codes (m bytes/series) read while piece j filters/refines
+                for start, cnt in pieces:
+                    lsd_reader.submit(start, cnt, self._pad_bucket(cnt, R))
+                for start, cnt in pieces:
+                    # codes padded to the same bucketed shapes as the row
+                    # fetches, so the LB kernel compiles O(log) times, not
+                    # once per piece length; pad columns are masked out of
+                    # `live` below
+                    pad_to = self._pad_bucket(cnt, R)
+                    codes = lsd_reader.stage(lsd_reader.get())
+                    ranks = np.zeros((pad_to,), np.int32)
+                    ranks[:cnt] = self._srank[start:start + cnt]
+                    self._t["sax_rows_read"] += cnt
+                    lb_row = jnp.maximum(
+                        kops.lb_sax(q_paa, codes, n, mode=kmode),
+                        lbs[:, ranks])                        # (Q, pad_to)
+                    bsf = d[:, k - 1]
+                    live = ((lb_row * slack < bsf[:, None])
+                            & (jnp.arange(pad_to) < cnt)[None, :])
+                    alive_counts = alive_counts + jnp.sum(live, axis=1,
+                                                          dtype=jnp.int32)
+                    alive = np.asarray(jnp.any(live, axis=0))[:cnt]
+                    d, p = refine_all(d, p,
+                                      [(s0, c0, self._pad_bucket(c0, R))
+                                       for s0, c0 in _alive_runs(alive,
+                                                                 start)])
+            self._t["calls"] += 1
+        finally:
+            self._reap_reader(lrd_reader)
+            if lsd_reader is not None:
+                self._reap_reader(lsd_reader)
 
         res = self._fill_result(
             d, p, self._ids_of(p), path=2,
@@ -1023,7 +1083,8 @@ DISK_BACKEND_NAMES = ("local", "scan", "ooc-scan", "ooc-local")
 def make_disk_backend(name: str, store, *,
                       search: SearchConfig | None = None,
                       memory_budget_mb: float = 64.0,
-                      verify: bool = True) -> SearchBackend:
+                      verify: bool = True,
+                      prefetch: str | None = None) -> SearchBackend:
     """Serve a saved index by backend name.
 
     ``store`` is an index-directory path, an already-open ``SavedIndex``,
@@ -1032,7 +1093,10 @@ def make_disk_backend(name: str, store, *,
     materialize the saved arrays into the ordinary in-memory backends
     (bit-identical to the ones built from the original data);
     ``ooc-scan``/``ooc-local`` keep the raw series memory-mapped and
-    stream them under ``memory_budget_mb``.
+    stream them under ``memory_budget_mb``. ``prefetch`` overrides
+    ``SearchConfig.prefetch`` for the streamed backends (``"thread"`` =
+    async reader thread + two-slot host buffer; answers bit-identical to
+    ``"sync"``).
 
     .. deprecated:: store API
         For directory paths prefer ``repro.api.Hercules.open(path)
@@ -1051,6 +1115,9 @@ def make_disk_backend(name: str, store, *,
             raise ValueError(
                 f"{store!r} has no base index to serve — append rows and "
                 f"compact() first")
+    if prefetch is not None:
+        search = dataclasses.replace(search or saved.config.search,
+                                     prefetch=prefetch)
     if name == "local":
         idx = saved.to_index()
         if search is not None:

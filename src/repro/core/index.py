@@ -66,10 +66,13 @@ class HerculesIndex:
 
     @classmethod
     def build_streaming(cls, source,
-                        config: "IndexConfig | None" = None) -> "HerculesIndex":
+                        config: "IndexConfig | None" = None,
+                        prefetch: "str | None" = None) -> "HerculesIndex":
         """Chunk-streamed build from a :class:`repro.data.pipeline.ChunkSource`
         — device residency bounded by one chunk during construction, result
         bit-identical to :meth:`build` on the concatenated data.
+        ``prefetch="thread"`` overlaps chunk reads with build compute
+        (default: the config's ``search.prefetch``).
 
         .. deprecated:: store API
             Prefer ``repro.api.Hercules.create(path, config, data=source)``
@@ -77,7 +80,7 @@ class HerculesIndex:
             remains the low-level in-memory delegate.
         """
         from repro.storage.build import build_index_streaming
-        return build_index_streaming(source, config)
+        return build_index_streaming(source, config, prefetch=prefetch)
 
     # -- query answering ------------------------------------------------------
 

@@ -60,11 +60,19 @@ class SearchConfig:
     topk_budget_chunks: int = 32     # candidate budget C = chunks * chunk
     kernel_mode: str = "auto"    # Pallas dispatch: auto | pallas | interpret
                                  # | ref (kernels/compat.py owns the policy)
+    prefetch: str = "sync"       # out-of-core disk reads: sync | thread
+                                 # (reader thread + two-slot host buffer;
+                                 # data/pipeline.py owns the readers).
+                                 # Answers are bit-identical across modes.
 
     def __post_init__(self):
         if self.kernel_mode not in KERNEL_MODES:
             raise ValueError(f"kernel_mode={self.kernel_mode!r}; expected "
                              f"one of {KERNEL_MODES}")
+        from repro.data.pipeline import PREFETCH_MODES
+        if self.prefetch not in PREFETCH_MODES:
+            raise ValueError(f"prefetch={self.prefetch!r}; expected one of "
+                             f"{PREFETCH_MODES}")
 
     def pad_multiple(self) -> int:
         import math

@@ -497,9 +497,12 @@ _synopsis_fold_jit = jax.jit(_synopsis_fold, donate_argnums=(0,))
 
 
 def compute_synopses_chunked(tree: HerculesTree, node_of: jax.Array,
-                             source, max_depth: int) -> HerculesTree:
+                             source, max_depth: int,
+                             prefetch: str = "sync") -> HerculesTree:
     """Chunk-streamed :func:`compute_synopses` — bit-identical synopses
-    without ever holding the collection (or its prefix sums) on device."""
+    without ever holding the collection (or its prefix sums) on device.
+    ``prefetch="thread"`` overlaps the chunk reads with the fold compute
+    (same bits: the stream order is deterministic either way)."""
     from repro.data.pipeline import iter_device_chunks
 
     init = jnp.stack([jnp.full(tree.synopsis.shape[:-1], _SYN_BIG, jnp.float32),
@@ -511,7 +514,7 @@ def compute_synopses_chunked(tree: HerculesTree, node_of: jax.Array,
     anc = node_of
     for _ in range(max_depth + 1):
         mm = None
-        for start, chunk in iter_device_chunks(source):
+        for start, chunk in iter_device_chunks(source, prefetch=prefetch):
             p, p2 = S.prefix_sums(chunk)
             cm = _synopsis_chunk_minmax_jit(
                 tree, anc[start:start + chunk.shape[0]], p, p2)
@@ -523,7 +526,8 @@ def compute_synopses_chunked(tree: HerculesTree, node_of: jax.Array,
     return tree._replace(synopsis=syn)
 
 
-def build_tree_chunked(source, config: BuildConfig) -> tuple[HerculesTree, jax.Array]:
+def build_tree_chunked(source, config: BuildConfig,
+                       prefetch: str = "sync") -> tuple[HerculesTree, jax.Array]:
     """Out-of-core :func:`build_tree`: stream the collection in chunks.
 
     ``source`` is a :class:`repro.data.pipeline.ChunkSource` (re-iterable,
@@ -553,7 +557,7 @@ def build_tree_chunked(source, config: BuildConfig) -> tuple[HerculesTree, jax.A
 
     for _ in range(config.max_rounds):
         stats = None
-        for start, chunk in iter_device_chunks(source):
+        for start, chunk in iter_device_chunks(source, prefetch=prefetch):
             p, p2 = S.prefix_sums(chunk)
             cs = _round_stats_jit(tree, node_of[start:start + chunk.shape[0]],
                                   p, p2)
@@ -563,7 +567,7 @@ def build_tree_chunked(source, config: BuildConfig) -> tuple[HerculesTree, jax.A
         if int(num_split) == 0:
             break
         parts = []
-        for start, chunk in iter_device_chunks(source):
+        for start, chunk in iter_device_chunks(source, prefetch=prefetch):
             p, p2 = S.prefix_sums(chunk)
             parts.append(_route_members_jit(
                 tree, node_of[start:start + chunk.shape[0]], p, p2))
@@ -573,7 +577,8 @@ def build_tree_chunked(source, config: BuildConfig) -> tuple[HerculesTree, jax.A
 
     max_depth = int(jnp.max(jnp.where(jnp.arange(max_nodes) < tree.num_nodes,
                                       tree.depth, 0)))
-    tree = compute_synopses_chunked(tree, node_of, source, max_depth)
+    tree = compute_synopses_chunked(tree, node_of, source, max_depth,
+                                    prefetch=prefetch)
     return tree, node_of
 
 

@@ -58,7 +58,8 @@ def _index_config(args) -> IndexConfig:
         build=BuildConfig(leaf_capacity=args.leaf_size),
         search=SearchConfig(k=args.k, l_max=args.l_max,
                             chunk=min(1024, args.num),
-                            scan_block=min(4096, args.num)))
+                            scan_block=min(4096, args.num),
+                            prefetch=getattr(args, "prefetch", "sync")))
 
 
 def _synthetic(num: int, length: int, seed: int) -> np.ndarray:
@@ -170,6 +171,21 @@ def cmd_compact(args) -> None:
             "manifest_compact": manifest["extra"].get("compact", {})})
 
 
+def _assert_readers_joined() -> None:
+    """No chunk-reader thread may outlive its stream — ``close()`` joins
+    them; a survivor here is a leak (checked by the CI persistence job)."""
+    import threading
+
+    from repro.data.pipeline import AsyncChunkReader
+
+    leaked = [t.name for t in threading.enumerate()
+              if t.name == AsyncChunkReader.THREAD_NAME and t.is_alive()]
+    if leaked:
+        raise SystemExit(f"leaked chunk-reader threads after close(): "
+                         f"{leaked}")
+    print("reader threads joined after close() — none leaked")
+
+
 def _assert_same(name: str, a, b) -> None:
     for field, x, y in (("dists", a.dists, b.dists), ("ids", a.ids, b.ids)):
         if not np.array_equal(np.asarray(x), np.asarray(y)):
@@ -201,25 +217,30 @@ def cmd_query(args) -> None:
 
     rows: dict = {"index": args.index, "backend": args.backend, "k": k,
                   "num_series": saved.num_series,
-                  "memory_budget_mb": args.memory_budget_mb}
+                  "memory_budget_mb": args.memory_budget_mb,
+                  "prefetch": args.prefetch or saved.config.search.prefetch}
 
-    search = None
-    if args.backend == "ooc-scan":
-        # fit the scan block inside the per-block streaming cap (half the
-        # budget: two blocks in flight; validation rejects anything larger)
-        stream_rows = max(int(args.memory_budget_mb * (1 << 20)
-                              // (4 * saved.series_len)) // 2, 1)
-        base = saved.config.search
-        if stream_rows < base.scan_block:
-            import dataclasses
-            search = dataclasses.replace(base, scan_block=stream_rows)
-            print(f"scan_block {base.scan_block} -> {search.scan_block} "
-                  f"(fits the {args.memory_budget_mb} MiB budget)")
+    if args.backend.startswith("ooc"):
+        # one budget→rows code path: the backends' own classmethod (the CLI
+        # used to re-derive this by hand and could drift from _validate)
+        from repro.core.engine import _OutOfCoreBase
+        rows["stream_rows"] = _OutOfCoreBase.budget_stream_rows(
+            args.memory_budget_mb, saved.series_len)
 
     t0 = time.perf_counter()
-    backend = make_disk_backend(args.backend, args.index, search=search,
-                                memory_budget_mb=args.memory_budget_mb)
+    backend = make_disk_backend(args.backend, args.index,
+                                memory_budget_mb=args.memory_budget_mb,
+                                prefetch=args.prefetch)
     rows["load_seconds"] = round(time.perf_counter() - t0, 3)
+    if args.backend == "ooc-scan":
+        # a scan_block too large for the budget is auto-shrunk by the
+        # backend itself (same behaviour from every entry point); report it
+        base_block = saved.config.search.scan_block
+        eff_block = backend.base_config.scan_block
+        if eff_block != base_block:
+            print(f"scan_block {base_block} -> {eff_block} "
+                  f"(auto-fit to the {args.memory_budget_mb} MiB budget)")
+        rows["scan_block"] = eff_block
 
     eng = QueryEngine(backend)
     t0 = time.perf_counter()
@@ -227,6 +248,20 @@ def cmd_query(args) -> None:
     rows["query_seconds"] = round(time.perf_counter() - t0, 3)
     print(f"{args.backend}: loaded in {rows['load_seconds']}s, answered "
           f"{len(queries)} queries in {rows['query_seconds']}s")
+
+    if args.backend.startswith("ooc"):
+        st = backend.stats()
+        rows["read_wait_seconds"] = round(st["read_wait_seconds"], 4)
+        rows["overlap_blocks"] = st["overlap_blocks"]
+        if args.prefetch == "thread" and args.verify != "none":
+            # thread-prefetch leg: answers must be bit-identical to the
+            # synchronous reader on the same backend and budget
+            sync_be = make_disk_backend(
+                args.backend, args.index,
+                memory_budget_mb=args.memory_budget_mb, prefetch="sync")
+            _assert_same(f"{args.backend} prefetch thread==sync",
+                         res, sync_be.knn(queries, k=k))
+    _assert_readers_joined()
 
     if args.verify == "parity":
         # disk-fed vs in-memory, all three backends, bit-identical
@@ -285,6 +320,10 @@ def main(argv=None) -> None:
     b.add_argument("--l-max", type=int, default=8)
     b.add_argument("--verify-one-shot", action="store_true",
                    help="assert chunked build == one-shot build bit-for-bit")
+    b.add_argument("--prefetch", choices=("sync", "thread"), default="sync",
+                   help="chunk-read scheduling for the build (thread = "
+                        "async reader + two-slot host buffer; identical "
+                        "bits either way)")
     b.add_argument("--json", default=None)
     b.set_defaults(fn=cmd_build)
 
@@ -317,6 +356,10 @@ def main(argv=None) -> None:
     q.add_argument("--difficulty", default="5%")
     q.add_argument("--query-seed", type=int, default=1)
     q.add_argument("--k", type=int, default=1)
+    q.add_argument("--prefetch", choices=("sync", "thread"), default=None,
+                   help="ooc read scheduling override (default: the saved "
+                        "config's). thread additionally asserts bit-parity "
+                        "against the sync reader when --verify is set")
     q.add_argument("--verify", choices=("none", "parity", "exact"),
                    default="none")
     q.add_argument("--json", default=None)

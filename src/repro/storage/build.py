@@ -15,7 +15,13 @@ Two entry points over the same machinery:
 
 Both consume a :class:`repro.data.pipeline.ChunkSource` (re-iterable, fixed
 chunk boundaries) and move chunks host→device through the double-buffered
-:func:`iter_device_chunks` stream.
+:func:`iter_device_chunks` stream. Every entry point takes a
+``prefetch`` knob (``None`` → ``config.search.prefetch``):
+``"thread"`` routes the chunk reads through the async reader
+(:class:`repro.data.pipeline.AsyncChunkReader`), overlapping the memmap
+read with tree-statistics compute and the layout scatter — the built
+index is bit-identical to a ``"sync"`` build (the stream order is
+deterministic in both modes).
 
 The directory-writing half is factored as :func:`stream_base_files` so the
 store-level compaction (``repro.storage.store.Hercules.compact``) can replay
@@ -43,7 +49,8 @@ from repro.core.index import HerculesIndex, IndexConfig
 from repro.core.layout import (assemble_layout, compute_layout_geometry,
                                leaf_tables, LayoutGeometry)
 from repro.core.tree import HerculesTree, build_tree_chunked, tree_stats
-from repro.data.pipeline import ChunkSource, iter_chunks, iter_device_chunks
+from repro.data.pipeline import (ChunkSource, iter_device_chunks,
+                                 iter_host_chunks)
 from repro.storage.format import (LAYOUT_FILE, LAYOUT_STATIC_FIELDS, LRD_FILE,
                                   LSD_FILE, SMALL_LAYOUT_FIELDS, TREE_FILE,
                                   generation_name, write_manifest)
@@ -56,8 +63,14 @@ def _check_series_len(source: ChunkSource, config: IndexConfig) -> None:
             f"{config.sax_segments} iSAX segments")
 
 
-def _chunked_tree_and_geometry(source: ChunkSource, config: IndexConfig):
-    tree, node_of = build_tree_chunked(source, config.build)
+def _resolve_prefetch(config: IndexConfig, prefetch: str | None) -> str:
+    return config.search.prefetch if prefetch is None else prefetch
+
+
+def _chunked_tree_and_geometry(source: ChunkSource, config: IndexConfig,
+                               prefetch: str = "sync"):
+    tree, node_of = build_tree_chunked(source, config.build,
+                                       prefetch=prefetch)
     geo = compute_layout_geometry(
         tree, node_of, source.num_series, source.series_len,
         pad_series_to_multiple=config.search.pad_multiple())
@@ -65,7 +78,8 @@ def _chunked_tree_and_geometry(source: ChunkSource, config: IndexConfig):
 
 
 def build_index_streaming(source: ChunkSource,
-                          config: IndexConfig | None = None) -> HerculesIndex:
+                          config: IndexConfig | None = None,
+                          prefetch: str | None = None) -> HerculesIndex:
     """Chunk-streamed build of an in-memory index (never more than one chunk
     of raw series on device during construction).
 
@@ -74,13 +88,14 @@ def build_index_streaming(source: ChunkSource,
         low-level in-memory builder.
     """
     config = config or IndexConfig()
+    prefetch = _resolve_prefetch(config, prefetch)
     _check_series_len(source, config)
-    tree, geo = _chunked_tree_and_geometry(source, config)
+    tree, geo = _chunked_tree_and_geometry(source, config, prefetch)
 
     n = source.series_len
     lrd = np.zeros((geo.n_pad, n), np.float32)
     lsd = np.zeros((geo.n_pad, config.sax_segments), np.uint8)
-    for start, chunk in iter_device_chunks(source):
+    for start, chunk in iter_device_chunks(source, prefetch=prefetch):
         pos = geo.inv_perm[start:start + chunk.shape[0]]
         lrd[pos] = np.asarray(chunk)
         lsd[pos] = np.asarray(S.isax(chunk, config.sax_segments))
@@ -110,7 +125,7 @@ def _write_small_arrays(path: str, tree: HerculesTree, geo: LayoutGeometry,
 
 
 def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
-                      generation: int = 0):
+                      generation: int = 0, prefetch: str | None = None):
     """Chunk-streamed build of one base-file generation under ``path``.
 
     Writes ``tree.npz``/``layout.npz``/``lrd.npy``/``lsd.npy`` (suffixed by
@@ -121,8 +136,10 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
     file names to the generation's actual names.
     """
     _check_series_len(source, config)
+    prefetch = _resolve_prefetch(config, prefetch)
+    read_stats: dict = {}
     t0 = time.perf_counter()
-    tree, geo = _chunked_tree_and_geometry(source, config)
+    tree, geo = _chunked_tree_and_geometry(source, config, prefetch)
     t_tree = time.perf_counter() - t0
 
     os.makedirs(path, exist_ok=True)
@@ -140,7 +157,11 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
     lsd = np.lib.format.open_memmap(
         os.path.join(path, names[LSD_FILE]), mode="w+", dtype=np.uint8,
         shape=(geo.n_pad, config.sax_segments))
-    for start, chunk in iter_chunks(source):
+    for start, chunk in iter_host_chunks(source, prefetch=prefetch,
+                                         telemetry=read_stats):
+        # the chunk may be a reusable reader-slot view: both consumers below
+        # copy out of it (numpy scatter; isax blocks on np.asarray) before
+        # the next iteration recycles the slot
         dev = jnp.asarray(chunk)
         pos = geo.inv_perm[start:start + chunk.shape[0]]
         lrd[pos] = chunk
@@ -156,8 +177,12 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
         "streaming": True,
         "chunk_size": source.chunk_size,
         "num_chunks": source.num_chunks,
+        "prefetch": prefetch,
         "tree_seconds": round(t_tree, 3),
         "write_seconds": round(t_write, 3),
+        "write_read_wait_seconds": round(
+            read_stats.get("read_wait_seconds", 0.0), 3),
+        "write_overlap_blocks": int(read_stats.get("overlap_blocks", 0)),
         "series_per_second": round(source.num_series / max(t_tree + t_write,
                                                            1e-9), 1),
     }
@@ -166,7 +191,8 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
 
 def build_index_to_disk(source: ChunkSource, path: str,
                         config: IndexConfig | None = None,
-                        extra_meta: dict | None = None) -> dict:
+                        extra_meta: dict | None = None,
+                        prefetch: str | None = None) -> dict:
     """Chunk-streamed build straight to an index directory; the collection
     only ever exists as the on-disk LRD file. Returns the manifest (plus
     timing under ``extra["build"]``).
@@ -183,7 +209,7 @@ def build_index_to_disk(source: ChunkSource, path: str,
         os.remove(stale)
 
     names, statics, max_depth, timings = stream_base_files(
-        source, path, config, generation=0)
+        source, path, config, generation=0, prefetch=prefetch)
     extra = dict(extra_meta or {})
     extra["build"] = timings
     return write_manifest(path, config, max_depth, statics, extra=extra,

@@ -42,6 +42,7 @@ collection.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 import re
@@ -403,7 +404,8 @@ class Hercules:
         self._invalidate_engines()
         return segment
 
-    def compact(self, chunk_size: int = 8192) -> dict:
+    def compact(self, chunk_size: int = 8192,
+                prefetch: str | None = None) -> dict:
         """Fold every journal segment into a new base-file generation.
 
         Replays base rows (original id order) followed by journal rows
@@ -434,7 +436,7 @@ class Hercules:
         gen = self.generation + 1
         t0 = time.perf_counter()
         names, statics, max_depth, timings = stream_base_files(
-            source, self.path, config, generation=gen)
+            source, self.path, config, generation=gen, prefetch=prefetch)
         extra = self._extra_with_provenance(None)
         extra["build"] = timings
         extra["compact"] = {
@@ -480,17 +482,23 @@ class Hercules:
     def engine(self, backend: str = "local", *,
                search: SearchConfig | None = None,
                memory_budget_mb: float = 64.0,
-               engine_config=None) -> QueryEngine:
+               engine_config=None,
+               prefetch: str | None = None) -> QueryEngine:
         """A :class:`QueryEngine` over the base index, cached per
         configuration. Serves the **base** only — use :meth:`query` to also
         see journal rows pending compaction. ``append``/``compact``
         invalidate every cached plan and re-resolve the backend against the
-        new store state on the next call."""
+        new store state on the next call. ``prefetch`` overrides
+        ``SearchConfig.prefetch`` for the ooc backends (``"thread"`` = async
+        reader + two-slot host buffer; answers bit-identical)."""
         self._require_open()
         if self.saved is None:
             raise IndexFormatError(
                 f"{self.path!r}: store has no base index yet — append then "
                 f"compact() before serving")
+        if prefetch is not None:
+            search = dataclasses.replace(search or self.config.search,
+                                         prefetch=prefetch)
         # the budget only parameterizes the ooc backends — keep it out of
         # the key otherwise, so budget variants don't duplicate an already
         # fully materialized local/scan backend

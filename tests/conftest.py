@@ -1,9 +1,24 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real 1-CPU world;
 only launch/dryrun.py requests 512 placeholder devices (and only in its own
 process)."""
+import threading
+
 import jax
 import numpy as np
 import pytest
+
+
+@pytest.fixture(autouse=True)
+def no_leaked_reader_threads():
+    """Every chunk-reader thread must be joined by its stream's close() —
+    a reader surviving a test is a leak (the CI persistence job asserts
+    the same across processes)."""
+    yield
+    from repro.data.pipeline import AsyncChunkReader
+
+    leaked = [t.name for t in threading.enumerate()
+              if t.name == AsyncChunkReader.THREAD_NAME and t.is_alive()]
+    assert not leaked, f"leaked chunk-reader threads: {leaked}"
 
 
 @pytest.fixture(scope="session")

@@ -278,12 +278,19 @@ class TestOutOfCore:
             assert np.array_equal(np.asarray(r_ooc.accessed),
                                   np.asarray(r2.accessed))
 
-    def test_ooc_scan_budget_too_small(self, saved_dir):
+    def test_ooc_scan_small_budget_autofits(self, data, saved_dir, queries):
+        # a base scan_block that cannot fit the budget's streamed blocks is
+        # auto-shrunk at construction (every entry point, not just the CLI);
+        # only an explicit per-call override still fails validation
         with open_index(saved_dir) as saved:
             ooc = OutOfCoreScanBackend(saved, CFG.search,
-                                       memory_budget_mb=1e-4)
+                                       memory_budget_mb=0.1)
+            assert ooc.base_config.scan_block == ooc.stream_rows()
+            r = ooc.knn(queries)
+            mem = ScanBackend(data, CFG.search).knn(queries)
+            assert np.array_equal(np.asarray(mem.dists), np.asarray(r.dists))
             with pytest.raises(ValueError, match="memory_budget_mb"):
-                ooc.knn(np.zeros((1, LEN), np.float32))
+                ooc.knn(queries, scan_block=CFG.search.scan_block)
 
     def test_ooc_through_engine(self, data, saved_dir, queries):
         cfg = self._budget_cfg()
