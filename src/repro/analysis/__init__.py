@@ -1,0 +1,31 @@
+"""``repro.analysis`` — herculint static analysis + runtime sanitizers.
+
+Hercules' speed rests on exactly the mechanisms that are easiest to get
+silently wrong in Python/JAX: memory-mapped base files, reusable host slot
+buffers refilled by a daemon reader thread, and atomic manifest commits.
+PR 4 (a segfault from ``jnp`` zero-copy aliasing a closed mmap) and PR 5
+(the reader refilling a slot that a bare ``device_put`` had aliased) each
+found one instance of a *class* of bug by hand. This package finds the
+classes mechanically:
+
+* :mod:`repro.analysis.herculint` — an AST lint engine with repo-specific
+  rules (``repro.analysis.rules``): alias-unsafe device transfers,
+  mmap-lifetime escapes, atomic-commit ordering, cross-thread attribute
+  discipline, and SearchConfig plumbing. Run it with
+  ``python -m repro.analysis``; a ratchet baseline
+  (``src/repro/analysis/baseline.json``) freezes grandfathered findings so
+  any *new* violation fails CI.
+* :mod:`repro.analysis.sanitize` — runtime sanitizers, enabled by
+  ``REPRO_SANITIZE=1``: the async chunk reader poisons recycled slots with
+  a NaN canary and re-checks staged device copies (latent aliasing becomes
+  a loud :class:`~repro.analysis.sanitize.SanitizerError`), and
+  ``SavedIndex`` wraps its memory maps in use-after-close guards.
+* :mod:`repro.analysis.deadcode` — import-graph reachability report over
+  ``src/repro`` (``python -m repro.analysis --deadcode``).
+
+This module stays import-light (stdlib + numpy only at the sanitize leaf):
+the hot paths import :mod:`repro.analysis.sanitize` at module load.
+"""
+from repro.analysis.sanitize import (  # noqa: F401
+    SanitizerError, UseAfterCloseError, sanitize_enabled,
+)

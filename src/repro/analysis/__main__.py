@@ -1,0 +1,97 @@
+"""CLI: ``python -m repro.analysis`` — lint + ratchet check.
+
+Exit codes: 0 clean (or all findings grandfathered/justified), 1 new
+findings, 2 usage/parse trouble.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import deadcode, herculint
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is three parents above src/
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="herculint: repo-native static analysis + ratchet")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/dirs to lint (default: src benchmarks "
+                         "examples under the repo root)")
+    ap.add_argument("--repo-root", type=Path, default=_repo_root())
+    ap.add_argument("--baseline", type=Path,
+                    default=herculint.DEFAULT_BASELINE)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather all current findings into the "
+                         "baseline (preserves existing justifications)")
+    ap.add_argument("--json", type=Path, metavar="OUT",
+                    help="also dump findings (and the dead-code report "
+                         "with --deadcode) as JSON")
+    ap.add_argument("--deadcode", action="store_true",
+                    help="print the import-graph dead-code report "
+                         "(informational; never fails the run by itself)")
+    args = ap.parse_args(argv)
+
+    root = args.repo_root.resolve()
+    roots = args.paths or [root / "src", root / "benchmarks",
+                           root / "examples"]
+    findings = herculint.run_lint(roots, root)
+
+    if args.deadcode:
+        report = deadcode.build_report(root)
+        print(deadcode.format_report(report))
+        print()
+    else:
+        report = None
+
+    if args.write_baseline:
+        herculint.write_baseline(
+            findings, args.baseline,
+            previous=herculint.load_baseline(args.baseline))
+        print(f"baseline written: {args.baseline} "
+              f"({len(findings)} grandfathered findings)")
+        return 0
+
+    baseline = herculint.load_baseline(args.baseline)
+    result = herculint.ratchet(findings, baseline)
+
+    for f in result.new:
+        print(f.format())
+    if result.grandfathered:
+        print(f"-- {len(result.grandfathered)} grandfathered finding(s) "
+              f"(see {args.baseline.name})")
+    for fp in result.stale:
+        entry = baseline[fp]
+        print(f"-- stale baseline entry {fp} "
+              f"({entry.get('rule')} @ {entry.get('path')}): the finding "
+              "is gone — shrink the baseline.")
+
+    if args.json:
+        payload = {
+            "new": [f.to_json() for f in result.new],
+            "grandfathered": [f.to_json() for f in result.grandfathered],
+            "stale": result.stale,
+        }
+        if report is not None:
+            payload["deadcode"] = report
+        args.json.write_text(json.dumps(payload, indent=2) + "\n")
+
+    if result.new:
+        print(f"herculint: {len(result.new)} new finding(s) — fix them, "
+              "suppress with `# herculint: ok[rule] -- reason`, or "
+              "(new-rule rollout only) --write-baseline.")
+        return 1
+    print(f"herculint: clean ({len(result.grandfathered)} grandfathered, "
+          f"{len(result.stale)} stale baseline entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,220 @@
+"""Dead-code report: import-graph reachability over ``src/repro``.
+
+Walks the static import graph from four root sets — the public API
+(``repro.api``), the test suite, the benchmark/example drivers, and the
+``python -m repro.launch.*`` CLIs — and classifies every module under
+``src/repro`` by what reaches it. Dynamic registries are handled
+specially: a call like ``importlib.import_module(f"repro.configs.{...}")``
+adds edges to every module under that prefix.
+
+Some modules are reachable only from tests: the ``configs/`` + ``models/``
+LLM architecture exemplars predate the Hercules pivot and are kept
+deliberately as dry-run/trace fixtures for the distributed tooling. They
+are listed in :data:`INTENTIONAL` with a justification so the report
+never shows them as ambiguous — anything *outside* that list that is
+unreachable is genuinely dead and should be deleted.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Set
+
+PKG = "repro"
+
+#: Modules (by prefix) that are intentionally kept even when nothing on
+#: the api/CLI path imports them. Keyed by dotted-prefix.
+INTENTIONAL: Dict[str, str] = {
+    "repro.configs": (
+        "LLM architecture registry: dry-run/trace fixtures for the "
+        "distributed sharding + launch tooling (tests/test_dryrun_units, "
+        "launch/dryrun); exercised via the dynamic importlib registry."),
+    "repro.models": (
+        "Model exemplars backing the configs registry; covered by "
+        "tests/test_models + tests/test_train and used by launch/dryrun "
+        "shape-level traces."),
+}
+
+_DYNAMIC_RE = re.compile(r"import_module\(\s*f?['\"]([\w\.]+)\{")
+
+
+def _module_name(py: Path, src_root: Path) -> str:
+    rel = py.resolve().relative_to(src_root.resolve())
+    parts = list(rel.with_suffix("").parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def discover_modules(src_root: Path) -> Dict[str, Path]:
+    out = {}
+    for py in sorted((src_root / PKG).rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        out[_module_name(py, src_root)] = py
+    return out
+
+
+def _imports_of(py: Path, modules: Dict[str, Path],
+                self_name: str) -> Set[str]:
+    """repro.* modules statically imported by *py* (incl. dynamic registry)."""
+    try:
+        tree = ast.parse(py.read_text())
+    except SyntaxError:
+        return set()
+    edges: Set[str] = set()
+
+    def add(name: str):
+        # an import of a package reaches its __init__; an import of an
+        # attribute from a package may actually be a submodule
+        while name:
+            if name in modules:
+                edges.add(name)
+                return
+            name = name.rpartition(".")[0]
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] == PKG:
+                    add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level:  # relative import — resolve against self
+                base = self_name.split(".")
+                # drop one component for the module itself unless package
+                if modules.get(self_name, Path()).name != "__init__.py":
+                    base = base[:-1]
+                base = base[:len(base) - (node.level - 1)]
+                mod = ".".join(base + ([mod] if mod else []))
+            if mod.split(".")[0] != PKG:
+                continue
+            add(mod)
+            for a in node.names:
+                add(f"{mod}.{a.name}")
+
+    for m in _DYNAMIC_RE.finditer(py.read_text()):
+        prefix = m.group(1).rstrip(".")
+        if prefix.split(".")[0] == PKG:
+            for name in modules:
+                if name.startswith(prefix + "."):
+                    edges.add(name)
+    edges.discard(self_name)
+    return edges
+
+
+def _closure(seeds: Iterable[str], graph: Dict[str, Set[str]]) -> Set[str]:
+    seen: Set[str] = set()
+    frontier = list(seeds)
+    while frontier:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        frontier.extend(graph.get(name, ()))
+        # importing a submodule executes its package __init__s too
+        parent = name.rpartition(".")[0]
+        if parent and parent not in seen:
+            frontier.append(parent)
+    return seen
+
+
+def build_report(repo_root: Path) -> dict:
+    src_root = repo_root / "src"
+    modules = discover_modules(src_root)
+    graph = {name: _imports_of(py, modules, name)
+             for name, py in modules.items()}
+
+    def external_roots(dirname: str) -> Set[str]:
+        roots: Set[str] = set()
+        d = repo_root / dirname
+        if not d.is_dir():
+            return roots
+        for py in sorted(d.rglob("*.py")):
+            roots |= _imports_of(py, modules, f"<{dirname}>")
+        return roots
+
+    root_sets = {
+        "api": _closure({"repro.api"}, graph),
+        "cli": _closure([m for m in modules
+                         if m.startswith("repro.launch")
+                         or m.endswith("__main__")], graph),
+        "tests": _closure(external_roots("tests"), graph),
+        "bench/examples": _closure(
+            external_roots("benchmarks") | external_roots("examples"), graph),
+    }
+
+    classified: Dict[str, dict] = {}
+    for name in sorted(modules):
+        reached_by = [k for k, s in root_sets.items() if name in s]
+        if name == "repro":
+            reached_by = reached_by or ["api"]
+        status = "reachable" if reached_by else "dead"
+        note = ""
+        if reached_by and "api" not in reached_by and "cli" not in reached_by:
+            status = "test-only"
+        # the exemplar audit is explicit whatever the reachability verdict:
+        # configs/models must never show up as ambiguous
+        for prefix, why in INTENTIONAL.items():
+            if name == prefix or name.startswith(prefix + "."):
+                note = why
+                if status in ("dead", "test-only"):
+                    status = "intentional"
+                break
+        classified[name] = {
+            "path": str(modules[name].relative_to(repo_root)),
+            "status": status,
+            "reached_by": reached_by,
+            **({"note": note} if note else {}),
+        }
+
+    dead = [n for n, c in classified.items() if c["status"] == "dead"]
+    return {
+        "modules": classified,
+        "dead": dead,
+        "counts": {
+            s: sum(1 for c in classified.values() if c["status"] == s)
+            for s in ("reachable", "test-only", "intentional", "dead")
+        },
+    }
+
+
+def format_report(report: dict) -> str:
+    lines = ["herculint dead-code report", "=" * 26, ""]
+    counts = report["counts"]
+    lines.append("  ".join(f"{k}: {v}" for k, v in counts.items()))
+    lines.append("")
+    by_status: Dict[str, List[str]] = {}
+    for name, c in report["modules"].items():
+        by_status.setdefault(c["status"], []).append(name)
+    for status in ("dead", "test-only", "intentional"):
+        names = by_status.get(status, [])
+        if not names:
+            continue
+        lines.append(f"[{status}]")
+        for name in names:
+            entry = report["modules"][name]
+            via = ",".join(entry["reached_by"]) or "-"
+            lines.append(f"  {name:45s} via={via}")
+            if entry.get("note"):
+                lines.append(f"      kept: {entry['note']}")
+        lines.append("")
+    exemplars = [n for n, c in report["modules"].items()
+                 if c["status"] == "reachable" and c.get("note")]
+    if exemplars:
+        lines.append("[exemplars (reachable, intentionally kept)]")
+        seen_notes = set()
+        for name in exemplars:
+            lines.append(f"  {name}")
+            note = report["modules"][name]["note"]
+            if note not in seen_notes:
+                seen_notes.add(note)
+                lines.append(f"      kept: {note}")
+        lines.append("")
+    if report["dead"]:
+        lines.append("DEAD modules above are unreachable from api/CLI/tests/"
+                     "benchmarks and not marked intentional: delete them.")
+    else:
+        lines.append("No unexplained dead modules.")
+    return "\n".join(lines)

@@ -1,0 +1,230 @@
+"""herculint — the repo-native lint engine.
+
+Runs the rule set in :mod:`repro.analysis.rules` over Python sources,
+applies inline suppressions, fingerprints findings for the ratchet
+baseline, and reports.
+
+Suppressions
+------------
+A finding is suppressed by a comment on its line (or the line above)::
+
+    dev = jax.device_put(fresh)  # herculint: ok[alias-transfer] -- sync get() returns fresh buffers
+
+The ``-- reason`` part is **mandatory**: a bare suppression is itself
+reported (rule ``bare-suppression``). Suppressions are the preferred way
+to record *justified* exceptions; the baseline is only for grandfathering
+findings that predate a new rule.
+
+Ratchet baseline
+----------------
+``baseline.json`` maps finding fingerprints to justifications. A
+fingerprint hashes (rule, path, enclosing qualname, normalized source
+line, occurrence index) — stable across unrelated line drift. Findings
+in the baseline are reported as grandfathered and do not fail the run;
+anything new does. Shrink the baseline whenever you fix a grandfathered
+finding (``--write-baseline`` regenerates it; stale entries are flagged).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.rules import ALL_RULES
+
+SUPPRESS_RE = re.compile(
+    r"#\s*herculint:\s*ok\[(?P<rules>[\w,\- ]+)\]"
+    r"(?:\s*--\s*(?P<reason>\S.*))?")
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str           # repo-relative, posix separators
+    line: int
+    col: int
+    context: str        # dotted qualname of the enclosing scope
+    snippet: str        # stripped source of the offending line
+    message: str
+    occurrence: int = 0  # disambiguates identical lines in one scope
+
+    @property
+    def fingerprint(self) -> str:
+        payload = "|".join((self.rule, self.path, self.context,
+                            self.snippet, str(self.occurrence)))
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"[{self.rule}] {self.context}: {self.message}")
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "context": self.context,
+                "snippet": self.snippet, "message": self.message,
+                "fingerprint": self.fingerprint}
+
+
+def _qualname_index(tree: ast.Module) -> Dict[Tuple[int, int], str]:
+    """Maps (lineno, end_lineno) of each scope to its dotted qualname."""
+    spans: Dict[Tuple[int, int], str] = {}
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                spans[(child.lineno, child.end_lineno or child.lineno)] = qual
+                walk(child, qual)
+            else:
+                walk(child, prefix)
+
+    walk(tree, "")
+    return spans
+
+
+def _context_for(line: int, spans: Dict[Tuple[int, int], str]) -> str:
+    best, best_len = "<module>", None
+    for (lo, hi), qual in spans.items():
+        if lo <= line <= hi and (best_len is None or hi - lo < best_len):
+            best, best_len = qual, hi - lo
+    return best
+
+
+def lint_source(source: str, rel_path: str,
+                rules=ALL_RULES) -> Tuple[List[Finding], List[Finding]]:
+    """Lint one source string.
+
+    Returns ``(findings, suppression_problems)`` — the latter are
+    bare-suppression findings (missing ``-- reason``).
+    """
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        f = Finding("parse-error", rel_path, e.lineno or 1, 0, "<module>",
+                    "", f"could not parse: {e.msg}")
+        return [f], []
+    lines = source.splitlines()
+    spans = _qualname_index(tree)
+
+    suppress: Dict[int, Tuple[set, Optional[str]]] = {}
+    problems: List[Finding] = []
+    for i, text in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        ids = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+        reason = m.group("reason")
+        suppress[i] = (ids, reason)
+        if not reason:
+            problems.append(Finding(
+                "bare-suppression", rel_path, i, 0,
+                _context_for(i, spans), text.strip(),
+                f"suppression of {sorted(ids)} has no '-- reason': every "
+                "suppression must say why the pattern is safe here."))
+
+    seen_occurrences: Dict[Tuple[str, str, str], int] = {}
+    findings: List[Finding] = []
+    for rule in rules:
+        for raw in rule.check(tree, rel_path, lines):
+            sup = suppress.get(raw.line) or suppress.get(raw.line - 1)
+            if sup and (raw.rule in sup[0] or "all" in sup[0]):
+                continue
+            snippet = (lines[raw.line - 1].strip()
+                       if 0 < raw.line <= len(lines) else "")
+            context = _context_for(raw.line, spans)
+            occ_key = (raw.rule, context, snippet)
+            occ = seen_occurrences.get(occ_key, 0)
+            seen_occurrences[occ_key] = occ + 1
+            findings.append(Finding(raw.rule, rel_path, raw.line, raw.col,
+                                    context, snippet, raw.message, occ))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, problems
+
+
+def lint_file(path: Path, repo_root: Path,
+              rules=ALL_RULES) -> Tuple[List[Finding], List[Finding]]:
+    rel = path.resolve().relative_to(repo_root.resolve()).as_posix()
+    return lint_source(path.read_text(), rel, rules)
+
+
+def iter_python_files(roots: Iterable[Path]) -> List[Path]:
+    out: List[Path] = []
+    for root in roots:
+        root = Path(root)
+        if root.is_file() and root.suffix == ".py":
+            out.append(root)
+        elif root.is_dir():
+            out.extend(sorted(p for p in root.rglob("*.py")
+                              if "__pycache__" not in p.parts))
+    return out
+
+
+def run_lint(roots: Iterable[Path], repo_root: Path,
+             rules=ALL_RULES) -> List[Finding]:
+    """All findings (including bare-suppression problems) for *roots*."""
+    findings: List[Finding] = []
+    for path in iter_python_files(roots):
+        got, problems = lint_file(path, repo_root, rules)
+        findings.extend(got)
+        findings.extend(problems)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# ratchet baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Path = DEFAULT_BASELINE) -> Dict[str, dict]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return {e["fingerprint"]: e for e in data.get("findings", [])}
+
+
+def write_baseline(findings: List[Finding], path: Path,
+                   previous: Optional[Dict[str, dict]] = None) -> None:
+    previous = previous or {}
+    entries = []
+    for f in findings:
+        old = previous.get(f.fingerprint, {})
+        entry = f.to_json()
+        entry["justification"] = old.get(
+            "justification", "TODO: justify or fix")
+        entries.append(entry)
+    payload = {
+        "_comment": ("herculint ratchet baseline: grandfathered findings. "
+                     "New findings fail CI; shrink this file whenever one "
+                     "is fixed. Regenerate with "
+                     "`python -m repro.analysis --write-baseline`."),
+        "findings": entries,
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+@dataclasses.dataclass
+class RatchetResult:
+    new: List[Finding]
+    grandfathered: List[Finding]
+    stale: List[str]    # fingerprints in the baseline no longer observed
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+
+def ratchet(findings: List[Finding],
+            baseline: Dict[str, dict]) -> RatchetResult:
+    new, grand = [], []
+    observed = set()
+    for f in findings:
+        observed.add(f.fingerprint)
+        (grand if f.fingerprint in baseline else new).append(f)
+    stale = sorted(set(baseline) - observed)
+    return RatchetResult(new=new, grandfathered=grand, stale=stale)

@@ -1,0 +1,24 @@
+"""herculint rule registry.
+
+Each rule module exposes ``RULE_ID``, ``DESCRIPTION`` and
+``check(tree, rel_path, src_lines) -> Iterable[RawFinding]``. The engine
+(:mod:`repro.analysis.herculint`) attaches file paths, enclosing-scope
+qualnames and ratchet fingerprints.
+"""
+from repro.analysis.rules import (
+    alias_transfer,
+    atomic_commit,
+    config_plumbing,
+    lock_discipline,
+    mmap_lifetime,
+)
+
+ALL_RULES = (
+    alias_transfer,
+    mmap_lifetime,
+    atomic_commit,
+    lock_discipline,
+    config_plumbing,
+)
+
+RULE_IDS = tuple(r.RULE_ID for r in ALL_RULES)

@@ -1,0 +1,123 @@
+"""Rule: alias-unsafe device transfer (the PR 4 / PR 5 bug class).
+
+On CPU jax, ``jax.device_put`` and ``jnp.asarray`` can return a
+**zero-copy alias** of an aligned host buffer. Applied to a reusable
+reader slot, the daemon thread refills the buffer under the "device"
+array mid-computation (PR 5); applied to a memory map, closing the index
+turns the array into a segfault (PR 4). The only safe transfers for such
+values are ``reader.stage(view)`` or ``jnp.array(view, copy=True)``.
+
+Flags ``jax.device_put(x)``, ``jnp.asarray(x)`` and ``jnp.array(x)``
+without ``copy=True`` where *x* is taint-tracked as a mapped segment /
+slot view (see :class:`repro.analysis.rules.common.TaintTracker`).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis.rules.common import (
+    RawFinding, TaintTracker, call_name, is_true_const, iter_scopes, kwarg,
+)
+
+RULE_ID = "alias-transfer"
+DESCRIPTION = ("jax.device_put / jnp.asarray / copy-less jnp.array on an "
+               "mmap segment or reader-slot view can zero-copy alias it; "
+               "use reader.stage(view) or jnp.array(view, copy=True)")
+
+
+def _jnp_aliases(tree: ast.Module):
+    """Names bound to jax.numpy and to bare device_put in this module."""
+    jnp_names = {"jnp"}
+    device_put_names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.numpy" and a.asname:
+                    jnp_names.add(a.asname)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "numpy":
+                        jnp_names.add(a.asname or "numpy")
+                    elif a.name == "device_put":
+                        device_put_names.add(a.asname or "device_put")
+    return jnp_names, device_put_names
+
+
+def _sink_kind(call: ast.Call, jnp_names, device_put_names):
+    name = call_name(call)
+    if name is None:
+        return None
+    if name == "jax.device_put" or name in device_put_names:
+        return "jax.device_put"
+    root, _, tail = name.rpartition(".")
+    if tail == "asarray" and (root in jnp_names or root == "jax.numpy"):
+        return f"{root}.asarray"
+    if tail == "array" and (root in jnp_names or root == "jax.numpy"):
+        if not is_true_const(kwarg(call, "copy")):
+            return f"{root}.array without copy=True"
+    return None
+
+
+def header_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    """Expressions evaluated by *stmt* itself (not by nested statements)."""
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value, *stmt.targets]
+    if isinstance(stmt, ast.AugAssign):
+        return [stmt.value, stmt.target]
+    if isinstance(stmt, ast.AnnAssign):
+        return [stmt.value] if stmt.value is not None else []
+    if isinstance(stmt, (ast.Expr, ast.Return)):
+        return [stmt.value] if stmt.value is not None else []
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.While, ast.If)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [item.context_expr for item in stmt.items]
+    if isinstance(stmt, ast.Raise):
+        return [e for e in (stmt.exc, stmt.cause) if e is not None]
+    if isinstance(stmt, ast.Assert):
+        return [e for e in (stmt.test, stmt.msg) if e is not None]
+    if isinstance(stmt, ast.Delete):
+        return list(stmt.targets)
+    return []
+
+
+def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+    jnp_names, device_put_names = _jnp_aliases(tree)
+    for scope in iter_scopes(tree):
+        taint = TaintTracker(scope)
+        for stmt in _scope_statements(scope):
+            for expr in header_exprs(stmt):
+                for call in (n for n in ast.walk(expr)
+                             if isinstance(n, ast.Call)):
+                    sink = _sink_kind(call, jnp_names, device_put_names)
+                    if sink and call.args and taint.is_tainted(call.args[0]):
+                        yield RawFinding(
+                            RULE_ID, call.lineno, call.col_offset,
+                            f"{sink} applied to a possible mmap/slot view "
+                            f"({ast.unparse(call.args[0])}): zero-copy "
+                            "aliasing lets the reader thread (or close()) "
+                            "mutate it under the device array. Use "
+                            "reader.stage(view) or "
+                            "jnp.array(view, copy=True).")
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                taint.handle_for(stmt)
+            else:
+                taint.handle_assign(stmt)
+
+
+def _scope_statements(scope):
+    from repro.analysis.rules.common import statements_in_order
+    if isinstance(scope, ast.Module):
+        # module scope: only top-level statements outside functions
+        yield from _module_stmts(scope)
+    else:
+        yield from statements_in_order(scope)
+
+
+def _module_stmts(tree: ast.Module):
+    from repro.analysis.rules.common import _walk_stmts
+    yield from _walk_stmts(tree.body)

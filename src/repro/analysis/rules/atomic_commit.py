@@ -1,0 +1,131 @@
+"""Rule: atomic-commit ordering for on-disk index mutations.
+
+The persistence format's crash-safety contract (PR 3/PR 4): every data
+file an index references is written **and flushed** before the manifest
+that names it, and the manifest lands via ``os.replace`` of a fsynced
+temp file — the single atomic commit point. A crash can leave orphan
+data files (the sweeper reclaims them) but never a manifest pointing at
+missing or torn data.
+
+Per function, the rule finds the commit point (a ``write_manifest(...)``
+call, an ``os.replace`` whose arguments mention the manifest, or a
+direct ``open(...manifest..., "w")``) and flags:
+
+* any data mutation (``np.save`` / ``np.savez*`` / ``open_memmap`` /
+  ``.flush()`` / write-mode ``open``) **after** the commit point;
+* a direct write-mode ``open`` of a manifest path in a function with no
+  ``os.replace`` — the non-atomic PR 4 shape.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.rules.common import (
+    RawFinding, call_name, last_attr, statements_in_order, _walk_stmts,
+)
+
+RULE_ID = "atomic-commit"
+DESCRIPTION = ("manifest commit (write_manifest / os.replace) must be the "
+               "last mutation: no data writes after it, and manifest "
+               "writes must go through an os.replace of a temp file")
+
+_MUTATORS = {"save", "savez", "savez_compressed", "open_memmap", "flush",
+             "tofile"}
+_WRITE_MODES = ("w", "wb", "w+", "wb+", "a", "ab", "x", "xb")
+
+
+def _mentions_manifest(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str) \
+                and "manifest" in sub.value.lower():
+            return True
+        if isinstance(sub, ast.Name) and "manifest" in sub.id.lower():
+            return True
+        if isinstance(sub, ast.Attribute) and "manifest" in sub.attr.lower():
+            return True
+    return False
+
+
+def _open_mode(call: ast.Call) -> Optional[str]:
+    # only the builtin: `store.open(...)` / `Hercules.open(...)` are
+    # handle constructors, not file writes
+    if not (isinstance(call.func, ast.Name) and call.func.id == "open"):
+        return None
+    if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+        return str(call.args[1].value)
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            return str(kw.value.value)
+    return "r"
+
+
+def _is_commit_point(call: ast.Call) -> bool:
+    name = call_name(call)
+    tail = last_attr(name)
+    if tail == "write_manifest":
+        return True
+    if name in ("os.replace", "os.rename") and _mentions_manifest(call):
+        return True
+    mode = _open_mode(call)
+    if mode is not None and mode.startswith(_WRITE_MODES) and \
+            _mentions_manifest(call):
+        return True
+    return False
+
+
+def _is_mutation(call: ast.Call) -> bool:
+    tail = last_attr(call_name(call))
+    if tail in _MUTATORS:
+        return True
+    mode = _open_mode(call)
+    if mode is not None and mode.startswith(_WRITE_MODES):
+        return True
+    return False
+
+
+def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+    scopes = [tree]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scopes.append(node)
+    for scope in scopes:
+        if isinstance(scope, ast.Module):
+            stmts = list(_walk_stmts(scope.body))
+        else:
+            stmts = list(statements_in_order(scope))
+
+        calls = []
+        for stmt in stmts:
+            from repro.analysis.rules.alias_transfer import header_exprs
+            for expr in header_exprs(stmt):
+                calls.extend(n for n in ast.walk(expr)
+                             if isinstance(n, ast.Call))
+        if not calls:
+            continue
+
+        commit: Optional[ast.Call] = None
+        has_replace = any(call_name(c) in ("os.replace", "os.rename")
+                          for c in calls)
+        for call in calls:
+            if commit is None and _is_commit_point(call):
+                commit = call
+                # a bare manifest open() with no replace anywhere in the
+                # function is itself the non-atomic PR 4 shape
+                if last_attr(call_name(call)) == "open" and not has_replace:
+                    yield RawFinding(
+                        RULE_ID, call.lineno, call.col_offset,
+                        "manifest written in place without os.replace: a "
+                        "crash mid-write leaves a torn manifest. Write to "
+                        "a temp file, fsync, then os.replace it as the "
+                        "single commit point (see write_manifest).")
+                continue
+            if commit is not None and call.lineno > commit.lineno and \
+                    _is_mutation(call) and not _is_commit_point(call):
+                yield RawFinding(
+                    RULE_ID, call.lineno, call.col_offset,
+                    f"data mutation ({ast.unparse(call.func)}) after the "
+                    f"manifest commit point at line {commit.lineno}: a "
+                    "crash between the two leaves a manifest referencing "
+                    "unwritten data. Write+flush all data files first; "
+                    "the manifest commit must be the last mutation.")

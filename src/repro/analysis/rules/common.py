@@ -1,0 +1,294 @@
+"""Shared AST helpers for herculint rules: dotted names + view-taint tracking.
+
+The taint model is deliberately a *linter's* model, not a dataflow
+engine: one pass per function body in statement order, a single set of
+tainted names, no path sensitivity. That is enough to catch the bug
+classes this repo has actually shipped (PR 4 / PR 5) with near-zero false
+positives on the real tree; see the heuristics documented on
+:class:`TaintTracker`.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RawFinding:
+    """A rule hit before the engine attaches file/context/fingerprint."""
+    rule: str
+    line: int
+    col: int
+    message: str
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.device_put' for Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted(call.func)
+
+
+def last_attr(name: Optional[str]) -> Optional[str]:
+    """Terminal component of a dotted name ('np.asarray' -> 'asarray')."""
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def name_components(name: str) -> set:
+    return {c for c in name.lower().split("_") if c}
+
+
+def kwarg(call: ast.Call, key: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == key:
+            return kw.value
+    return None
+
+
+def is_true_const(node: Optional[ast.expr]) -> bool:
+    return isinstance(node, ast.Constant) and node.value is True
+
+
+def is_none_const(node: Optional[ast.expr]) -> bool:
+    return isinstance(node, ast.Constant) and node.value is None
+
+
+def iter_scopes(tree: ast.Module) -> Iterator[ast.AST]:
+    """Module plus every function/method body, each scanned independently."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+#: Identifier components that mark a value as a mapped segment / reusable
+#: slot buffer by naming convention (`lrd_rows`, `mmap_view`, `slot`, ...).
+VIEW_NAME_COMPONENTS = {
+    "lrd", "lsd", "mmap", "memmap", "slot", "slots", "view", "views",
+}
+
+#: Attribute reads that hand out mapped segments (`saved.lrd`, `idx.lsd`).
+VIEW_ATTRS = {"lrd", "lsd"}
+
+#: Method calls that hand out mapped segments or borrowed buffers.
+#: ``chunk`` is here because the ChunkSource protocol documents that
+#: ``source.chunk(lo, hi)`` may return a view of the underlying (possibly
+#: memory-mapped) buffer; ``_journal_rows`` returns mmap-mode np.load
+#: results per segment.
+VIEW_METHODS = {"_mapped", "_lrd", "_lsd", "chunk", "_journal_rows"}
+
+#: ndarray methods that return *views* of their receiver.
+VIEW_PRESERVING_METHODS = {
+    "reshape", "ravel", "view", "transpose", "squeeze", "swapaxes",
+}
+
+#: Calls that return a fresh buffer regardless of the argument.
+COPYING_CALLS = {"array", "copy", "ascontiguousarray_copy", "astype", "tolist"}
+
+#: Reader factories — names assigned from these are chunk readers whose
+#: ``get()`` returns a reusable slot view.
+READER_FACTORIES = {"make_chunk_reader", "AsyncChunkReader", "SyncChunkReader"}
+
+
+def _names_a_view(name: str) -> bool:
+    return bool(name_components(name) & VIEW_NAME_COMPONENTS)
+
+
+class TaintTracker:
+    """Tracks which local names may refer to an mmap segment or slot buffer.
+
+    Heuristics (tuned against this repo, documented for rule authors):
+
+    * **Sources** — ``np.load(..., mmap_mode=...)``, ``np.memmap`` /
+      ``open_memmap``, ``._mapped()`` / ``._lrd()`` / ``._lsd()`` calls,
+      ``.lrd`` / ``.lsd`` attribute reads, ``reader.get()`` on a known
+      chunk reader, and any identifier whose ``_``-components include
+      lrd/lsd/mmap/slot/view (parameters included).
+    * **View propagation** — plain assignment, ``np.asarray`` /
+      ``np.ascontiguousarray``, ndarray view methods (``reshape`` ...),
+      ``.T``, and subscripts whose index is a slice or a constant
+      (``x[lo:hi]``, ``x[0]`` are views).
+    * **Cleansers** — ``np.array`` (copies by default), ``.copy()``,
+      ``.astype()``, and subscripts whose index is a *computed expression*
+      (``x[perm]`` is fancy indexing, which copies). ``x[i]`` inside a
+      loop is mis-modelled as a copy; acceptable — scalar-row extraction
+      has never been the bug.
+    """
+
+    def __init__(self, scope: ast.AST):
+        self.tainted: set = set()
+        self.cleansed: set = set()  # view-named but explicitly copied
+        self.readers: set = set()
+        if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = scope.args
+            for a in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+                comps = name_components(a.arg)
+                if comps & VIEW_NAME_COMPONENTS:
+                    self.tainted.add(a.arg)
+                if "reader" in comps or "readers" in comps:
+                    self.readers.add(a.arg)
+
+    # ---- sources ------------------------------------------------------
+    def _call_is_source(self, call: ast.Call) -> bool:
+        name = call_name(call)
+        tail = last_attr(name)
+        if tail == "load" and not is_none_const(kwarg(call, "mmap_mode")) \
+                and kwarg(call, "mmap_mode") is not None:
+            return True
+        if tail in ("memmap", "open_memmap"):
+            return True
+        if tail in VIEW_METHODS:
+            return True
+        if tail == "get" and isinstance(call.func, ast.Attribute):
+            recv = call.func.value
+            if isinstance(recv, ast.Name) and (
+                    recv.id in self.readers or "reader" in name_components(recv.id)):
+                return True
+            recv_name = dotted(recv)
+            if recv_name and "reader" in name_components(recv_name.replace(".", "_")):
+                return True
+        return False
+
+    def _is_reader_factory(self, value: ast.expr) -> bool:
+        if isinstance(value, ast.Call):
+            tail = last_attr(call_name(value))
+            return tail in READER_FACTORIES
+        return False
+
+    # ---- expression classification ------------------------------------
+    def is_tainted(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            if node.id in self.cleansed:
+                return False
+            return node.id in self.tainted or _names_a_view(node.id)
+        if isinstance(node, ast.Attribute):
+            if node.attr in VIEW_ATTRS or _names_a_view(node.attr):
+                return True
+            if node.attr == "T":  # transpose view
+                return self.is_tainted(node.value)
+            return False
+        if isinstance(node, ast.Subscript):
+            if not self.is_tainted(node.value):
+                return False
+            return _subscript_is_view(node.slice)
+        if isinstance(node, ast.Call):
+            if self._call_is_source(node):
+                return True
+            tail = last_attr(call_name(node))
+            if tail in ("asarray", "ascontiguousarray") and node.args:
+                # np.asarray of a view is (usually) still the same view;
+                # jnp.asarray is handled as a sink by alias_transfer.
+                mod = call_name(node) or ""
+                if not mod.startswith(("jnp.", "jax.")):
+                    return self.is_tainted(node.args[0])
+                return False
+            if tail in VIEW_PRESERVING_METHODS and \
+                    isinstance(node.func, ast.Attribute):
+                return self.is_tainted(node.func.value)
+            return False
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        return False
+
+    # ---- statement-order updates ---------------------------------------
+    def handle_assign(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign):
+            value, targets = node.value, node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            value, targets = node.value, [node.target]
+        elif isinstance(node, ast.AugAssign):
+            return
+        else:
+            return
+        tainted = self.is_tainted(value)
+        is_reader = self._is_reader_factory(value)
+        for tgt in targets:
+            for name_node in _target_names(tgt):
+                if tainted:
+                    self.tainted.add(name_node)
+                    self.cleansed.discard(name_node)
+                else:
+                    self.tainted.discard(name_node)
+                    self.cleansed.add(name_node)
+                if is_reader:
+                    self.readers.add(name_node)
+                else:
+                    self.readers.discard(name_node)
+
+    def handle_for(self, node) -> None:
+        """``for chunk in reader`` / ``for lo, chunk in iter_host_chunks(...)``."""
+        it = node.iter
+        taint_targets = False
+        if self.is_tainted(it):
+            taint_targets = True
+        elif isinstance(it, ast.Call):
+            tail = last_attr(call_name(it))
+            if tail in ("iter_host_chunks", "iter_chunks"):
+                taint_targets = True
+            elif tail == "enumerate" and it.args and self.is_tainted(it.args[0]):
+                taint_targets = True
+        if taint_targets:
+            for name_node in _target_names(node.target):
+                self.tainted.add(name_node)
+                self.cleansed.discard(name_node)
+
+
+def _target_names(tgt: ast.expr) -> Iterator[str]:
+    if isinstance(tgt, ast.Name):
+        yield tgt.id
+    elif isinstance(tgt, (ast.Tuple, ast.List)):
+        for e in tgt.elts:
+            yield from _target_names(e)
+    elif isinstance(tgt, ast.Starred):
+        yield from _target_names(tgt.value)
+
+
+def _subscript_is_view(idx: ast.expr) -> bool:
+    """True when ``x[idx]`` is a numpy *view* of x (slice / scalar const);
+    computed indices are fancy indexing, which copies."""
+    if isinstance(idx, ast.Slice):
+        return True
+    if isinstance(idx, ast.Constant):
+        return True
+    if isinstance(idx, ast.UnaryOp) and isinstance(idx.operand, ast.Constant):
+        return True
+    if isinstance(idx, ast.Tuple):
+        return all(_subscript_is_view(e) for e in idx.elts)
+    if isinstance(idx, ast.Name):
+        # A bare name index is almost always an integer loop variable
+        # (`x[i]` — a row view) in this repo; treat as view to stay safe.
+        return True
+    return False
+
+
+def statements_in_order(scope: ast.AST) -> Iterator[ast.stmt]:
+    """All statements in a scope body in source order, recursing into
+    control flow but NOT into nested function/class definitions."""
+    body = scope.body if hasattr(scope, "body") else []
+    yield from _walk_stmts(body)
+
+
+def _walk_stmts(body) -> Iterator[ast.stmt]:
+    for stmt in body:
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, field, None)
+            if inner:
+                yield from _walk_stmts(inner)
+        for handler in getattr(stmt, "handlers", []) or []:
+            yield from _walk_stmts(handler.body)

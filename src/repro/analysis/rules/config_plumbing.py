@@ -1,0 +1,104 @@
+"""Rule: config-plumbing — SearchConfig fields must be validated and keyed.
+
+Every ``SearchConfig`` field steers a compiled plan. A field that is not
+validated in ``__post_init__`` ships garbage into kernels at trace time
+(where the error surfaces as an inscrutable XLA shape failure three
+layers down); a field missing from the plan-cache key silently reuses a
+plan compiled for different semantics — the worst kind of wrong answer.
+
+Two checks:
+
+* in the module defining ``class SearchConfig``: every dataclass field
+  (AnnAssign, non-ClassVar) must be read as ``self.<field>`` inside
+  ``__post_init__``;
+* in the module defining ``class QueryEngine``: the plan-cache ``key``
+  tuple built in ``knn`` must contain the whole ``cfg`` object (frozen
+  dataclass equality makes every field participate automatically —
+  never rebuild the key from hand-picked fields).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.rules.common import RawFinding
+
+RULE_ID = "config-plumbing"
+DESCRIPTION = ("every SearchConfig field must be validated in __post_init__ "
+               "and participate in the plan-cache key (pass cfg whole)")
+
+
+def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if node.name == "SearchConfig":
+            yield from _check_config(node)
+        elif node.name == "QueryEngine":
+            yield from _check_plan_key(node)
+
+
+def _check_config(cls: ast.ClassDef) -> Iterator[RawFinding]:
+    fields = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and \
+                isinstance(stmt.target, ast.Name):
+            ann = ast.unparse(stmt.annotation)
+            if "ClassVar" in ann:
+                continue
+            fields.append((stmt.target.id, stmt))
+    if not fields:
+        return
+
+    post = next((s for s in cls.body
+                 if isinstance(s, ast.FunctionDef)
+                 and s.name == "__post_init__"), None)
+    if post is None:
+        yield RawFinding(
+            RULE_ID, cls.lineno, cls.col_offset,
+            "SearchConfig has no __post_init__: fields reach trace time "
+            "unvalidated and fail as XLA shape errors instead of "
+            "ValueError at construction.")
+        return
+
+    # a field counts as validated when __post_init__ reads `self.<field>`
+    # directly or names it as a string constant (the getattr-over-a-
+    # field-tuple loop idiom)
+    validated = {
+        sub.attr for sub in ast.walk(post)
+        if isinstance(sub, ast.Attribute)
+        and isinstance(sub.value, ast.Name) and sub.value.id == "self"
+    }
+    validated |= {
+        sub.value for sub in ast.walk(post)
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str)
+    }
+    for name, stmt in fields:
+        if name not in validated:
+            yield RawFinding(
+                RULE_ID, stmt.lineno, stmt.col_offset,
+                f"SearchConfig.{name} is never touched in __post_init__: "
+                "add a validity check so a bad value raises ValueError at "
+                "construction, not deep inside a traced kernel.")
+
+
+def _check_plan_key(cls: ast.ClassDef) -> Iterator[RawFinding]:
+    knn = next((s for s in cls.body
+                if isinstance(s, ast.FunctionDef) and s.name == "knn"), None)
+    if knn is None:
+        return
+    for sub in ast.walk(knn):
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name) and \
+                sub.targets[0].id == "key":
+            if not isinstance(sub.value, ast.Tuple):
+                continue
+            names = {e.id for e in sub.value.elts
+                     if isinstance(e, ast.Name)}
+            if "cfg" not in names and "config" not in names:
+                yield RawFinding(
+                    RULE_ID, sub.lineno, sub.col_offset,
+                    "plan-cache key does not include the resolved config "
+                    "object: hand-picking fields lets a new SearchConfig "
+                    "field silently alias plans compiled for different "
+                    "semantics. Put `cfg` itself in the key tuple.")

@@ -1,0 +1,168 @@
+"""Rule: lock-discipline for classes that own worker threads.
+
+``AsyncChunkReader`` runs a daemon reader thread; the contract is that
+the thread and the consumer communicate **only** through the slot
+protocol (the ``_free`` / ``_ready`` queues) or under an owning lock.
+Any instance attribute mutated from both the worker context and consumer
+methods without a lock is a data race (dict/​counter updates are not
+atomic across the interpreter's eyes-free boundaries, and torn telemetry
+was an actual PR 5 review catch).
+
+Per class, the rule finds thread entry points
+(``threading.Thread(target=self.X)``), closes them over the
+self-method call graph to get the worker context, and flags attributes
+stored (including item-assignment like ``self.stats[k] = v``) without a
+lock from **both** sides. ``__init__`` stores are construction, not
+racing, and are excluded.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.rules.common import RawFinding, call_name, dotted
+
+RULE_ID = "lock-discipline"
+DESCRIPTION = ("attributes mutated from a worker-thread context must be "
+               "touched only under the owning lock or via the queue/slot "
+               "protocol")
+
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore",
+                   "BoundedSemaphore"}
+
+
+def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            yield from _check_class(node)
+
+
+def _check_class(cls: ast.ClassDef) -> Iterator[RawFinding]:
+    methods: Dict[str, ast.FunctionDef] = {
+        n.name: n for n in cls.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    if not methods:
+        return
+
+    entries: Set[str] = set()
+    lock_attrs: Set[str] = set()
+    for m in methods.values():
+        for sub in ast.walk(m):
+            if isinstance(sub, ast.Call):
+                name = call_name(sub)
+                if name == "threading.Thread" or \
+                        (name and name.rsplit(".", 1)[-1] == "Thread"):
+                    tgt = _thread_target(sub)
+                    if tgt is not None:
+                        entries.add(tgt)
+            elif isinstance(sub, ast.Assign) and isinstance(
+                    sub.value, ast.Call):
+                vname = call_name(sub.value) or ""
+                if vname.rsplit(".", 1)[-1] in _LOCK_FACTORIES:
+                    for t in sub.targets:
+                        attr = _self_attr(t)
+                        if attr is not None:
+                            lock_attrs.add(attr)
+    if not entries:
+        return
+
+    # worker context = thread entries closed over the self-call graph
+    calls: Dict[str, Set[str]] = {
+        name: {
+            sub.func.attr for sub in ast.walk(m)
+            if isinstance(sub, ast.Call)
+            and isinstance(sub.func, ast.Attribute)
+            and isinstance(sub.func.value, ast.Name)
+            and sub.func.value.id == "self"
+            and sub.func.attr in methods
+        }
+        for name, m in methods.items()
+    }
+    worker: Set[str] = set()
+    frontier = list(entries & set(methods))
+    while frontier:
+        name = frontier.pop()
+        if name in worker:
+            continue
+        worker.add(name)
+        frontier.extend(calls.get(name, ()))
+
+    worker_stores: Dict[str, ast.stmt] = {}
+    consumer_stores: Dict[str, ast.stmt] = {}
+    for name, m in methods.items():
+        if name in ("__init__", "__new__"):
+            continue
+        sink = worker_stores if name in worker else consumer_stores
+        for attr, node, locked in _stores(m, lock_attrs):
+            if not locked and attr not in sink:
+                sink[attr] = node
+
+    for attr in sorted(set(worker_stores) & set(consumer_stores)):
+        node = worker_stores[attr]
+        yield RawFinding(
+            RULE_ID, node.lineno, node.col_offset,
+            f"'self.{attr}' is mutated from the worker-thread context "
+            f"({cls.name}) and from consumer methods without a lock: "
+            "route the value through the ready/free queue protocol or "
+            "guard both sides with the owning lock.")
+
+
+def _thread_target(call: ast.Call) -> Optional[str]:
+    for kw in call.keywords:
+        if kw.arg == "target":
+            attr = _self_attr(kw.value)
+            if attr is not None:
+                return attr
+            name = dotted(kw.value)
+            return name.rsplit(".", 1)[-1] if name else None
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """'x' for `self.x` (including through subscripts: `self.x[k]`)."""
+    if isinstance(node, ast.Subscript):
+        return _self_attr(node.value)
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _stores(method: ast.FunctionDef, lock_attrs: Set[str]) \
+        -> List[Tuple[str, ast.stmt, bool]]:
+    out: List[Tuple[str, ast.stmt, bool]] = []
+
+    def visit(stmts, locked: bool):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    attr = _self_attr(t)
+                    if attr is not None:
+                        out.append((attr, stmt, locked))
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                attr = _self_attr(stmt.target)
+                if attr is not None:
+                    out.append((attr, stmt, locked))
+            inner_locked = locked
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    ctx = item.context_expr
+                    held = _self_attr(ctx if not isinstance(ctx, ast.Call)
+                                      else ctx.func)
+                    if held in lock_attrs:
+                        inner_locked = True
+                visit(stmt.body, inner_locked)
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                inner = getattr(stmt, field, None)
+                if inner:
+                    visit(inner, locked)
+            for handler in getattr(stmt, "handlers", []) or []:
+                visit(handler.body, locked)
+
+    visit(method.body, False)
+    return out

@@ -1,0 +1,214 @@
+"""Rule: mmap-lifetime — no view may outlive its index handle.
+
+PR 4's segfault came from exactly this: a zero-copy ``jnp`` array over a
+``SavedIndex`` memory map that had been ``close()``-d. The rule tracks
+handles produced by ``open_index`` / ``open_saved`` / ``Hercules.open`` /
+``Hercules.create`` (and raw ``np.load(mmap_mode=...)`` / ``np.memmap`` /
+``open_memmap`` arrays), the views derived from them (``.lrd`` / ``.lsd``
+/ ``._mapped()`` / slices / ``np.asarray``), and flags:
+
+* any use of a derived view **after** ``handle.close()`` in the same
+  scope (or after the handle's ``with`` block ends);
+* ``return`` of a raw derived view from inside the handle's ``with``
+  block (the view dies with the block — copy it first).
+
+Copies (``np.array``, ``.copy()``, ``.astype()``, fancy indexing) break
+the derivation chain, as does reassigning the handle (reopen).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.rules.common import (
+    RawFinding, call_name, dotted, is_none_const, kwarg, last_attr,
+    statements_in_order, _walk_stmts,
+)
+from repro.analysis.rules.alias_transfer import header_exprs
+
+RULE_ID = "mmap-lifetime"
+DESCRIPTION = ("a view of a memory-mapped index segment must not be used "
+               "after close() or escape its with block; copy it first")
+
+#: Calls whose result owns a memory map.
+_OPEN_FUNCS = {"open_index", "open_saved", "open_memmap"}
+_OPEN_DOTTED = {"Hercules.open", "Hercules.create", "np.memmap",
+                "numpy.memmap"}
+#: Attributes / methods on a handle that hand out mapped views.
+_DERIVING_ATTRS = {"lrd", "lsd", "saved", "small"}
+_DERIVING_METHODS = {"_mapped", "_lrd", "_lsd"}
+#: Receiver attributes that are lifecycle management, not view reads.
+_LIFECYCLE_ATTRS = {"close", "closed", "release", "flush", "path", "sync"}
+_VIEW_PRESERVING = {"reshape", "ravel", "view", "transpose", "squeeze",
+                    "swapaxes", "asarray", "ascontiguousarray"}
+
+
+def _is_opener(call: ast.Call) -> bool:
+    name = call_name(call)
+    if name is None:
+        return False
+    if last_attr(name) in _OPEN_FUNCS or name in _OPEN_DOTTED:
+        return True
+    if last_attr(name) == "load":
+        mm = kwarg(call, "mmap_mode")
+        return mm is not None and not is_none_const(mm)
+    return False
+
+
+class _Derivations:
+    """Maps local names to the handle they borrow their memory from."""
+
+    def __init__(self):
+        self.handles: set = set()          # dotted handle names
+        self.roots: Dict[str, str] = {}    # view name -> handle name
+
+    def root_of(self, node: ast.expr) -> Optional[str]:
+        """Handle that *node* borrows from, or None if it owns its memory."""
+        if isinstance(node, ast.Name):
+            if node.id in self.handles:
+                return node.id
+            return self.roots.get(node.id)
+        if isinstance(node, ast.Attribute):
+            full = dotted(node)
+            if full in self.handles:
+                return full
+            if node.attr in _DERIVING_ATTRS or node.attr == "T":
+                return self.root_of(node.value)
+            return None
+        if isinstance(node, ast.Subscript):
+            root = self.root_of(node.value)
+            if root is None:
+                return None
+            from repro.analysis.rules.common import _subscript_is_view
+            return root if _subscript_is_view(node.slice) else None
+        if isinstance(node, ast.Call):
+            tail = last_attr(call_name(node))
+            if tail in _DERIVING_METHODS and isinstance(node.func,
+                                                        ast.Attribute):
+                return self.root_of(node.func.value)
+            if tail in _VIEW_PRESERVING:
+                mod = call_name(node) or ""
+                if mod.startswith(("jnp.", "jax.")):
+                    return None
+                if node.args:
+                    return self.root_of(node.args[0])
+                if isinstance(node.func, ast.Attribute):
+                    return self.root_of(node.func.value)
+            return None
+        return None
+
+
+def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+    scopes: List[ast.AST] = [tree]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scopes.append(node)
+    for scope in scopes:
+        yield from _check_scope(scope)
+
+
+def _check_scope(scope: ast.AST) -> Iterator[RawFinding]:
+    deriv = _Derivations()
+    closed: Dict[str, int] = {}            # handle -> close() lineno
+    regions: List[Tuple[str, int]] = []    # (handle, with-block end lineno)
+
+    if isinstance(scope, ast.Module):
+        stmts = list(_walk_stmts(scope.body))
+    else:
+        stmts = list(statements_in_order(scope))
+
+    for stmt in stmts:
+        # handles whose `with` block ended before this statement are closed
+        for handle, end in regions:
+            if stmt.lineno > end and handle not in closed:
+                closed[handle] = end
+
+        # --- flag uses of views rooted at a closed handle ---------------
+        for expr in header_exprs(stmt):
+            for finding in _scan_uses(expr, deriv, closed, stmt):
+                yield finding
+
+        # --- flag raw-view returns inside the owning with block ---------
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            root = deriv.root_of(stmt.value)
+            if root is not None and any(
+                    h == root and stmt.lineno <= end for h, end in regions):
+                yield RawFinding(
+                    RULE_ID, stmt.lineno, stmt.col_offset,
+                    f"returning a raw view of '{root}' from inside its "
+                    "with block: the memory map closes when the block "
+                    "exits. Copy it (np.array / to_layout()) before "
+                    "returning.")
+
+        # --- track handle creation / closing / derivation ---------------
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                if isinstance(item.context_expr, ast.Call) and \
+                        _is_opener(item.context_expr) and \
+                        isinstance(item.optional_vars, ast.Name):
+                    handle = item.optional_vars.id
+                    deriv.handles.add(handle)
+                    regions.append((handle, stmt.end_lineno or stmt.lineno))
+        elif isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            call = stmt.value
+            if isinstance(call.func, ast.Attribute) and \
+                    call.func.attr == "close":
+                recv = dotted(call.func.value)
+                if recv is not None and recv in deriv.handles:
+                    closed[recv] = stmt.lineno
+        elif isinstance(stmt, ast.Assign):
+            tainted_root = deriv.root_of(stmt.value)
+            opener = isinstance(stmt.value, ast.Call) and \
+                _is_opener(stmt.value)
+            for tgt in stmt.targets:
+                name = tgt.id if isinstance(tgt, ast.Name) else dotted(tgt)
+                if name is None:
+                    continue
+                if opener:
+                    deriv.handles.add(name)
+                    closed.pop(name, None)   # reopen
+                    deriv.roots.pop(name, None)
+                elif tainted_root is not None:
+                    deriv.roots[name] = tainted_root
+                else:
+                    deriv.roots.pop(name, None)
+                    if name in deriv.handles and not opener:
+                        # handle rebound to something else
+                        deriv.handles.discard(name)
+                        closed.pop(name, None)
+
+
+def _scan_uses(expr: ast.expr, deriv: _Derivations, closed: Dict[str, int],
+               stmt: ast.stmt) -> Iterator[RawFinding]:
+    if not closed:
+        return
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and \
+                node.attr in _LIFECYCLE_ATTRS:
+            continue
+        if isinstance(node, ast.Name) and \
+                isinstance(node.ctx, ast.Store):
+            continue    # assignment target (e.g. a reopen), not a read
+        if isinstance(node, (ast.Name, ast.Attribute, ast.Call,
+                             ast.Subscript)):
+            root = deriv.root_of(node)
+            if root is not None and root in closed:
+                # lifecycle calls on the closed handle are fine
+                if isinstance(node, ast.Name) and _only_lifecycle_use(
+                        expr, node):
+                    continue
+                yield RawFinding(
+                    RULE_ID, node.lineno, node.col_offset,
+                    f"'{ast.unparse(node)}' borrows from '{root}', which "
+                    f"was closed at line {closed[root]}: a view of a "
+                    "closed memory map is undefined behaviour (the PR 4 "
+                    "segfault). Copy before close, or reorder.")
+                return  # one finding per statement is enough
+
+
+def _only_lifecycle_use(expr: ast.expr, name_node: ast.Name) -> bool:
+    """True when the name only appears as `name.close()` / `name.closed`."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.value is name_node:
+            return node.attr in _LIFECYCLE_ATTRS
+    return False

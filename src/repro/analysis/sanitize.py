@@ -1,0 +1,168 @@
+"""Runtime sanitizers for the zero-copy hot paths (``REPRO_SANITIZE=1``).
+
+Two latent bug classes survived into merged PRs before this existed:
+
+* **PR 5**: a bare ``jax.device_put`` on an aligned reader-slot buffer
+  zero-copy aliased it on CPU jax; the reader thread then refilled the slot
+  mid-computation and queries went quietly wrong.
+* **PR 4**: a ``jnp`` array zero-copy aliased a closed memory map and the
+  process segfaulted.
+
+Both failure modes are *silent until they aren't*. With ``REPRO_SANITIZE=1``:
+
+* ``AsyncChunkReader`` poisons every slot with a canary the moment the
+  consumer hands it back (before the slot is recycled to the reader thread)
+  and re-checks all device copies produced by ``stage()`` against host
+  snapshots. An aliased "copy" sees the canary, mismatches its snapshot,
+  and raises :class:`SanitizerError` at the recycle point — the earliest
+  instant the alias becomes dangerous. Untracked aliases are poisoned too,
+  so float pipelines turn into loud NaN storms instead of wrong answers.
+* ``open_saved`` wraps the LRD/LSD memory maps in :class:`MmapGuard`
+  proxies; any dereference after ``SavedIndex.close()`` raises
+  :class:`UseAfterCloseError` instead of segfaulting.
+
+The module is intentionally a leaf (stdlib + numpy) so the hot paths can
+import it unconditionally; all checks collapse to no-ops when the
+environment variable is unset.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+ENV_VAR = "REPRO_SANITIZE"
+
+#: Canary for non-float slots. Detection never relies on the value being
+#: impossible in real data (staged copies are compared against snapshots);
+#: it only has to differ from whatever the slot held when it was staged.
+CANARY_INT = 0xAB
+
+
+class SanitizerError(RuntimeError):
+    """A runtime sanitizer check failed (aliasing / lifetime violation)."""
+
+
+class UseAfterCloseError(SanitizerError):
+    """A memory-mapped view was dereferenced after its index was closed."""
+
+
+def sanitize_enabled() -> bool:
+    """True when ``REPRO_SANITIZE`` is set to anything but '' / '0'."""
+    return os.environ.get(ENV_VAR, "") not in ("", "0")
+
+
+def poison(buf: np.ndarray) -> None:
+    """Overwrite *buf* in place with a canary (NaN for floats).
+
+    Called on a slot the instant the consumer releases it: any device
+    array still aliasing the slot now reads the canary, and any float
+    compute that consumes the alias propagates NaNs loudly.
+    """
+    if buf.dtype.kind == "f":
+        buf[...] = np.nan
+    elif buf.dtype.kind in ("i", "u"):
+        buf[...] = np.asarray(CANARY_INT, dtype=buf.dtype)
+    else:  # bool / bytes / anything exotic: a deterministic flip suffices
+        buf[...] = buf.dtype.type(0)
+
+
+def snapshot(view: np.ndarray) -> np.ndarray:
+    """Host copy of *view* taken at stage() time, for later verification."""
+    return np.array(view, copy=True)
+
+
+def verify_staged(dev, snap: np.ndarray, *, slot_id: int) -> None:
+    """Raise if a staged device array no longer matches its host snapshot.
+
+    Run *after* :func:`poison` on the slot the copy came from: a genuine
+    copy is unaffected by the poison; a zero-copy alias now shows the
+    canary and mismatches.
+    """
+    host = np.asarray(dev)
+    if not np.array_equal(host, snap, equal_nan=True):
+        raise SanitizerError(
+            f"staged device copy aliases reader slot {slot_id}: after the "
+            "slot was poisoned the 'copy' changed under us. A bare "
+            "jax.device_put/jnp.asarray escaped stage()'s explicit copy "
+            "(the PR 5 bug class); use jnp.array(view, copy=True) or "
+            "reader.stage()."
+        )
+
+
+class MmapGuard:
+    """Array-like proxy over a memory map that fails loudly after release.
+
+    Wraps the ``SavedIndex.lrd`` / ``.lsd`` memmaps under
+    ``REPRO_SANITIZE=1``. Reads delegate to the underlying array until
+    :meth:`release` (called from ``SavedIndex.close()``); afterwards every
+    dereference raises :class:`UseAfterCloseError` — the sanitized stand-in
+    for the PR 4 segfault.
+    """
+
+    def __init__(self, arr: np.ndarray, label: str):
+        self._arr = arr
+        self._label = label
+        self._released = False
+
+    def _live(self) -> np.ndarray:
+        if self._released:
+            raise UseAfterCloseError(
+                f"{self._label}: memory-mapped view dereferenced after "
+                "close(). Copy what you need (np.array / to_layout()) "
+                "before closing the index — a zero-copy view of a closed "
+                "mmap is the PR 4 segfault class."
+            )
+        return self._arr
+
+    def release(self) -> None:
+        """Invalidate the guard and close the underlying memory map."""
+        arr, self._arr, self._released = self._arr, None, True
+        mm = getattr(arr, "_mmap", None)
+        if mm is not None:
+            try:
+                mm.close()
+            except BufferError:
+                # Exported buffers keep the map alive; the OS reclaims it
+                # at process exit. Matches SavedIndex.close()'s tolerance.
+                pass
+
+    # ---- array-like surface -------------------------------------------
+    @property
+    def shape(self):
+        return self._live().shape
+
+    @property
+    def dtype(self):
+        return self._live().dtype
+
+    @property
+    def ndim(self):
+        return self._live().ndim
+
+    @property
+    def size(self):
+        return self._live().size
+
+    def __len__(self):
+        return len(self._live())
+
+    def __getitem__(self, idx):
+        return self._live()[idx]
+
+    def __array__(self, dtype=None, copy=None):
+        arr = self._live()
+        if dtype is not None:
+            return np.asarray(arr, dtype=dtype)
+        return np.asarray(arr)
+
+    def __repr__(self):
+        state = "released" if self._released else "live"
+        return f"MmapGuard({self._label}, {state})"
+
+
+def guard_mmap(arr, label: str):
+    """Wrap *arr* in a :class:`MmapGuard` when sanitizing, else pass through."""
+    if arr is not None and sanitize_enabled():
+        return MmapGuard(arr, label)
+    return arr

@@ -153,13 +153,21 @@ def leaf_tables(tree: HerculesTree, geo: LayoutGeometry):
     return syn, ep, seg_lens
 
 
+def _owned(arr):
+    """Memmaps are copied before device promotion: ``jnp.asarray`` may
+    zero-copy alias the map, and the alias dies (PR 4: segfaults) with it.
+    In-memory arrays pass through so the common build stays zero-copy."""
+    return np.array(arr, copy=True) if isinstance(arr, np.memmap) else arr
+
+
 def assemble_layout(tree: HerculesTree, geo: LayoutGeometry,
                     lrd, lsd) -> HerculesLayout:
     """HerculesLayout from a placement plan plus already-materialized
-    LRD/LSD arrays (device, host, or memmap — promoted with jnp.asarray)."""
+    LRD/LSD arrays (device, host, or memmap — memmaps are copied, the
+    rest promoted with jnp.asarray)."""
     syn, ep, seg_lens = leaf_tables(tree, geo)
     return HerculesLayout(
-        lrd=jnp.asarray(lrd), lsd=jnp.asarray(lsd),
+        lrd=jnp.asarray(_owned(lrd)), lsd=jnp.asarray(_owned(lsd)),
         perm=jnp.asarray(geo.perm), inv_perm=jnp.asarray(geo.inv_perm),
         leaf_rank=jnp.asarray(geo.leaf_rank),
         leaf_node=jnp.asarray(geo.leaf_node),

@@ -66,6 +66,32 @@ class SearchConfig:
                                  # Answers are bit-identical across modes.
 
     def __post_init__(self):
+        # every field is validated here (herculint config-plumbing): a bad
+        # value must raise at construction, not as an XLA shape error three
+        # layers into a traced kernel
+        for field, lo in (("k", 1), ("l_max", 1), ("chunk", 1),
+                          ("scan_block", 1), ("topk_budget_chunks", 1)):
+            val = getattr(self, field)
+            if not isinstance(val, int) or isinstance(val, bool) or val < lo:
+                raise ValueError(f"{field}={val!r}; expected an int >= {lo}")
+        import math
+        for field in ("eapca_th", "sax_th"):
+            # pruning ratios live in [0, 1], but >1 is a legitimate knob
+            # (always below threshold -> always scan, the PSCAN-ish probe)
+            val = getattr(self, field)
+            if not (math.isfinite(float(val)) and float(val) >= 0.0):
+                raise ValueError(f"{field}={val!r}; expected a finite "
+                                 "pruning threshold >= 0")
+        if not 0.0 <= float(self.lb_slack) < 1.0:
+            raise ValueError(f"lb_slack={self.lb_slack!r}; expected a "
+                             "relative guard in [0, 1)")
+        for field in ("use_sax", "adaptive", "force_scan", "unroll_visits"):
+            if not isinstance(getattr(self, field), bool):
+                raise ValueError(f"{field}={getattr(self, field)!r}; "
+                                 "expected a bool")
+        if self.refine_select not in ("argsort", "topk"):
+            raise ValueError(f"refine_select={self.refine_select!r}; "
+                             "expected 'argsort' or 'topk'")
         if self.kernel_mode not in KERNEL_MODES:
             raise ValueError(f"kernel_mode={self.kernel_mode!r}; expected "
                              f"one of {KERNEL_MODES}")

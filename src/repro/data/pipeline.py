@@ -43,6 +43,8 @@ from typing import Callable, Iterator, Protocol, runtime_checkable
 import jax
 import numpy as np
 
+from repro.analysis import sanitize
+
 PREFETCH_MODES = ("sync", "thread")
 
 
@@ -225,10 +227,14 @@ class SyncChunkReader:
         self.stats["blocks"] += 1
         return out
 
-    def stage(self, view: np.ndarray, device=None) -> jax.Array:
+    def stage(self, view: np.ndarray, device=None, *,
+              block: bool = True) -> jax.Array:
         """Host→device transfer of a fetched block. Sync blocks are fresh
         arrays the transfer machinery keeps alive, so the async
-        ``device_put`` needs no completion barrier."""
+        ``device_put`` needs no completion barrier (``block`` is accepted
+        for surface parity with the threaded reader and ignored)."""
+        del block
+        # herculint: ok[alias-transfer] -- sync get() returns a fresh buffer per call; nothing refills it, so a zero-copy alias is harmless
         return jax.device_put(view, device or jax.devices()[0])
 
     def close(self) -> None:
@@ -291,6 +297,10 @@ class AsyncChunkReader:
         self._exc: BaseException | None = None
         self.stats = {"blocks": 0, "read_seconds": 0.0,
                       "read_wait_seconds": 0.0, "overlap_blocks": 0}
+        # REPRO_SANITIZE=1: (slot_id, host snapshot, device array) per
+        # stage(); verified against the poisoned slot at recycle time
+        self._sanitize = sanitize.sanitize_enabled()
+        self._staged_tracks: list[tuple[int, np.ndarray, jax.Array]] = []
         self._thread = threading.Thread(target=self._run,
                                         name=self.THREAD_NAME, daemon=True)
         self._thread.start()
@@ -316,10 +326,11 @@ class AsyncChunkReader:
             try:
                 self._fill(self._slots[sid], start, count, pad_to)
             except BaseException as e:          # propagate to the consumer
-                self._ready.put((None, 0, e))
+                self._ready.put((None, 0, 0.0, e))
                 break
-            self.stats["read_seconds"] += time.perf_counter() - t0
-            self._ready.put((sid, pad_to, None))
+            # the read duration rides the ready tuple: the worker must not
+            # touch self.stats (consumer-owned; herculint lock-discipline)
+            self._ready.put((sid, pad_to, time.perf_counter() - t0, None))
 
     # -- consumer side -------------------------------------------------------
 
@@ -346,31 +357,63 @@ class AsyncChunkReader:
             raise RuntimeError("get() without a pending submit()")
         self._pending -= 1
         if self._held is not None:              # recycle the previous view
-            self._free.put(self._held)
+            self._recycle(self._held)
             self._held = None
         overlapped = not self._ready.empty()    # read finished before asked
         t0 = time.perf_counter()
-        sid, n_rows, exc = self._ready.get()
+        sid, n_rows, read_s, exc = self._ready.get()
         self.stats["read_wait_seconds"] += time.perf_counter() - t0
         if exc is not None:
             # the reader thread has exited: latch the failure so later
             # get()/submit() fail loudly instead of blocking forever
             self._exc = exc
             raise exc
+        self.stats["read_seconds"] += read_s
         self.stats["overlap_blocks"] += int(overlapped)
         self.stats["blocks"] += 1
         self._held = sid
         return self._slots[sid][:n_rows]
 
-    def stage(self, view: np.ndarray, device=None) -> jax.Array:
+    def _recycle(self, sid: int) -> None:
+        """Hand a slot back to the reader thread. Under REPRO_SANITIZE=1
+        the slot is poisoned *first*, then every staged copy taken from it
+        is re-checked against its snapshot — a zero-copy alias shows the
+        canary and raises before the reader can overwrite live data."""
+        if self._sanitize:
+            sanitize.poison(self._slots[sid])
+            self._verify_staged(sid)
+        self._free.put(sid)
+
+    def _verify_staged(self, sid: int) -> None:
+        keep = []
+        for slot_id, snap, dev in self._staged_tracks:
+            if slot_id != sid:
+                keep.append((slot_id, snap, dev))
+        tracked = [t for t in self._staged_tracks if t[0] == sid]
+        self._staged_tracks = keep              # drop before any raise
+        for slot_id, snap, dev in tracked:
+            sanitize.verify_staged(dev, snap, slot_id=slot_id)
+
+    def stage(self, view: np.ndarray, device=None, *,
+              block: bool = True) -> jax.Array:
         """Host→device transfer of a slot view, blocked to completion so the
         slot can be recycled at the next ``get()`` while async device
         compute on the staged copy proceeds. ``copy=True`` is load-bearing:
         a plain ``device_put`` may zero-copy *alias* an aligned numpy
         buffer on CPU jax, and an aliased slot would be overwritten by the
-        reader thread mid-computation."""
+        reader thread mid-computation.
+
+        ``block=False`` defers the completion barrier to the caller, who
+        **must** ``jax.block_until_ready`` the result before the next
+        ``get()`` (which recycles the slot the copy reads from) — the
+        double-buffer loop uses this to overlap the copy with consumer
+        compute."""
         dev = _staged_copy(view, device)
-        jax.block_until_ready(dev)
+        if block:
+            jax.block_until_ready(dev)
+        if self._sanitize and self._held is not None:
+            self._staged_tracks.append(
+                (self._held, sanitize.snapshot(view), dev))
         return dev
 
     def close(self) -> None:
@@ -386,6 +429,14 @@ class AsyncChunkReader:
         if self._thread.is_alive():             # pragma: no cover
             raise RuntimeError("chunk reader thread failed to join")
         self._held = None
+        if self._sanitize:
+            # final sweep: poison every slot (the thread is joined, nothing
+            # refills them) and verify any still-tracked staged copies
+            for slot in self._slots:
+                sanitize.poison(slot)
+            tracked, self._staged_tracks = self._staged_tracks, []
+            for slot_id, snap, dev in tracked:
+                sanitize.verify_staged(dev, snap, slot_id=slot_id)
 
     def __enter__(self):
         return self
@@ -498,24 +549,27 @@ def iter_device_chunks(source: ChunkSource, device=None,
     # defer the page faults into device_put and under-report it as ~0
     try:
         if prefetch == "sync":
-            # fresh per-chunk buffers: the async device_put for chunk i+1
-            # stays in flight while the consumer computes on chunk i (the
-            # legacy copy/compute overlap; nothing mutates the buffer)
-            staged = jax.device_put(reader.get(), device)
+            # fresh per-chunk buffers: SyncChunkReader.stage is an async
+            # device_put, so the transfer for chunk i+1 stays in flight
+            # while the consumer computes on chunk i (the legacy
+            # copy/compute overlap; nothing mutates the buffer)
+            staged = reader.stage(reader.get(), device)
             for i in range(n):
                 cur = staged
                 if i + 1 < n:
-                    staged = jax.device_put(reader.get(), device)
+                    staged = reader.stage(reader.get(), device)
                 yield i * source.chunk_size, cur
         else:
-            staged = _staged_copy(reader.get(), device)
+            # block=False: the barrier is the block_until_ready(cur) below,
+            # which always runs before the get() that recycles cur's slot
+            staged = reader.stage(reader.get(), device, block=False)
             for i in range(n):
                 cur = staged
                 # copy committed -> the slot backing `cur` may be recycled
                 # by the get() below while async compute on `cur` proceeds
                 jax.block_until_ready(cur)
                 if i + 1 < n:
-                    staged = _staged_copy(reader.get(), device)
+                    staged = reader.stage(reader.get(), device, block=False)
                 yield i * source.chunk_size, cur
     finally:
         reader.close()

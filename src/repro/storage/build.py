@@ -159,10 +159,11 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
         shape=(geo.n_pad, config.sax_segments))
     for start, chunk in iter_host_chunks(source, prefetch=prefetch,
                                          telemetry=read_stats):
-        # the chunk may be a reusable reader-slot view: both consumers below
-        # copy out of it (numpy scatter; isax blocks on np.asarray) before
-        # the next iteration recycles the slot
-        dev = jnp.asarray(chunk)
+        # the chunk may be a reusable reader-slot view: the device copy is
+        # explicit (a jnp.asarray could zero-copy alias the slot, and the
+        # next iteration's get() recycles it) and the numpy scatter below
+        # copies the host bytes out within this iteration
+        dev = jnp.array(chunk, copy=True)
         pos = geo.inv_perm[start:start + chunk.shape[0]]
         lrd[pos] = chunk
         lsd[pos] = np.asarray(S.isax(dev, config.sax_segments))

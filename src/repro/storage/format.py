@@ -55,6 +55,7 @@ import zlib
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.core.index import HerculesIndex, IndexConfig
 from repro.core.layout import HerculesLayout
 from repro.core.search import SearchConfig
@@ -363,6 +364,10 @@ class SavedIndex:
         for name in ("lrd", "lsd"):
             arr = getattr(self, name)
             setattr(self, name, None)
+            release = getattr(arr, "release", None)
+            if release is not None:     # REPRO_SANITIZE=1 MmapGuard:
+                release()               # trips use-after-close loudly
+                continue
             mm = getattr(arr, "_mmap", None)
             if mm is not None:
                 try:
@@ -433,6 +438,11 @@ def open_saved(path: str, manifest: dict) -> SavedIndex:
         raise IndexFormatError(
             f"{path!r}: {LRD_FILE} shape {tuple(lrd.shape)} does not match "
             f"manifest statics {statics}")
+    # REPRO_SANITIZE=1 wraps the maps in use-after-close guards (no-op
+    # pass-through otherwise): an escaped view raises UseAfterCloseError
+    # instead of segfaulting (PR 4)
+    lrd = sanitize.guard_mmap(lrd, f"{path}:lrd")
+    lsd = sanitize.guard_mmap(lsd, f"{path}:lsd")
     return SavedIndex(
         path=path, manifest=manifest, config=config,
         max_depth=int(manifest["max_depth"]), tree=tree, small=small,

@@ -375,7 +375,7 @@ class Hercules:
         for start, chunk in iter_chunks(source):
             lrd[start:start + chunk.shape[0]] = chunk
             lsd[start:start + chunk.shape[0]] = np.asarray(
-                S.isax(jnp.asarray(chunk), config.sax_segments))
+                S.isax(jnp.array(chunk, copy=True), config.sax_segments))
         lrd.flush()
         lsd.flush()
         del lrd, lsd
@@ -578,7 +578,10 @@ class Hercules:
         for seg_rows in self._journal_rows():
             rows = np.asarray(seg_rows)
             for lo in range(0, rows.shape[0], block):
-                blk = jnp.asarray(rows[lo:lo + block])
+                # rows is an mmap view (journal segments stay on disk); the
+                # device block must own its bytes or closing the store
+                # invalidates in-flight distance computations
+                blk = jnp.array(rows[lo:lo + block], copy=True)
                 db = _journal_block_dists(blk, q)              # (Q, B)
                 ids = offset + lo + jnp.arange(blk.shape[0], dtype=jnp.int32)
                 ib = jnp.broadcast_to(ids, db.shape)

@@ -1,0 +1,650 @@
+"""herculint rules + runtime sanitizers (repro.analysis).
+
+Each lint rule gets at least one true-positive and one clean fixture;
+the seeded-bug checks re-introduce the PR 5 (device_put aliases a reader
+slot) and PR 4 (manifest committed before data) patterns in scratch
+sources and assert the lint catches them. The sanitizer tests alias a
+slot for real and assert the REPRO_SANITIZE=1 canary trips at runtime.
+"""
+import json
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import deadcode, herculint, sanitize
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.herculint import lint_source
+
+
+def findings_for(src, rule=None, path="scratch.py"):
+    got, problems = lint_source(textwrap.dedent(src), path)
+    got = got + problems
+    if rule is not None:
+        got = [f for f in got if f.rule == rule]
+    return got
+
+
+@pytest.fixture(scope="module")
+def repo_root():
+    import pathlib
+    return pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# alias-transfer
+# ---------------------------------------------------------------------------
+
+class TestAliasTransfer:
+    def test_flags_device_put_on_mmap(self):
+        src = """
+            import jax, numpy as np
+            def load(path):
+                arr = np.load(path, mmap_mode="r")
+                return jax.device_put(arr)
+        """
+        assert findings_for(src, "alias-transfer")
+
+    def test_flags_jnp_asarray_on_slot_view(self):
+        # the PR 5 seeded-bug pattern: a reader slot view sent to device
+        # without an owning copy
+        src = """
+            import jax.numpy as jnp
+            def consume(reader):
+                view = reader.get()
+                return jnp.asarray(view)
+        """
+        assert findings_for(src, "alias-transfer")
+
+    def test_flags_copyless_jnp_array(self):
+        src = """
+            import jax.numpy as jnp
+            def promote(saved):
+                return jnp.array(saved.lrd)
+        """
+        assert findings_for(src, "alias-transfer")
+
+    def test_clean_explicit_copy(self):
+        src = """
+            import jax.numpy as jnp
+            import numpy as np
+            def consume(reader):
+                view = reader.get()
+                a = jnp.array(view, copy=True)
+                b = jnp.asarray(np.array(view))
+                return a, b
+        """
+        assert not findings_for(src, "alias-transfer")
+
+    def test_clean_fancy_indexing(self):
+        # fancy indexing copies: original_data()-style access is fine
+        src = """
+            import jax.numpy as jnp
+            import numpy as np
+            def data(self):
+                return jnp.asarray(np.asarray(self._mapped("lrd"))[self.perm])
+        """
+        assert not findings_for(src, "alias-transfer")
+
+    def test_slice_of_mmap_stays_tainted(self):
+        src = """
+            import jax.numpy as jnp
+            def blocks(self):
+                rows = self._journal_rows()[0]
+                return jnp.asarray(rows[0:4096])
+        """
+        assert findings_for(src, "alias-transfer")
+
+    def test_suppression_with_reason_is_honoured(self):
+        src = """
+            import jax
+            def stage(view):
+                # herculint: ok[alias-transfer] -- fresh buffer, test fixture
+                return jax.device_put(view)
+        """
+        assert not findings_for(src, "alias-transfer")
+        assert not findings_for(src, "bare-suppression")
+
+    def test_bare_suppression_is_flagged(self):
+        src = """
+            import jax
+            def stage(view):
+                return jax.device_put(view)  # herculint: ok[alias-transfer]
+        """
+        assert not findings_for(src, "alias-transfer")
+        assert findings_for(src, "bare-suppression")
+
+
+# ---------------------------------------------------------------------------
+# mmap-lifetime
+# ---------------------------------------------------------------------------
+
+class TestMmapLifetime:
+    def test_flags_use_after_close(self):
+        src = """
+            import numpy as np
+            def peek(path):
+                saved = open_index(path)
+                view = saved._mapped("lrd")
+                saved.close()
+                return np.sum(view)
+        """
+        assert findings_for(src, "mmap-lifetime")
+
+    def test_flags_view_escaping_with_block(self):
+        src = """
+            def peek(path):
+                with open_index(path) as saved:
+                    return saved.lrd
+        """
+        assert findings_for(src, "mmap-lifetime")
+
+    def test_clean_copy_before_close(self):
+        src = """
+            import numpy as np
+            def peek(path):
+                saved = open_index(path)
+                data = np.array(saved._mapped("lrd"))
+                saved.close()
+                return np.sum(data)
+        """
+        assert not findings_for(src, "mmap-lifetime")
+
+    def test_clean_use_inside_with(self):
+        src = """
+            import numpy as np
+            def peek(path):
+                with open_index(path) as saved:
+                    return float(np.sum(saved._mapped("lrd")))
+        """
+        assert not findings_for(src, "mmap-lifetime")
+
+    def test_reopen_clears_closed_state(self):
+        src = """
+            def cycle(path):
+                saved = open_index(path)
+                saved.close()
+                saved = open_index(path)
+                return saved._mapped("lrd").shape
+        """
+        assert not findings_for(src, "mmap-lifetime")
+
+
+# ---------------------------------------------------------------------------
+# atomic-commit
+# ---------------------------------------------------------------------------
+
+class TestAtomicCommit:
+    def test_flags_manifest_before_data(self):
+        # the PR 4 seeded-bug pattern: manifest committed, then data written
+        src = """
+            import json, os
+            import numpy as np
+            def save(path, manifest, rows):
+                with open(path + "/manifest.json", "w") as f:
+                    json.dump(manifest, f)
+                np.save(path + "/rows.npy", rows)
+        """
+        got = findings_for(src, "atomic-commit")
+        assert got, "manifest-before-data must be flagged"
+
+    def test_flags_non_atomic_manifest_write(self):
+        src = """
+            import json
+            def save(path, manifest):
+                with open(path + "/manifest.json", "w") as f:
+                    json.dump(manifest, f)
+        """
+        assert any("os.replace" in f.message
+                   for f in findings_for(src, "atomic-commit"))
+
+    def test_clean_data_then_replace(self):
+        src = """
+            import json, os
+            import numpy as np
+            def save(path, manifest, rows):
+                np.save(path + "/rows.npy", rows)
+                tmp = path + "/manifest.json.tmp"
+                with open(tmp, "w") as f:
+                    json.dump(manifest, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path + "/manifest.json")
+        """
+        # the temp-file open/flush *are* the commit sequence, not data
+        # writes after a commit; write_manifest in the real tree is the
+        # canonical instance and must stay clean
+        got = [f for f in findings_for(src, "atomic-commit")
+               if "os.replace" in f.message]
+        assert not got
+
+    def test_real_write_manifest_is_clean(self, repo_root):
+        got, _ = herculint.lint_file(
+            repo_root / "src/repro/storage/format.py", repo_root)
+        assert not [f for f in got if f.rule == "atomic-commit"]
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+class TestLockDiscipline:
+    def test_flags_cross_thread_attr_store(self):
+        src = """
+            import threading
+            class Reader:
+                def __init__(self):
+                    self.stats = {}
+                    self._t = threading.Thread(target=self._run)
+                def _run(self):
+                    self.stats["read_seconds"] = 1.0
+                def get(self):
+                    self.stats["blocks"] = 2
+        """
+        assert findings_for(src, "lock-discipline")
+
+    def test_clean_when_both_sides_hold_lock(self):
+        src = """
+            import threading
+            class Reader:
+                def __init__(self):
+                    self.stats = {}
+                    self._lock = threading.Lock()
+                    self._t = threading.Thread(target=self._run)
+                def _run(self):
+                    with self._lock:
+                        self.stats["read_seconds"] = 1.0
+                def get(self):
+                    with self._lock:
+                        self.stats["blocks"] = 2
+        """
+        assert not findings_for(src, "lock-discipline")
+
+    def test_clean_queue_protocol(self):
+        src = """
+            import queue, threading
+            class Reader:
+                def __init__(self):
+                    self._ready = queue.SimpleQueue()
+                    self.stats = {}
+                    self._t = threading.Thread(target=self._run)
+                def _run(self):
+                    self._ready.put((0, 1.0))
+                def get(self):
+                    sid, dt = self._ready.get()
+                    self.stats["read_seconds"] = dt
+        """
+        assert not findings_for(src, "lock-discipline")
+
+    def test_threadless_class_is_ignored(self):
+        src = """
+            class SlotQueue:
+                def push(self):
+                    self.depth = 1
+                def pop(self):
+                    self.depth = 0
+        """
+        assert not findings_for(src, "lock-discipline")
+
+
+# ---------------------------------------------------------------------------
+# config-plumbing
+# ---------------------------------------------------------------------------
+
+class TestConfigPlumbing:
+    def test_flags_unvalidated_field(self):
+        src = """
+            import dataclasses
+            @dataclasses.dataclass(frozen=True)
+            class SearchConfig:
+                k: int = 1
+                l_max: int = 80
+                def __post_init__(self):
+                    if self.k < 1:
+                        raise ValueError
+        """
+        got = findings_for(src, "config-plumbing")
+        assert any("l_max" in f.message for f in got)
+
+    def test_flags_missing_post_init(self):
+        src = """
+            import dataclasses
+            @dataclasses.dataclass(frozen=True)
+            class SearchConfig:
+                k: int = 1
+        """
+        assert findings_for(src, "config-plumbing")
+
+    def test_flags_plan_key_without_cfg(self):
+        src = """
+            class QueryEngine:
+                def knn(self, q, cfg):
+                    key = (cfg.k, cfg.chunk, q.shape[1])
+                    return self._plans[key]
+        """
+        assert findings_for(src, "config-plumbing")
+
+    def test_clean_plan_key_with_whole_cfg(self):
+        src = """
+            class QueryEngine:
+                def knn(self, q, cfg):
+                    key = (cfg, bucket, q.shape[1])
+                    return self._plans[key]
+        """
+        assert not findings_for(src, "config-plumbing")
+
+    def test_real_search_config_is_clean(self, repo_root):
+        got, _ = herculint.lint_file(
+            repo_root / "src/repro/core/search.py", repo_root)
+        assert not [f for f in got if f.rule == "config-plumbing"]
+
+    def test_search_config_rejects_bad_values(self):
+        from repro.core.search import SearchConfig
+        for bad in (dict(k=0), dict(l_max=0), dict(chunk=0),
+                    dict(scan_block=-1), dict(topk_budget_chunks=0),
+                    dict(eapca_th=-0.1), dict(sax_th=float("nan")),
+                    dict(lb_slack=1.0), dict(use_sax="yes"),
+                    dict(refine_select="bogus"),
+                    dict(kernel_mode="bogus"), dict(prefetch="bogus")):
+            with pytest.raises(ValueError):
+                SearchConfig(**bad)
+        SearchConfig()  # defaults stay valid
+
+
+# ---------------------------------------------------------------------------
+# engine plumbing: ratchet, fingerprints, repo cleanliness
+# ---------------------------------------------------------------------------
+
+class TestEngine:
+    def test_repo_is_lint_clean(self, repo_root):
+        findings = herculint.run_lint(
+            [repo_root / "src", repo_root / "benchmarks",
+             repo_root / "examples"], repo_root)
+        baseline = herculint.load_baseline()
+        result = herculint.ratchet(findings, baseline)
+        assert result.ok, "\n".join(f.format() for f in result.new)
+
+    def test_cli_exits_zero_on_repo(self, capsys):
+        assert analysis_main([]) == 0
+        assert "clean" in capsys.readouterr().out
+
+    def test_cli_exits_nonzero_on_seeded_bug(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(textwrap.dedent("""
+            import jax
+            def pump(reader):
+                return jax.device_put(reader.get())
+        """))
+        assert analysis_main([str(bad), "--repo-root", str(tmp_path)]) == 1
+        assert "alias-transfer" in capsys.readouterr().out
+
+    def test_fingerprint_stable_across_line_drift(self):
+        src_a = """
+            import jax
+            def pump(reader):
+                return jax.device_put(reader.get())
+        """
+        src_b = """
+            import jax
+            # a new comment shifts every line number
+            # by two
+            def pump(reader):
+                return jax.device_put(reader.get())
+        """
+        fa = findings_for(src_a, "alias-transfer")[0].fingerprint
+        fb = findings_for(src_b, "alias-transfer")[0].fingerprint
+        assert fa == fb
+
+    def test_ratchet_baseline_roundtrip(self, tmp_path):
+        findings = findings_for("""
+            import jax
+            def pump(reader):
+                return jax.device_put(reader.get())
+        """, "alias-transfer")
+        bl_path = tmp_path / "baseline.json"
+        herculint.write_baseline(findings, bl_path)
+        baseline = herculint.load_baseline(bl_path)
+        result = herculint.ratchet(findings, baseline)
+        assert result.ok and len(result.grandfathered) == 1
+        # fixing the finding leaves a stale entry to shrink
+        result = herculint.ratchet([], baseline)
+        assert result.ok and result.stale
+
+    def test_baseline_file_is_empty_or_justified(self, repo_root):
+        data = json.loads(
+            (repo_root / "src/repro/analysis/baseline.json").read_text())
+        for entry in data["findings"]:
+            just = entry.get("justification", "")
+            assert just and not just.startswith("TODO"), entry
+
+
+class TestDeadCode:
+    def test_no_unexplained_dead_modules(self, repo_root):
+        report = deadcode.build_report(repo_root)
+        assert report["dead"] == [], report["dead"]
+
+    def test_configs_and_models_marked_intentional(self, repo_root):
+        report = deadcode.build_report(repo_root)
+        mods = report["modules"]
+        for name in ("repro.configs", "repro.models.transformer"):
+            assert mods[name]["status"] in ("intentional", "reachable"), \
+                mods[name]
+        # the report never leaves them ambiguous: every intentional entry
+        # carries a justification note
+        for name, entry in mods.items():
+            if entry["status"] == "intentional":
+                assert entry.get("note"), name
+
+    def test_core_modules_reachable_from_api(self, repo_root):
+        report = deadcode.build_report(repo_root)
+        mods = report["modules"]
+        for name in ("repro.core.engine", "repro.storage.store",
+                     "repro.data.pipeline", "repro.analysis.sanitize"):
+            assert "api" in mods[name]["reached_by"] or \
+                   "cli" in mods[name]["reached_by"], mods[name]
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def sanitized(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    assert sanitize.sanitize_enabled()
+
+
+def _drain(reader, n_chunks, chunk):
+    for i in range(n_chunks):
+        reader.submit(i * chunk, chunk)
+
+
+class TestSlotCanary:
+    def test_aliased_stage_trips_canary(self, sanitized, monkeypatch):
+        """Deliberately alias a slot (the PR 5 bug) and assert the canary
+        trips at the recycle point."""
+        from repro.data import pipeline
+
+        # an 'aliasing device_put': returns the slot view itself, the
+        # worst possible zero-copy outcome
+        monkeypatch.setattr(pipeline, "_staged_copy",
+                            lambda view, device=None: view)
+        rows = np.arange(64, dtype=np.float32).reshape(8, 8)
+        reader = pipeline.AsyncChunkReader(rows, 4, 8)
+        try:
+            _drain(reader, 2, 4)
+            dev = reader.stage(reader.get())
+            with pytest.raises(sanitize.SanitizerError,
+                               match="aliases reader slot"):
+                reader.get()            # recycles the aliased slot
+        finally:
+            reader.close()
+
+    def test_real_device_put_alias_trips_canary(self, sanitized,
+                                                monkeypatch):
+        """Same, but through an actual jax.device_put: only meaningful on
+        builds where device_put zero-copy aliases aligned host buffers."""
+        probe = np.zeros((64, 8), np.float32)
+        if not np.shares_memory(np.asarray(jax.device_put(probe)), probe):
+            pytest.skip("this jax build copies on device_put; the "
+                        "monkeypatched variant covers the alias path")
+        from repro.data import pipeline
+        monkeypatch.setattr(
+            pipeline, "_staged_copy",
+            lambda view, device=None: jax.device_put(view))
+        rows = np.arange(64, dtype=np.float32).reshape(8, 8)
+        reader = pipeline.AsyncChunkReader(rows, 4, 8)
+        try:
+            _drain(reader, 2, 4)
+            reader.stage(reader.get())
+            with pytest.raises(sanitize.SanitizerError):
+                reader.get()
+        finally:
+            reader.close()
+
+    def test_clean_stage_does_not_trip(self, sanitized):
+        from repro.data import pipeline
+
+        rows = np.arange(256, dtype=np.float32).reshape(32, 8)
+        reader = pipeline.AsyncChunkReader(rows, 8, 8)
+        try:
+            _drain(reader, 4, 8)
+            outs = []
+            for _ in range(4):
+                outs.append(np.asarray(reader.stage(reader.get())))
+        finally:
+            reader.close()
+        np.testing.assert_array_equal(np.concatenate(outs), rows)
+
+    def test_streams_bitwise_identical_under_sanitizer(self, sanitized):
+        from repro.data.pipeline import ArrayChunkSource, iter_device_chunks
+
+        rows = np.random.default_rng(7).normal(
+            size=(64, 16)).astype(np.float32)
+        src = ArrayChunkSource(rows, 16)
+        sync = [np.asarray(c) for _, c in iter_device_chunks(src)]
+        thread = [np.asarray(c)
+                  for _, c in iter_device_chunks(src, prefetch="thread")]
+        for a, b in zip(sync, thread):
+            np.testing.assert_array_equal(a, b)
+
+    def test_sanitizer_off_by_default(self, monkeypatch):
+        monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+        assert not sanitize.sanitize_enabled()
+        from repro.data import pipeline
+        rows = np.zeros((8, 4), np.float32)
+        reader = pipeline.AsyncChunkReader(rows, 4, 4)
+        try:
+            assert reader._sanitize is False
+        finally:
+            reader.close()
+
+
+class TestUseAfterCloseGuard:
+    def test_guard_trips_after_close(self, sanitized, tmp_path):
+        from repro.api import Hercules
+
+        rows = np.random.default_rng(3).normal(
+            size=(64, 16)).astype(np.float32)
+        path = str(tmp_path / "idx")
+        store = Hercules.create(path, data=rows, chunk_size=16)
+        store.close()
+        from repro.storage.format import open_index
+        saved = open_index(path)
+        assert isinstance(saved.lrd, sanitize.MmapGuard)
+        escaped = saved.lrd
+        assert escaped.shape[0] >= 64          # live reads delegate
+        np.testing.assert_array_equal(
+            np.asarray(escaped)[:2], np.asarray(saved._mapped("lrd"))[:2])
+        saved.close()
+        with pytest.raises(sanitize.UseAfterCloseError):
+            escaped[0]
+        with pytest.raises(sanitize.UseAfterCloseError):
+            _ = escaped.shape
+
+    def test_queries_work_through_guard(self, sanitized, tmp_path):
+        """The whole read path must behave identically under the guard."""
+        from repro.api import Hercules, SearchConfig
+
+        rows = np.random.default_rng(5).normal(
+            size=(128, 16)).astype(np.float32)
+        path = str(tmp_path / "idx")
+        with Hercules.create(path, data=rows, chunk_size=32) as store:
+            q = rows[:3] + 1e-3
+            res = store.query(q, search=SearchConfig(k=3, chunk=32,
+                                                     scan_block=32))
+            brute = np.argsort(((rows[None] - q[:, None]) ** 2).sum(-1),
+                               axis=1)[:, :3]
+            np.testing.assert_array_equal(np.asarray(res.ids), brute)
+
+    def test_no_guard_when_disabled(self, monkeypatch, tmp_path):
+        monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+        from repro.api import Hercules
+        from repro.storage.format import open_index
+
+        rows = np.random.default_rng(9).normal(
+            size=(64, 16)).astype(np.float32)
+        path = str(tmp_path / "idx")
+        Hercules.create(path, data=rows, chunk_size=16).close()
+        saved = open_index(path)
+        try:
+            assert not isinstance(saved.lrd, sanitize.MmapGuard)
+        finally:
+            saved.close()
+
+
+# ---------------------------------------------------------------------------
+# pinning regressions for the fixes this pass forced
+# ---------------------------------------------------------------------------
+
+class TestPinnedFixes:
+    def test_assemble_layout_copies_memmaps(self, tmp_path):
+        """assemble_layout promoted memmaps with jnp.asarray (latent PR 4):
+        the layout must own its bytes once the mmap is gone."""
+        from repro.core.layout import _owned
+
+        p = tmp_path / "a.npy"
+        np.save(p, np.arange(32, dtype=np.float32).reshape(4, 8))
+        mm = np.load(p, mmap_mode="r")
+        owned = _owned(mm)
+        assert not np.shares_memory(owned, mm)
+        plain = np.arange(8, dtype=np.float32)
+        assert _owned(plain) is plain          # in-memory stays zero-copy
+
+    def test_staged_chunks_never_share_slot_memory(self):
+        """Every device chunk yielded by the threaded stream must own its
+        memory — np.shares_memory against all reader slots."""
+        from repro.data import pipeline
+
+        rows = np.random.default_rng(11).normal(
+            size=(64, 8)).astype(np.float32)
+        reader = pipeline.AsyncChunkReader(rows, 16, 8)
+        try:
+            _drain(reader, 4, 16)
+            for _ in range(4):
+                dev = reader.stage(reader.get())
+                host = np.asarray(dev)
+                for slot in reader._slots:
+                    assert not np.shares_memory(host, slot)
+        finally:
+            reader.close()
+
+    def test_journal_query_survives_reopen(self, tmp_path):
+        """_merge_journal blocks now own their bytes: answers must remain
+        exact after the segment mmaps are released."""
+        from repro.api import Hercules, SearchConfig
+
+        rng = np.random.default_rng(13)
+        base = rng.normal(size=(64, 16)).astype(np.float32)
+        extra = rng.normal(size=(16, 16)).astype(np.float32)
+        path = str(tmp_path / "idx")
+        with Hercules.create(path, data=base, chunk_size=16) as store:
+            store.append(extra)
+            q = extra[:2] + 1e-3
+            res = store.query(q, search=SearchConfig(k=1, chunk=16,
+                                                     scan_block=16))
+            all_rows = np.concatenate([base, extra])
+            brute = np.argsort(((all_rows[None] - q[:, None]) ** 2
+                                ).sum(-1), axis=1)[:, :1]
+            np.testing.assert_array_equal(np.asarray(res.ids), brute)
