@@ -454,3 +454,87 @@ def bench_approx(num=16384, n=128, nq=16):
             len(set(np.asarray(ids)[i]) & set(np.asarray(bf_i)[i])) / 10
             for i in range(nq)]))
         emit(f"approx_lmax{l_max}", t / nq, f"recall@10={recall:.3f}")
+
+
+# --------------------------------------------------------------------------
+# PR 7: wave-fused multi-query serving vs independent per-query serving
+# --------------------------------------------------------------------------
+
+def bench_wave(num=8192, n=128, nq=16, k=3, memory_budget_mb=2.0):
+    """Clustered wave workload through the streamed ooc-local backend:
+    the wave path must dedup the merged leaf-run schedule (fetch each run
+    once for every interested member) and therefore stream strictly fewer
+    rows than serving the same queries independently — with bit-identical
+    answers. Also rows the in-memory fused wave plan vs a per-query loop.
+    """
+    import os
+    import shutil
+    import tempfile
+    import time as _time
+
+    from repro.core import make_disk_backend
+    from repro.storage import save_index
+
+    cfg = IndexConfig(build=BuildConfig(leaf_capacity=128),
+                      search=SearchConfig(k=k, **_SEARCH))
+    data = random_walks(jax.random.PRNGKey(31), num, n)
+    # clustered wave: queries perturbed from nearby dataset rows, so the
+    # members' alive-run lists overlap and there is real work to share
+    rows = np.asarray(data)[200:200 + nq]
+    noise = 0.01 * np.asarray(
+        jax.random.normal(jax.random.PRNGKey(32), rows.shape))
+    q = jnp.asarray(rows + noise)
+
+    idx = HerculesIndex.build(data, cfg)
+    eng = QueryEngine(LocalBackend(idx))
+    solo_d = np.concatenate(
+        [np.asarray(eng.knn(qi[None]).dists) for qi in np.asarray(q)])
+    t_solo = time_call(
+        lambda: [eng.knn(qi[None]) for qi in np.asarray(q)])
+    wave_d = np.asarray(eng.knn(q, wave=True).dists)
+    if not np.array_equal(wave_d, solo_d):
+        raise AssertionError("wave answers diverged from per-query answers")
+    t_wave = time_call(lambda: eng.knn(q, wave=True))
+    emit("wave_local_independent", t_solo / nq, "us/query")
+    emit("wave_local_fused", t_wave / nq,
+         f"speedup_vs_independent={t_solo / max(t_wave, 1e-9):.2f}x",
+         speedup_vs_independent=round(t_solo / max(t_wave, 1e-9), 3))
+
+    tmp = tempfile.mkdtemp(prefix="bench_wave_")
+    try:
+        path = os.path.join(tmp, "idx")
+        save_index(idx, path)
+        ooc = make_disk_backend("ooc-local", path, search=cfg.search,
+                                memory_budget_mb=memory_budget_mb)
+        oeng = QueryEngine(ooc)
+
+        t0 = _time.perf_counter()
+        solo_d = np.concatenate(
+            [np.asarray(oeng.knn(qi[None]).dists) for qi in np.asarray(q)])
+        t_solo = (_time.perf_counter() - t0) * 1e6
+        rows_solo = oeng.stats()["rows_streamed"]
+
+        t0 = _time.perf_counter()
+        wave_d = np.asarray(oeng.knn(q, wave=True).dists)
+        t_wave = (_time.perf_counter() - t0) * 1e6
+        st = oeng.stats()
+        rows_wave = st["rows_streamed"] - rows_solo
+        if not np.array_equal(wave_d, solo_d):
+            raise AssertionError("ooc wave answers diverged from per-query")
+        if st["runs_deduped"] <= 0:
+            raise AssertionError("clustered wave deduped no leaf runs")
+        if rows_wave >= rows_solo:
+            raise AssertionError(
+                f"wave streamed {rows_wave} rows >= independent {rows_solo}")
+        emit("wave_ooc_independent", t_solo / nq, f"rows={rows_solo}",
+             rows_streamed=int(rows_solo))
+        emit("wave_ooc_fused", t_wave / nq,
+             f"rows={rows_wave};deduped={st['runs_deduped']};"
+             f"shared={st['wave_rows_shared']}",
+             rows_streamed=int(rows_wave),
+             rows_streamed_independent=int(rows_solo),
+             runs_deduped=int(st["runs_deduped"]),
+             wave_rows_shared=int(st["wave_rows_shared"]),
+             runs_skipped_bsf=int(st["runs_skipped_bsf"]))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

@@ -45,6 +45,8 @@ def main(argv=None) -> None:
                     help="Pallas kernel dispatch for the benched configs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all emitted rows as JSON")
+    ap.add_argument("--wave-bench", action="store_true",
+                    help="run only the wave-fused multi-query comparison")
     ap.add_argument("--save-index", default=None, metavar="DIR",
                     help="persistence bench: build + save the index here")
     ap.add_argument("--load-index", default=None, metavar="DIR",
@@ -54,7 +56,10 @@ def main(argv=None) -> None:
 
     persist_kw = dict(save_path=args.save_index, load_path=args.load_index)
     print("name,us_per_call,derived")
-    if args.save_index or args.load_index:
+    if args.wave_bench:
+        size = dict(num=4096, n=64, nq=8) if args.quick else {}
+        B.bench_wave(**size)
+    elif args.save_index or args.load_index:
         size = dict(num=4096, n=64, nq=4, chunk=1024) if args.quick else {}
         B.bench_persistence(**size, **persist_kw)
     elif args.backend:
@@ -72,6 +77,7 @@ def main(argv=None) -> None:
         B.bench_backends(num=4096, nq=8, kernel_mode=args.kernel_mode)
         B.bench_kernels(num=16384, nq=32, kernel_mode=args.kernel_mode)
         B.bench_persistence(num=4096, n=64, nq=4, chunk=1024)
+        B.bench_wave(num=4096, n=64, nq=8)
     else:
         B.bench_scalability_size()
         B.bench_series_length()
@@ -82,6 +88,7 @@ def main(argv=None) -> None:
         B.bench_backends(kernel_mode=args.kernel_mode)
         B.bench_kernels(kernel_mode=args.kernel_mode)
         B.bench_persistence()
+        B.bench_wave()
     if args.json:
         write_json(args.json)
 

@@ -62,16 +62,17 @@ from repro.core.engine import (  # noqa: F401
 from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401
 from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
 from repro.core.search import (  # noqa: F401
-    KnnResult, SearchConfig, brute_force_knn, pscan_knn,
+    KnnResult, SearchConfig, brute_force_knn, pscan_knn, wave_knn,
 )
 from repro.core.tree import BuildConfig, build_tree_chunked  # noqa: F401
 from repro.data.pipeline import (  # noqa: F401
     ArrayChunkSource, AsyncChunkReader, ChunkSource, NpyChunkSource,
     PREFETCH_MODES, SyncChunkReader, iter_device_chunks, iter_host_chunks,
+    iter_scheduled_chunks,
     make_chunk_reader,
 )
 from repro.serve.engine import (  # noqa: F401
-    KnnAnswer, KnnServeConfig, KnnServeEngine,
+    KnnAnswer, KnnFailure, KnnServeConfig, KnnServeEngine, QueueFull,
 )
 from repro.storage import (  # noqa: F401
     FORMAT_VERSION, Hercules, IndexFormatError, SavedIndex,

@@ -7,7 +7,7 @@ from repro.core.layout import (  # noqa: F401
 )
 from repro.core.search import (  # noqa: F401
     KnnResult, SearchConfig, approx_knn, brute_force_knn, exact_knn,
-    pscan_knn, validate_runtime_config,
+    pscan_knn, validate_runtime_config, wave_knn,
 )
 from repro.core.tree import (  # noqa: F401
     BuildConfig, HerculesTree, build_tree, build_tree_chunked, route_to_leaf,

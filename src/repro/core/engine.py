@@ -52,7 +52,8 @@ import numpy as np
 from repro.core import summaries as S
 from repro.core.index import HerculesIndex, IndexConfig
 from repro.core.search import (INF, KnnResult, SearchConfig, _merge_topk,
-                               exact_knn, pscan_knn, validate_runtime_config)
+                               exact_knn, pscan_knn, validate_runtime_config,
+                               wave_knn)
 from repro.kernels import ops as kops
 from repro.kernels.compat import resolve_kernel_mode
 
@@ -71,6 +72,10 @@ class SearchBackend(Protocol):
     def make_plan(self, cfg: SearchConfig,
                   q_struct: jax.ShapeDtypeStruct
                   ) -> Callable[[jax.Array], KnnResult]: ...
+
+    def make_wave_plan(self, cfg: SearchConfig,
+                       q_struct: jax.ShapeDtypeStruct
+                       ) -> Callable[[jax.Array], KnnResult]: ...
 
     def knn(self, queries: jax.Array, k: int | None = None,
             **overrides: Any) -> KnnResult: ...
@@ -110,6 +115,14 @@ class BackendBase:
 
     def make_plan(self, cfg, q_struct):
         raise NotImplementedError
+
+    def make_wave_plan(self, cfg, q_struct):
+        """Plan for a *wave* — a batch of queries answered with fused
+        scheduling (shared descent/BSF/fetches). The default falls back to
+        the regular plan: dense scans and the sharded all-gather are
+        already batch-fused, so for them the wave path IS the batch path.
+        Backends with per-query work to share override this."""
+        return self.make_plan(cfg, q_struct)
 
     def knn(self, queries: jax.Array, k: int | None = None,
             **overrides: Any) -> KnnResult:
@@ -181,6 +194,17 @@ class LocalBackend(BackendBase):
         compiled = exact_knn.lower(
             idx.tree, idx.layout, q_struct, cfg, idx.max_depth).compile()
         return lambda q: compiled(idx.tree, idx.layout, q)
+
+    def make_wave_plan(self, cfg, q_struct):
+        idx = self.index
+        compiled = wave_knn.lower(
+            idx.tree, idx.layout, q_struct, cfg, idx.max_depth).compile()
+        return lambda q: compiled(idx.tree, idx.layout, q)
+
+    def estimate_difficulty(self, queries: jax.Array) -> np.ndarray:
+        from repro.core.search import _wave_leaf_lbs
+        return _difficulty_from_leaf_lbs(
+            _wave_leaf_lbs(jnp.asarray(queries), self.index.layout))
 
     def stats(self) -> dict:
         return self.index.stats()
@@ -397,6 +421,21 @@ def _ooc_refine_block(rows: jax.Array, base: jax.Array, valid: jax.Array,
     return jax.lax.map(one, (queries, d0, p0))
 
 
+def _difficulty_from_leaf_lbs(lbs) -> np.ndarray:
+    """Per-query cost score in [0, 1] from the leaf-bound landscape: the
+    fraction of alive leaves whose LB_EAPCA is within 2x of the query's
+    best bound. A flat landscape (many near-best leaves) predicts weak
+    pruning — the query will touch many leaves and serve expensive; a
+    spiky one prunes well and serves cheap. This is the difficulty signal
+    the serve loop's ``pack="difficulty"`` wave packing keys on."""
+    lbs = np.asarray(lbs)
+    finite = np.isfinite(lbs)
+    n_alive = np.maximum(finite.sum(axis=1), 1)
+    best = np.where(finite, lbs, np.inf).min(axis=1)
+    near = finite & (lbs <= 2.0 * best[:, None] + 1e-12)
+    return near.sum(axis=1).astype(np.float32) / n_alive
+
+
 def _alive_runs(alive: np.ndarray, base: int) -> list[tuple[int, int]]:
     """Contiguous True runs of a row-survival mask as absolute
     (start, count) pairs — the sub-extents the SAX filter could not prune."""
@@ -427,7 +466,10 @@ class _OutOfCoreBase(BackendBase):
         self._t = {"calls": 0, "blocks": 0, "rows_streamed": 0,
                    "bytes_streamed": 0, "sax_rows_read": 0,
                    "read_seconds": 0.0, "read_wait_seconds": 0.0,
-                   "overlap_blocks": 0}
+                   "overlap_blocks": 0,
+                   # wave-fused serving: fetches shared across wave members
+                   "wave_calls": 0, "wave_rows_shared": 0,
+                   "runs_deduped": 0, "runs_skipped_bsf": 0}
 
     def _lrd(self) -> np.ndarray:
         """The LRD memmap, failing loudly if the SavedIndex was closed
@@ -574,6 +616,24 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
             self._count(rows.shape[0])
         self._t["calls"] += 1
         return self._fill_result(d, p, self._ids_of(p), path=3, accessed=num)
+
+    def make_wave_plan(self, cfg, q_struct):
+        """The streamed scan already reads each block exactly once for the
+        whole batch, so the wave path is the batch path — plus telemetry
+        attributing the sharing: every streamed row serves all wave
+        members but is fetched once."""
+        mode = resolve_kernel_mode(cfg.kernel_mode)
+
+        def run(q):
+            q = jnp.asarray(q)
+            before = self._t["rows_streamed"]
+            res = self._stream_knn(q, cfg, mode)
+            self._t["wave_calls"] += 1
+            self._t["wave_rows_shared"] += ((self._t["rows_streamed"] - before)
+                                            * max(int(q.shape[0]) - 1, 0))
+            return res
+
+        return run
 
 
 class OutOfCoreLocalBackend(_OutOfCoreBase):
@@ -774,6 +834,186 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
             visited_leaves=jnp.full((qn,), len(seeded) + int(needed.sum()),
                                     jnp.int32))
 
+    def make_wave_plan(self, cfg, q_struct):
+        return lambda q: self._stream_wave_knn(jnp.asarray(q), cfg)
+
+    def estimate_difficulty(self, queries: jax.Array) -> np.ndarray:
+        return _difficulty_from_leaf_lbs(
+            self._leaf_lbs(jnp.asarray(queries)))
+
+    def _stream_wave_knn(self, q: jax.Array, cfg: SearchConfig) -> KnnResult:
+        """Wave-fused out-of-core answering: the `_stream_knn` pipeline with
+        the wave's disk schedule made explicit (the ROADMAP's "carefully
+        schedule costly operations" applied *across* queries).
+
+        Where `_stream_knn` walks leaf runs in file order, this merges every
+        member's alive-run list, counts each run's **demand** (how many
+        members still need it), fetches each run exactly once in descending
+        demand order, and refines all members per fetched block through the
+        shared BSF matrix — so a popular leaf is read once for the whole
+        wave and its rows tighten every member's bound before the less
+        popular runs are even submitted. Submissions flow through
+        :func:`repro.data.pipeline.iter_scheduled_chunks`, whose
+        ``still_needed`` re-check runs against the *current* BSF matrix
+        right before each submit: a run whose last interested member was
+        satisfied by an earlier block is dropped without touching the disk
+        (``runs_skipped_bsf``). Exactness: a member is counted out of a
+        run's demand only when the run's per-member lower bound (min over
+        its rows) cannot beat that member's BSF_k — the same
+        no-false-dismissal test as the per-query path — so answers stay
+        bit-identical to per-query serving. Telemetry: ``runs_deduped``
+        (fetches avoided vs independent queries) and ``wave_rows_shared``
+        (rows that served >1 member per single fetch).
+        """
+        from repro.core.tree import route_to_leaf
+        from repro.data.pipeline import (iter_scheduled_chunks,
+                                         make_chunk_reader)
+
+        k = cfg.k
+        qn = q.shape[0]
+        n = self.saved.series_len
+        max_leaf = self.saved.max_leaf
+        R = self.stream_rows()
+        rows_before = self._t["rows_streamed"]
+        slack_f = 1.0 - cfg.lb_slack
+        d = jnp.full((qn, k), INF)
+        p = jnp.full((qn, k), -1, jnp.int32)
+
+        lrd_reader = make_chunk_reader(self._lrd(), R, n,
+                                       prefetch=cfg.prefetch)
+        lsd_reader = None
+        counts = np.asarray(self._leaf_count)
+        starts_np = np.asarray(self._leaf_start)
+        try:
+            # -- phase 1: per-member seed sets, fetched once for the union.
+            # Demand = how many members asked for the leaf; popular leaves
+            # go first so the shared BSF matrix tightens fastest.
+            lbs = self._leaf_lbs(q)                          # (W, L)
+            home_nodes = route_to_leaf(self.saved.tree, q,
+                                       self.saved.max_depth)
+            home_ranks = np.asarray(self._leaf_rank)[np.asarray(home_nodes)]
+            l_max = min(cfg.l_max, self.saved.num_leaves)
+            _, best = jax.lax.top_k(-lbs, l_max)             # (W, l_max)
+            best_np = np.asarray(best)
+            demand: collections.Counter = collections.Counter()
+            for w in range(qn):
+                member = {int(home_ranks[w])} | {int(r) for r in best_np[w]}
+                for r in member:
+                    if r >= 0 and counts[r] > 0:
+                        demand[r] += 1
+            seeded = sorted(demand)
+            self._t["runs_deduped"] += sum(demand[r] - 1 for r in seeded)
+            self._t["wave_rows_shared"] += sum(
+                int(counts[r]) * (demand[r] - 1) for r in seeded)
+            seed_rows = sum(int(counts[r]) for r in seeded)
+            order = sorted(seeded, key=lambda r: (-demand[r], r))
+            extents = [(int(starts_np[r]), int(counts[r]), max_leaf)
+                       for r in order]
+            for start, cnt, pad_to in extents:
+                lrd_reader.submit(start, cnt, pad_to)
+            for start, cnt, _ in extents:
+                rows = lrd_reader.stage(lrd_reader.get())
+                d, p = _ooc_refine_block(rows, jnp.int32(start),
+                                         jnp.int32(cnt), q, d, p, k=k)
+                self._count(cnt)
+
+            # -- phase 2: leaf-level pruning, per member -----------------
+            slack = jnp.float32(slack_f)
+            bsf = d[:, k - 1]
+            cand = lbs * slack < bsf[:, None]                # (W, L)
+            needed = np.array(jnp.any(cand, axis=0))
+            needed[seeded] = False
+            n_alive = max(int((counts > 0).sum()), 1)
+            eapca_pr = 1.0 - np.asarray(
+                jnp.sum(cand, axis=1), np.float32) / n_alive
+
+            # -- phase 3: build the merged alive-run list with a per-member
+            # lower bound per run (min over the run's rows/leaves), instead
+            # of refining file-order as the per-query path does -----------
+            pieces = self._runs(needed, R)
+            use_sax = bool(cfg.use_sax)
+            alive_counts = jnp.full((qn,), seed_rows, jnp.int32)
+            runs: list[tuple[int, int, np.ndarray]] = []
+            if not use_sax:
+                lbs_np = np.asarray(lbs)
+                for start, cnt in pieces:
+                    ranks = np.unique(self._srank[start:start + cnt])
+                    runs.append((start, cnt, lbs_np[:, ranks].min(axis=1)))
+            elif pieces:
+                m_sax = int(self._lsd().shape[1])
+                q_paa = S.paa(q, m_sax)
+                kmode = resolve_kernel_mode(cfg.kernel_mode)
+                lsd_reader = make_chunk_reader(self._lsd(), R, m_sax,
+                                               np.uint8,
+                                               prefetch=cfg.prefetch)
+                for start, cnt in pieces:
+                    lsd_reader.submit(start, cnt, self._pad_bucket(cnt, R))
+                for start, cnt in pieces:
+                    pad_to = self._pad_bucket(cnt, R)
+                    codes = lsd_reader.stage(lsd_reader.get())
+                    ranks = np.zeros((pad_to,), np.int32)
+                    ranks[:cnt] = self._srank[start:start + cnt]
+                    self._t["sax_rows_read"] += cnt
+                    lb_row = jnp.maximum(
+                        kops.lb_sax(q_paa, codes, n, mode=kmode),
+                        lbs[:, ranks])                       # (W, pad_to)
+                    live = ((lb_row * slack < bsf[:, None])
+                            & (jnp.arange(pad_to) < cnt)[None, :])
+                    alive_counts = alive_counts + jnp.sum(live, axis=1,
+                                                          dtype=jnp.int32)
+                    alive = np.asarray(jnp.any(live, axis=0))[:cnt]
+                    lb_np = np.asarray(lb_row)
+                    for s0, c0 in _alive_runs(alive, start):
+                        lo = s0 - start
+                        runs.append((s0, c0,
+                                     lb_np[:, lo:lo + c0].min(axis=1)))
+
+            # -- phase 4: fetch each run once, most-demanded first, with a
+            # late BSF re-check per submit ---------------------------------
+            bsf_host = {"kth": np.asarray(d[:, k - 1])}
+
+            def run_demand(run_lb: np.ndarray) -> int:
+                return int((run_lb * slack_f < bsf_host["kth"]).sum())
+
+            runs.sort(key=lambda r: (-run_demand(r[2]), r[0]))
+
+            def still_needed(tag) -> bool:
+                _, c0, run_lb = tag
+                dm = run_demand(run_lb)
+                if dm == 0:
+                    self._t["runs_skipped_bsf"] += 1
+                    return False
+                self._t["runs_deduped"] += dm - 1
+                self._t["wave_rows_shared"] += c0 * (dm - 1)
+                return True
+
+            reqs = [((s0, c0, run_lb), s0, c0, self._pad_bucket(c0, R))
+                    for s0, c0, run_lb in runs]
+            for (s0, c0, _), rows in iter_scheduled_chunks(
+                    lrd_reader, reqs, still_needed=still_needed):
+                d, p = _ooc_refine_block(rows, jnp.int32(s0), jnp.int32(c0),
+                                         q, d, p, k=k)
+                self._count(c0)
+                bsf_host["kth"] = np.asarray(d[:, k - 1])
+            self._t["calls"] += 1
+            self._t["wave_calls"] += 1
+        finally:
+            self._reap_reader(lrd_reader)
+            if lsd_reader is not None:
+                self._reap_reader(lsd_reader)
+
+        res = self._fill_result(
+            d, p, self._ids_of(p), path=2,
+            accessed=self._t["rows_streamed"] - rows_before)
+        sax_pr = (1.0 - alive_counts.astype(jnp.float32)
+                  / max(self.saved.num_series, 1)
+                  if use_sax else jnp.zeros((qn,), jnp.float32))
+        return res._replace(
+            eapca_pr=jnp.asarray(eapca_pr, jnp.float32),
+            sax_pr=sax_pr,
+            visited_leaves=jnp.full((qn,), len(seeded) + int(needed.sum()),
+                                    jnp.int32))
+
     def _runs(self, needed: np.ndarray, max_rows: int):
         """Merge needed leaves' extents into contiguous row intervals (leaf
         in-order == file order), then cut into ≤ max_rows pieces."""
@@ -904,7 +1144,8 @@ class QueryEngine:
         self.config = config or EngineConfig()
         self._plans: collections.OrderedDict = collections.OrderedDict()
         self._t = {
-            "calls": 0, "queries": 0, "hits": 0, "misses": 0, "evictions": 0,
+            "calls": 0, "queries": 0, "wave_calls": 0,
+            "hits": 0, "misses": 0, "evictions": 0,
             "invalidations": 0,
             "compile_s": 0.0, "exec_s": 0.0, "last_exec_s": 0.0,
             "paths": np.zeros(4, np.int64), "path_unknown": 0,
@@ -932,10 +1173,17 @@ class QueryEngine:
     # -- the one call that matters ------------------------------------------
 
     def knn(self, queries: jax.Array, k: int | None = None,
-            valid_rows: int | None = None, **overrides: Any) -> KnnResult:
+            valid_rows: int | None = None, wave: bool = False,
+            **overrides: Any) -> KnnResult:
         """``valid_rows``: when the caller already padded the batch (e.g. a
         slot-based server filling its wave), the number of leading real
-        queries — results are sliced and telemetry counted on those only."""
+        queries — results are sliced and telemetry counted on those only.
+
+        ``wave=True`` answers the batch through the backend's wave-fused
+        plan (shared descent / BSF matrix / once-per-wave disk fetches);
+        answers are bit-identical to ``wave=False``, which maps the
+        per-query pipeline over the batch. Backends without per-query work
+        to share (dense scans, sharded) fall back to the regular plan."""
         q = jnp.asarray(queries)
         if q.ndim == 1:
             q = q[None, :]
@@ -954,12 +1202,13 @@ class QueryEngine:
                 [q, jnp.zeros((bucket - q.shape[0], q.shape[1]), q.dtype)],
                 axis=0)
 
-        key = (cfg, bucket, q.shape[1], q.dtype.name)
+        key = (cfg, bucket, q.shape[1], q.dtype.name, wave)
         plan = self._plans.get(key)
         if plan is None:
             t0 = time.perf_counter()
-            plan = self.backend.make_plan(
-                cfg, jax.ShapeDtypeStruct(q.shape, q.dtype))
+            maker = (self.backend.make_wave_plan if wave
+                     else self.backend.make_plan)
+            plan = maker(cfg, jax.ShapeDtypeStruct(q.shape, q.dtype))
             self._t["compile_s"] += time.perf_counter() - t0
             self._t["misses"] += 1
             self._plans[key] = plan
@@ -978,12 +1227,25 @@ class QueryEngine:
         self._t["last_exec_s"] = dt
         self._t["calls"] += 1
         self._t["queries"] += qn
+        if wave:
+            self._t["wave_calls"] += 1
 
         if bucket != qn:
             res = KnnResult(*[a[:qn] for a in res])
         if self.config.collect_result_stats:
             self._record(res)
         return res
+
+    def estimate_difficulty(self, queries) -> np.ndarray | None:
+        """Cheap per-query cost scores in [0, 1] (higher = likely slower),
+        from the backend's resident pruning tables — the signal behind
+        difficulty-aware wave packing. ``None`` when the backend has no
+        leaf-bound landscape to score against (dense scans cost the same
+        for every query)."""
+        fn = getattr(self.backend, "estimate_difficulty", None)
+        if fn is None:
+            return None
+        return fn(jnp.asarray(queries))
 
     def _record(self, res: KnnResult) -> None:
         path = np.asarray(res.path)
@@ -1000,10 +1262,17 @@ class QueryEngine:
     def telemetry(self) -> dict:
         t = self._t
         n_stat = max(t["stat_queries"], 1)
-        return {
+        bstats = self.backend.stats()
+        ooc = ({k: bstats[k] for k in
+                ("calls", "blocks", "rows_streamed", "wave_calls",
+                 "wave_rows_shared", "runs_deduped", "runs_skipped_bsf")
+                if k in bstats}
+               if "rows_streamed" in bstats else None)
+        out = {
             "backend": self.backend.name,
             "calls": t["calls"],
             "queries": t["queries"],
+            "wave_calls": t["wave_calls"],
             "plan_cache": {
                 "hits": t["hits"], "misses": t["misses"],
                 "evictions": t["evictions"], "size": len(self._plans),
@@ -1028,6 +1297,9 @@ class QueryEngine:
                 "sax_mean": t["sax_pr_sum"] / n_stat,
             },
         }
+        if ooc is not None:
+            out["ooc"] = ooc
+        return out
 
     def stats(self) -> dict:
         return self.backend.stats()

@@ -342,6 +342,19 @@ def _query_one(q, tree: HerculesTree, layout: HerculesLayout,
     sax_pr = 1.0 - n_cand.astype(jnp.float32) / layout.num_series
 
     # ---- Adaptive access-path selection (Alg. 10) ---------------------------
+    d_f, p_f, path, acc_f = _finish_one(
+        q, layout, cfg, d_top, p_top, accessed, cand_lb, eapca_pr, sax_pr)
+
+    return (d_f, p_f, path, eapca_pr, sax_pr, acc_f,
+            jnp.int32(l_max + 1))
+
+
+def _finish_one(q, layout: HerculesLayout, cfg: SearchConfig,
+                d_top, p_top, accessed, cand_lb, eapca_pr, sax_pr):
+    """Adaptive access-path selection (Alg. 10) + exact refinement for ONE
+    query — the shared tail of the per-query (`_query_one`) and wave-fused
+    (`wave_knn`) pipelines. Returns (dists, positions, path, accessed)."""
+
     def do_scan(_):
         d, p, acc = _scan_path(q, layout, d_top, p_top, cfg)
         return d, p, accessed + acc
@@ -370,9 +383,7 @@ def _query_one(q, tree: HerculesTree, layout: HerculesLayout,
         d_f, p_f, acc_f = jax.lax.cond(use_scan, do_scan, do_refine, None)
         path = jnp.where(eapca_pr < cfg.eapca_th, 0,
                          jnp.where(sax_pr < cfg.sax_th, 1, 2)).astype(jnp.int32)
-
-    return (d_f, p_f, path, eapca_pr, sax_pr, acc_f,
-            jnp.int32(l_max + 1))
+    return d_f, p_f, path, acc_f
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "max_depth"))
@@ -389,6 +400,137 @@ def exact_knn(tree: HerculesTree, layout: HerculesLayout, queries: jax.Array,
     return KnnResult(dists=d, positions=p, ids=ids, path=path,
                      eapca_pr=e_pr, sax_pr=s_pr, accessed=acc,
                      visited_leaves=vis)
+
+
+# ---------------------------------------------------------------------------
+# Wave-fused multi-query search (ROADMAP "Multi-query wave search")
+# ---------------------------------------------------------------------------
+
+def _wave_leaf_lbs(queries, layout: HerculesLayout):
+    """(W, L) squared LB_EAPCA of every wave member to every leaf.
+
+    The batched form of `_leaf_lbs`: per-row prefix sums and segment stats
+    are arithmetic-identical to the single-query path, so the bounds (and
+    hence every pruning decision derived from them) match bit for bit.
+    """
+    qp, qp2 = S.prefix_sums(queries)
+
+    def one(args):
+        qp_r, qp2_r = args
+        qm, qs = _query_seg_stats(qp_r, qp2_r, layout.leaf_endpoints)
+        return LB.lb_eapca_node(qm, qs, layout.leaf_synopsis,
+                                layout.leaf_seg_lens)
+
+    lb = jax.lax.map(one, (qp, qp2))
+    dead = layout.leaf_count <= 0
+    return jnp.where(dead[None, :], INF, lb)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_depth"))
+def wave_knn(tree: HerculesTree, layout: HerculesLayout, queries: jax.Array,
+             cfg: SearchConfig, max_depth: int) -> KnnResult:
+    """Exact kNN for a *wave* of queries with fused scheduling.
+
+    Where `exact_knn` maps `_query_one` over the workload (each query runs
+    its own leaf-visit scan and its own LB_SAX kernel call), this fuses the
+    per-query work that is identical in structure across the wave:
+
+      * ONE tree descent for all members (`route_to_leaf` is batched);
+      * the phase-1 visit loop runs level by level over the whole wave —
+        one (W, max_leaf) gather of LRD rows per level instead of W
+        per-leaf dynamic slices (layout geometry guarantees every leaf
+        extent [start, start + max_leaf) stays inside the padded array, so
+        the gather reads exactly the rows the per-query slice reads);
+      * a shared per-wave BSF matrix (W, k) carried through the visit scan;
+      * ONE LB_SAX kernel launch over the (W, m) PAA matrix for phase 3,
+        instead of W single-row launches padded to the kernel's 8-row tile.
+
+    Per member the merge sequence (home leaf, then the l_max best leaves in
+    rank order) and all distance arithmetic are the same as `_query_one`,
+    so answers are bit-identical to the per-query path. Phase 4 stays a
+    per-member `lax.map` over the shared `_finish_one` tail — access-path
+    selection is a real branch per member, exactly as in `exact_knn`.
+
+    Memory note: phase 3 materializes the (W, N_pad) LB matrix (the
+    per-query path keeps it at (N_pad,)); that is the wave's footprint cost
+    and why serving waves are bounded by `batch_slots`. `unroll_visits` is
+    a dry-run probe knob and is ignored here (the wave path always scans).
+    """
+    W = queries.shape[0]
+    n = layout.series_len
+    l_max = min(cfg.l_max, layout.num_leaves)
+    slack = jnp.float32(1.0 - cfg.lb_slack)
+    n_pad_rows = layout.lrd.shape[0]
+
+    # ---- Phase 1: approximate search, wave-fused (Alg. 11) ----------------
+    leaf_lb = _wave_leaf_lbs(queries, layout)            # (W, L)
+    home = layout.leaf_rank[route_to_leaf(tree, queries, max_depth)]
+    _, best = jax.lax.top_k(-leaf_lb, l_max)             # (W, l_max)
+    visit = jnp.concatenate([home[:, None].astype(jnp.int32),
+                             best.astype(jnp.int32)], axis=1)
+
+    d_top = jnp.full((W, cfg.k), INF)        # the shared per-wave BSF matrix
+    p_top = jnp.full((W, cfg.k), -1, jnp.int32)
+    offs = jnp.arange(layout.max_leaf, dtype=jnp.int32)
+    merge = jax.vmap(functools.partial(_merge_topk, k=cfg.k))
+
+    def level_body(carry, ranks):            # ranks: (W,) — one visit level
+        d_top, p_top, acc = carry
+        starts = layout.leaf_start[ranks]
+        cnts = layout.leaf_count[ranks]
+        pos = starts[:, None] + offs[None, :]            # (W, max_leaf)
+        rows = layout.lrd[jnp.clip(pos, 0, n_pad_rows - 1)]  # one gather
+        d = jnp.sum(jnp.square(rows - queries[:, None, :]), axis=2)
+        d = jnp.where(offs[None, :] < cnts[:, None], d, INF)
+        d_top, p_top = merge(d_top, p_top, d, pos)
+        return (d_top, p_top, acc + cnts), None
+
+    (d_top, p_top, accessed), _ = jax.lax.scan(
+        level_body, (d_top, p_top, jnp.zeros((W,), jnp.int32)), visit.T)
+    bsf = d_top[:, cfg.k - 1]
+
+    # ---- Phase 2: candidate leaves (Alg. 12), whole wave at once ----------
+    cand_leaf = leaf_lb * slack < bsf[:, None]           # (W, L)
+    n_cand_leaves = jnp.sum(cand_leaf.astype(jnp.int32), axis=1)
+    n_alive = jnp.maximum(jnp.sum((layout.leaf_count > 0).astype(jnp.int32)), 1)
+    eapca_pr = (1.0 - n_cand_leaves.astype(jnp.float32)
+                / n_alive.astype(jnp.float32))
+
+    # ---- Phase 3: candidate series (Alg. 13), one kernel launch -----------
+    leaf_mask_pad = jnp.concatenate(
+        [cand_leaf, jnp.zeros((W, 1), bool)], axis=1)
+    series_in_cand = leaf_mask_pad[:, layout.series_leaf_rank]   # (W, N_pad)
+
+    q_paa = S.paa(queries, layout.lsd.shape[1])          # (W, m)
+    kmode = resolve_kernel_mode(cfg.kernel_mode)
+    if kmode == "ref":
+        lb_s = jax.lax.map(lambda qp: LB.lb_sax(qp, layout.lsd, n), q_paa)
+    else:
+        lb_s = kops.lb_sax(q_paa, layout.lsd, n, mode=kmode)     # (W, N_pad)
+    leaf_lb_pad = jnp.concatenate([leaf_lb, jnp.full((W, 1), INF)], axis=1)
+    lb_leaf_series = leaf_lb_pad[:, layout.series_leaf_rank]
+
+    if cfg.use_sax:
+        cand_lb = jnp.where(series_in_cand,
+                            jnp.maximum(lb_s, lb_leaf_series), INF)
+    else:
+        cand_lb = jnp.where(series_in_cand, lb_leaf_series, INF)
+    n_cand = jnp.sum((cand_lb * slack < bsf[:, None]).astype(jnp.int32),
+                     axis=1)
+    sax_pr = 1.0 - n_cand.astype(jnp.float32) / layout.num_series
+
+    # ---- Phase 4: per-member adaptive refinement (Alg. 10/14) -------------
+    def one(args):
+        q, d0, p0, acc, clb, e_pr, s_pr = args
+        return _finish_one(q, layout, cfg, d0, p0, acc, clb, e_pr, s_pr)
+
+    d_f, p_f, path, acc_f = jax.lax.map(
+        one, (queries, d_top, p_top, accessed, cand_lb, eapca_pr, sax_pr))
+    safe_p = jnp.clip(p_f, 0, layout.perm.shape[0] - 1)
+    ids = jnp.where(p_f >= 0, layout.perm[safe_p], -1)
+    return KnnResult(dists=d_f, positions=p_f, ids=ids, path=path,
+                     eapca_pr=eapca_pr, sax_pr=sax_pr, accessed=acc_f,
+                     visited_leaves=jnp.full((W,), l_max + 1, jnp.int32))
 
 
 # ---------------------------------------------------------------------------

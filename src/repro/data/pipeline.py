@@ -464,6 +464,50 @@ def make_chunk_reader(rows, capacity_rows: int, width: int,
     return cls(rows, capacity_rows, width, dtype, slots=slots)
 
 
+def iter_scheduled_chunks(reader, requests, still_needed=None,
+                          lookahead: int = 2, device=None
+                          ) -> Iterator[tuple[object, jax.Array]]:
+    """Demand-scheduled fetches over one shared chunk reader (the wave
+    path's multi-consumer submissions).
+
+    ``requests`` is an ordered iterable of ``(tag, start, count, pad_to)``
+    — typically leaf runs sorted by how many consumers still need them.
+    Each surviving request is fetched **once** and yielded as
+    ``(tag, staged_device_rows)``; the tag tells the caller which run (and
+    therefore which consumers) the block belongs to.
+
+    ``still_needed(tag) -> bool`` is consulted immediately before each
+    ``submit()`` — as late as possible — so a run whose every interested
+    consumer has since been satisfied (e.g. all wave members' best-so-far
+    bounds tightened past the run's lower bound while earlier blocks
+    refined) is dropped without ever touching the disk. ``lookahead``
+    bounds the number of in-flight submissions: large enough that reads
+    overlap the consumer's compute (the reader's slot pair), small enough
+    that the drop decision still sees a recent bound.
+    """
+    if lookahead < 1:
+        raise ValueError(f"lookahead={lookahead}; expected >= 1")
+    pending: collections.deque = collections.deque()
+    it = iter(requests)
+
+    def pump() -> None:
+        while len(pending) < lookahead:
+            for tag, start, count, pad_to in it:
+                if still_needed is None or still_needed(tag):
+                    reader.submit(start, count, pad_to)
+                    pending.append(tag)
+                    break
+            else:
+                return
+
+    pump()
+    while pending:
+        tag = pending.popleft()
+        rows = reader.stage(reader.get(), device)
+        pump()                       # refill the window before the consumer
+        yield tag, rows              # computes, so the next read overlaps
+
+
 class _SourceRows:
     """Row-sliceable adapter over a protocol-only :class:`ChunkSource`
     (slices must align to the source's chunk boundaries — the whole-source

@@ -9,6 +9,8 @@ against brute force.
     PYTHONPATH=src python -m repro.launch.serve_knn --smoke
     PYTHONPATH=src python -m repro.launch.serve_knn --backend scan \
         --num-series 100000 --requests 256 --slots 64
+    PYTHONPATH=src python -m repro.launch.serve_knn --smoke --wave \
+        --mixed-k --max-queue 16 --pack difficulty
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.api import (BACKEND_NAMES, BuildConfig, IndexConfig, KnnServeConfig,
-                       KnnServeEngine, QueryEngine, SearchConfig,
+                       KnnServeEngine, QueryEngine, QueueFull, SearchConfig,
                        brute_force_knn, make_backend)
 from repro.data import DIFFICULTY_LEVELS, make_query_workload, random_walks
 
@@ -35,6 +37,16 @@ def main(argv=None):
     ap.add_argument("--difficulty", choices=DIFFICULTY_LEVELS, default="5%")
     ap.add_argument("--leaf-size", type=int, default=256)
     ap.add_argument("--l-max", type=int, default=8)
+    ap.add_argument("--wave", action="store_true",
+                    help="serve each wave through the fused wave plan")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission bound; submits past it are rejected "
+                         "and retried after serving a wave")
+    ap.add_argument("--pack", choices=("fifo", "difficulty"), default="fifo",
+                    help="wave packing policy")
+    ap.add_argument("--mixed-k", action="store_true",
+                    help="alternate k and 2k requests to exercise sub-wave "
+                         "grouping")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + brute-force verification (CI)")
     args = ap.parse_args(argv)
@@ -59,15 +71,25 @@ def main(argv=None):
           f"{backend.describe()}")
 
     serve = KnnServeEngine(QueryEngine(backend),
-                           KnnServeConfig(batch_slots=args.slots, k=args.k))
+                           KnnServeConfig(batch_slots=args.slots, k=args.k,
+                                          wave=args.wave,
+                                          max_queue=args.max_queue,
+                                          pack=args.pack))
 
     workload = np.asarray(make_query_workload(
         jax.random.PRNGKey(1), data, args.requests, args.difficulty))
-    rids = [serve.submit(q) for q in workload]
-    print(f"submitted {len(rids)} requests "
-          f"({serve.pending()} pending, slots={args.slots})")
+    ks = [args.k if (i % 2 == 0 or not args.mixed_k) else 2 * args.k
+          for i in range(len(workload))]
 
     t0 = time.time()
+    rids = []
+    for q, k in zip(workload, ks):
+        while True:
+            try:
+                rids.append(serve.submit(q, k=k))
+                break
+            except QueueFull:   # backpressure: free slots, then retry
+                serve.step()
     answers = serve.drain()
     dt = time.time() - t0
     assert set(answers) == set(rids) and serve.pending() == 0
@@ -76,7 +98,7 @@ def main(argv=None):
         return
 
     tele = serve.telemetry()
-    pc = tele["plan_cache"]
+    pc, sv = tele["plan_cache"], tele["serving"]
     print(f"\nserved {len(answers)} queries in {dt:.2f}s "
           f"({len(answers) / dt:.1f} q/s, "
           f"{1e3 * dt / len(answers):.2f} ms/query incl. compile)")
@@ -85,13 +107,27 @@ def main(argv=None):
     print(f"paths: {tele['paths']}  pruning: "
           f"eapca={tele['pruning']['eapca_mean']:.3f} "
           f"sax={tele['pruning']['sax_mean']:.3f}")
+    print(f"serving: waves={sv['waves']} wave_mode={sv['wave_mode']} "
+          f"pack={sv['pack']} rejected={sv['rejected']} "
+          f"failed={sv['failed']} scored={sv['difficulty_scored']}")
+    if "ooc" in tele:
+        ooc = tele["ooc"]
+        print(f"ooc: rows_streamed={ooc['rows_streamed']} "
+              f"runs_deduped={ooc['runs_deduped']} "
+              f"wave_rows_shared={ooc['wave_rows_shared']}")
 
     if args.smoke:
-        bf_d, _ = brute_force_knn(data, jax.numpy.asarray(workload), args.k)
-        got = np.stack([answers[r].dists for r in rids])
-        if not np.allclose(got, np.asarray(bf_d), rtol=1e-3, atol=1e-3):
-            raise SystemExit("smoke exactness violation")
-        print("smoke exactness vs brute force — OK")
+        if sv["failed"]:
+            raise SystemExit(f"smoke: {sv['failed']} requests failed")
+        for k in sorted(set(ks)):
+            rows = [i for i, kk in enumerate(ks) if kk == k]
+            bf_d, _ = brute_force_knn(
+                data, jax.numpy.asarray(workload[rows]), k)
+            got = np.stack([answers[rids[i]].dists for i in rows])
+            if not np.allclose(got, np.asarray(bf_d), rtol=1e-3, atol=1e-3):
+                raise SystemExit(f"smoke exactness violation at k={k}")
+        print(f"smoke exactness vs brute force — OK "
+              f"(k groups: {sorted(set(ks))})")
 
 
 if __name__ == "__main__":

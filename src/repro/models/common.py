@@ -99,6 +99,23 @@ def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
     return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
 
 
+def last_token_slice(x: jax.Array, batch: dict) -> jax.Array:
+    """(B, 1, D) hidden state at each sequence's last *real* token.
+
+    Ragged serving waves right-pad ``batch["tokens"]`` and pass
+    ``batch["lens"]`` (B,) with the true prompt lengths; the logits the
+    sampler needs then live at column ``lens - 1`` (plus any frontend
+    prefix — e.g. VLM patch embeddings — preceding the tokens), not at
+    the padded final column. Without ``lens`` this is ``x[:, -1:]``.
+    """
+    lens = batch.get("lens")
+    if lens is None:
+        return x[:, -1:]
+    off = x.shape[1] - batch["tokens"].shape[1]
+    idx = off + jnp.asarray(lens, jnp.int32) - 1
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
+
+
 def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
            w_down: jax.Array) -> jax.Array:
     g = jnp.dot(x, w_gate.astype(x.dtype))

@@ -227,7 +227,8 @@ def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
         x = x + C.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                          p["mlp"]["w_down"])
 
-    x = C.rms_norm(x[:, -1:], params["ln_final"], cfg.norm_eps)
+    x = C.rms_norm(C.last_token_slice(x, batch), params["ln_final"],
+                   cfg.norm_eps)
     logits = jnp.dot(x, params["lm_head"].astype(dtype),
                      preferred_element_type=jnp.float32)
     # NOTE: ring-buffer decode assumes slot = pos % window; prefill wrote the

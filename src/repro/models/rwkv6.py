@@ -212,7 +212,8 @@ def forward(params: dict, batch: dict, cfg: ArchConfig):
 def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
     x = _embed(params, batch["tokens"], cfg)
     x, cache = _run(params, x, cache, cfg)
-    x = C.layer_norm(x[:, -1:], params["lnf_w"], params["lnf_b"], cfg.norm_eps)
+    x = C.layer_norm(C.last_token_slice(x, batch),
+                     params["lnf_w"], params["lnf_b"], cfg.norm_eps)
     logits = jnp.dot(x, params["lm_head"].astype(x.dtype),
                      preferred_element_type=jnp.float32)
     cache["pos"] = jnp.full((batch["tokens"].shape[0],),

@@ -188,7 +188,8 @@ def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
         ks = jnp.stack([o[0] for o in outs])
         vs = jnp.stack([o[1] for o in outs])
     x = C.rms_norm(x, params["ln_final"], cfg.norm_eps)
-    logits = jnp.dot(x[:, -1:], params["lm_head"].astype(dtype),
+    logits = jnp.dot(C.last_token_slice(x, batch),
+                     params["lm_head"].astype(dtype),
                      preferred_element_type=jnp.float32)
     smax = cache["k"].shape[2]
     if cfg.window and s > smax:                      # keep last window only

@@ -206,7 +206,8 @@ def prefill(params: dict, batch: dict, cfg: ArchConfig, cache: dict):
             x, ys = layer(x, jax.tree.map(lambda a: a[i], params["dec"]))
             outs.append(ys)
         sk, sv, mk, mv = (jnp.stack([o[j] for o in outs]) for j in range(4))
-    x = C.layer_norm(x[:, -1:], params["ln_dec_w"], params["ln_dec_b"],
+    x = C.layer_norm(C.last_token_slice(x, batch),
+                     params["ln_dec_w"], params["ln_dec_b"],
                      cfg.norm_eps)
     logits = jnp.dot(x, params["embed"].T.astype(dtype),
                      preferred_element_type=jnp.float32)

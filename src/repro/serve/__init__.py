@@ -1,4 +1,4 @@
 from repro.serve.engine import (  # noqa: F401
-    KnnAnswer, KnnServeConfig, KnnServeEngine, ServeConfig, ServeEngine,
-    SlotQueue, greedy_sample,
+    KnnAnswer, KnnFailure, KnnServeConfig, KnnServeEngine, QueueFull,
+    ServeConfig, ServeEngine, SlotQueue, greedy_sample,
 )

@@ -111,17 +111,20 @@ class ServeEngine(SlotQueue):
                               "extras": extras or {}})
 
     def _prefill_batch(self, requests: list[dict]):
-        """Left-pad-free batched prefill: all prompts padded to max length
-        with per-request loss of left context avoided by right-aligning is
-        unnecessary for greedy decoding benchmarks — prompts here are
-        equal-length by construction of the drivers; ragged support pads with
-        token 0 and masks in sampling (position bookkeeping via cache.pos)."""
+        """Batched prefill over ragged prompts: shorter prompts are
+        right-padded with token 0 to the batch max. ``batch["lens"]``
+        carries each request's real prompt length so the model projects
+        logits at position ``lens[i]-1`` — sampling from the batch-max
+        column would read a pad slot for any shorter prompt."""
         b = len(requests)
-        maxlen = max(r["prompt"].shape[0] for r in requests)
+        lens = np.array([r["prompt"].shape[0] for r in requests], np.int32)
+        maxlen = int(lens.max())
         toks = np.zeros((b, maxlen), np.int32)
         for i, r in enumerate(requests):
             toks[i, :r["prompt"].shape[0]] = r["prompt"]
         batch = {"tokens": jnp.asarray(toks)}
+        if lens.min() != maxlen:
+            batch["lens"] = jnp.asarray(lens)
         for k in requests[0]["extras"]:
             batch[k] = jnp.stack([jnp.asarray(r["extras"][k]) for r in requests])
         cache = self.model.init_cache(self.cfg, b, self.scfg.max_seq)
@@ -134,6 +137,9 @@ class ServeEngine(SlotQueue):
         while self._queue:
             wave = self._take_wave(scfg.batch_slots)
             logits, cache = self._prefill_batch(wave)
+            # prefill projects each row's *last real token* (causal attention
+            # keeps position lens[i]-1 independent of the pads to its right),
+            # so logits[:, -1] is the correct sampling column for every row
             tok = greedy_sample(logits[:, -1], temperature=scfg.temperature)
             out = [[int(t)] for t in np.asarray(tok)]
             live = np.ones(len(wave), bool)
@@ -158,10 +164,30 @@ class ServeEngine(SlotQueue):
 # kNN query serving
 # ---------------------------------------------------------------------------
 
+class QueueFull(RuntimeError):
+    """Admission control rejected a ``submit``: the pending queue is at
+    ``KnnServeConfig.max_queue``. The backpressure signal — callers should
+    serve a wave (``step``) or drain before resubmitting."""
+
+
 @dataclasses.dataclass(frozen=True)
 class KnnServeConfig:
     batch_slots: int = 32          # queries per wave (the slot pool)
     k: int | None = None           # None -> the backend's configured k
+    wave: bool = False             # serve waves through the fused wave path
+    max_queue: int | None = None   # admission bound; None = unbounded
+    pack: str = "fifo"             # wave packing: "fifo" | "difficulty"
+
+    def __post_init__(self):
+        if not isinstance(self.batch_slots, int) or self.batch_slots < 1:
+            raise ValueError(f"batch_slots={self.batch_slots!r}; "
+                             "expected an int >= 1")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue={self.max_queue!r}; expected None "
+                             "or an int >= 1")
+        if self.pack not in ("fifo", "difficulty"):
+            raise ValueError(f"pack={self.pack!r}; expected 'fifo' or "
+                             "'difficulty'")
 
 
 class KnnAnswer(NamedTuple):
@@ -170,64 +196,154 @@ class KnnAnswer(NamedTuple):
     path: int                      # access path taken (-1 when unknown)
 
 
+class KnnFailure(NamedTuple):
+    """Claimable per-request failure (``poll``/``drain`` hand it out like
+    an answer): the request was invalid or the engine rejected it, and the
+    rest of its wave was served normally."""
+    error: str                     # "ExceptionType: message"
+
+
 class KnnServeEngine(SlotQueue):
     """Continuous-batching front end for a :class:`QueryEngine`.
 
     ``submit`` enqueues one query series and returns a request id; ``step``
-    serves one wave of up to ``batch_slots`` queued queries through the
-    engine (the wave is padded to the slot count, so a long-running session
-    compiles exactly one plan per (k, slot-count)); ``drain`` steps until
-    the queue is empty and returns every completed answer.
+    serves one wave of up to ``batch_slots`` *compatible* queued queries
+    through the engine (the wave is padded to the slot count, so a
+    long-running session compiles exactly one plan per (k, slot-count));
+    ``drain`` steps until the queue is empty and returns every completed
+    answer.
+
+    Mixed traffic: requests are grouped into compatible sub-waves by their
+    ``(k, overrides)`` signature — the head request's signature selects each
+    wave, so interleaved k=1/k=10 submits serve in submission order, one
+    signature per step, instead of erroring. A request that still fails solo
+    (wrong series length, bad override) completes as a claimable
+    :class:`KnnFailure` and never blocks the traffic behind it.
+
+    QoS knobs (:class:`KnnServeConfig`): ``wave=True`` routes each wave
+    through the engine's fused wave plan (shared descent/BSF/disk fetches);
+    ``max_queue`` bounds the pending queue, rejecting further submits with
+    :class:`QueueFull` (the backpressure signal); ``pack="difficulty"``
+    packs each wave with the compatible peers closest in predicted cost to
+    the oldest request (``QueryEngine.estimate_difficulty``), so cheap
+    queries are not latency-coupled to expensive wave-mates — while the
+    oldest request always ships first, which is the anti-starvation
+    guarantee.
     """
 
     def __init__(self, engine, cfg: KnnServeConfig | None = None):
         super().__init__()
         self.engine = engine
         self.cfg = cfg or KnnServeConfig()
+        self._rejected = 0
+        self._failed = 0
+        self._waves = 0
+        self._scored = 0
+        self._score_sum = 0.0
 
     def submit(self, query: np.ndarray, k: int | None = None,
                **overrides: Any) -> int:
         q = np.asarray(query)
         if q.ndim != 1:
             raise ValueError(f"submit() takes one query series, got {q.shape}")
-        return self._enqueue({"q": q, "k": k, "ov": overrides})
+        if (self.cfg.max_queue is not None
+                and len(self._queue) >= self.cfg.max_queue):
+            self._rejected += 1
+            raise QueueFull(f"pending queue at max_queue="
+                            f"{self.cfg.max_queue}; step() or drain() first")
+        return self._enqueue({"q": q, "k": k, "ov": overrides, "score": None})
+
+    @staticmethod
+    def _sig(r: dict) -> tuple:
+        """Compatibility signature: requests sharing it can ride one wave
+        (one compiled plan, one SearchConfig)."""
+        return (r["k"], tuple(sorted(r["ov"].items())))
+
+    def _score(self, reqs: list[dict]) -> None:
+        """Attach a predicted-cost score to each unscored request (cached on
+        the payload — a request is scored at most once per lifetime)."""
+        todo = [r for r in reqs if r["score"] is None]
+        if not todo:
+            return
+        try:
+            scores = self.engine.estimate_difficulty(
+                np.stack([r["q"] for r in todo]))
+        except Exception:   # ragged/invalid queries surface at serve time
+            scores = None
+        if scores is None:
+            for r in todo:
+                r["score"] = 0.0
+            return
+        for r, s in zip(todo, np.asarray(scores)):
+            r["score"] = float(s)
+            self._score_sum += float(s)
+            self._scored += 1
+
+    def _next_wave(self) -> list[dict]:
+        """Up to ``batch_slots`` compatible requests. The head (oldest)
+        request's signature selects the sub-wave; with ``pack="difficulty"``
+        it is joined by the compatible peers closest to its predicted cost
+        instead of strict FIFO order."""
+        if not self._queue:
+            return []
+        head = self._queue[0]
+        sig = self._sig(head)
+        compat = [r for r in self._queue if self._sig(r) == sig]
+        if self.cfg.pack == "difficulty" and len(compat) > self.cfg.batch_slots:
+            self._score(compat)
+            peers = sorted(compat[1:],
+                           key=lambda r: abs(r["score"] - head["score"]))
+            wave = [head] + peers[:self.cfg.batch_slots - 1]
+        else:
+            wave = compat[:self.cfg.batch_slots]
+        taken = {id(r) for r in wave}
+        self._queue = [r for r in self._queue if id(r) not in taken]
+        return wave
 
     def step(self) -> int:
-        """Serve one wave; returns the number of requests answered. A wave
-        that fails (mixed configs, bad override, wrong query length) is put
-        back on the queue before the error propagates — no request is lost."""
-        slots = self.cfg.batch_slots
-        wave = self._take_wave(slots)
+        """Serve one compatible sub-wave; returns the number of requests
+        answered (failures included — each completes as a claimable
+        :class:`KnnFailure`). Never livelocks: every selected request
+        leaves the queue with a result, success or not."""
+        wave = self._next_wave()
         if not wave:
             return 0
         try:
-            # per-request k/overrides are grouped per wave: requests in one
-            # wave must agree (the common case is a uniform serving config)
-            k = wave[0]["k"] if wave[0]["k"] is not None else self.cfg.k
-            ov = wave[0]["ov"]
-            if any(r["k"] != wave[0]["k"] or r["ov"] != ov for r in wave[1:]):
-                raise ValueError("mixed k/overrides within one wave; "
-                                 "submit uniform waves or use separate engines")
-            q = np.stack([r["q"] for r in wave])
-            if len(wave) < slots:  # pad the partial tail wave to the slot pool
-                q = np.concatenate(
-                    [q, np.zeros((slots - len(wave), q.shape[1]), q.dtype)])
-            res = self.engine.knn(jnp.asarray(q), k=k,
-                                  valid_rows=len(wave), **ov)
+            self._serve(wave)
         except Exception:
-            self._requeue(wave)
-            raise
+            # head-of-line isolation: one bad request (wrong length, bad
+            # override) must not poison its wave-mates — serve each member
+            # solo, completing the ones that still fail as failures
+            for r in wave:
+                try:
+                    self._serve([r])
+                except Exception as e:
+                    self._failed += 1
+                    self._complete(r["id"],
+                                   KnnFailure(f"{type(e).__name__}: {e}"))
+        self._waves += 1
+        return len(wave)
+
+    def _serve(self, wave: list[dict]) -> None:
+        slots = self.cfg.batch_slots
+        k = wave[0]["k"] if wave[0]["k"] is not None else self.cfg.k
+        ov = wave[0]["ov"]
+        q = np.stack([r["q"] for r in wave])
+        if len(wave) < slots:  # pad the partial wave to the slot pool
+            q = np.concatenate(
+                [q, np.zeros((slots - len(wave), q.shape[1]), q.dtype)])
+        res = self.engine.knn(jnp.asarray(q), k=k, valid_rows=len(wave),
+                              wave=self.cfg.wave, **ov)
         dists = np.asarray(res.dists)
         ids = np.asarray(res.ids)
         paths = np.asarray(res.path)
         for i, r in enumerate(wave):
             self._complete(r["id"], KnnAnswer(
                 dists=dists[i], ids=ids[i], path=int(paths[i])))
-        return len(wave)
 
-    def drain(self) -> dict[int, KnnAnswer]:
+    def drain(self) -> dict[int, KnnAnswer | KnnFailure]:
         """Serve until the queue is empty; returns (and claims) every
-        unclaimed completed answer."""
+        unclaimed completed answer (failed requests as KnnFailure)."""
         while self.step():
             pass
         return self._collect()
@@ -237,5 +353,14 @@ class KnnServeEngine(SlotQueue):
         t["serving"] = {"pending": self.pending(),
                         "served": self._served,
                         "unclaimed": len(self._results),
-                        "batch_slots": self.cfg.batch_slots}
+                        "batch_slots": self.cfg.batch_slots,
+                        "waves": self._waves,
+                        "wave_mode": self.cfg.wave,
+                        "pack": self.cfg.pack,
+                        "max_queue": self.cfg.max_queue,
+                        "rejected": self._rejected,
+                        "failed": self._failed,
+                        "difficulty_scored": self._scored,
+                        "difficulty_mean": (self._score_sum
+                                            / max(self._scored, 1))}
         return t

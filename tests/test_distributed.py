@@ -134,6 +134,28 @@ class TestServeEngine:
         assert set(out) == set(ids)
         assert all(len(v) == 8 for v in out.values())
 
+    def test_ragged_wave_first_token_matches_solo(self, key):
+        # regression: _prefill_batch right-pads ragged prompts and run()
+        # sampled logits[:, -1] — for any prompt shorter than the batch max
+        # that column is a *pad* position, so the first generated token was
+        # wrong. prefill now projects each row's last real token
+        # (batch["lens"]), which must reproduce the solo unpadded answer.
+        cfg = get_smoke("codeqwen1.5-7b")
+        model = get_model(cfg)
+        params = model.init(key, cfg)
+        prompts = [np.array([1, 2, 3, 4, 5, 6]), np.array([7, 8, 9]),
+                   np.array([4, 5])]
+        eng = ServeEngine(model, cfg, params,
+                          ServeConfig(max_seq=32, batch_slots=4,
+                                      max_new_tokens=1))
+        rids = [eng.submit(p) for p in prompts]
+        out = eng.run()
+        for p, rid in zip(prompts, rids):
+            cache = model.init_cache(cfg, 1, 32)
+            lg, _ = model.prefill(params, {"tokens": jnp.asarray(p)[None]},
+                                  cfg, cache)
+            assert out[rid][0] == int(jnp.argmax(lg[0, -1]))
+
     def test_greedy_matches_manual_decode(self, key):
         cfg = get_smoke("codeqwen1.5-7b")
         model = get_model(cfg)

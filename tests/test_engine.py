@@ -19,7 +19,8 @@ from repro.core import (BuildConfig, EngineConfig, HerculesIndex, IndexConfig,
                         SearchConfig, ShardedBackend, brute_force_knn,
                         make_backend)
 from repro.data import make_query_workload, random_walks
-from repro.serve import KnnAnswer, KnnServeConfig, KnnServeEngine
+from repro.serve import (KnnAnswer, KnnFailure, KnnServeConfig,
+                         KnnServeEngine, QueueFull)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -282,18 +283,86 @@ class TestKnnServeEngine:
         assert serve.step() == 2 and serve.pending() == 0
         assert serve.step() == 0
 
-    def test_mixed_overrides_in_wave_rejected(self, data):
+    def test_mixed_k_groups_into_sub_waves(self, data):
+        # regression: interleaved k=1/k=2 traffic used to raise ValueError
+        # and requeue the wave at the head — drain() then re-selected the
+        # same incompatible wave forever (livelock). Mixed signatures must
+        # instead serve as compatible sub-waves, in submission order.
         eng = QueryEngine(LocalBackend(HerculesIndex.build(data, CFG)))
         serve = KnnServeEngine(eng, KnnServeConfig(batch_slots=4))
         q = np.asarray(make_query_workload(
-            jax.random.PRNGKey(9), data, 2, "5%"))
-        r0 = serve.submit(q[0], k=1)
-        serve.submit(q[1], k=2)
-        with pytest.raises(ValueError, match="mixed"):
-            serve.step()
-        # a failed wave is requeued, not dropped
-        assert serve.pending() == 2
-        # after the bad request is out of the wave, the first one serves
-        serve2 = KnnServeEngine(eng, KnnServeConfig(batch_slots=1))
-        r0 = serve2.submit(q[0], k=1)
-        assert serve2.step() == 1 and serve2.poll(r0) is not None
+            jax.random.PRNGKey(9), data, 10, "5%"))
+        ks = [1 if i % 2 == 0 else 2 for i in range(10)]
+        rids = [serve.submit(qi, k=k) for qi, k in zip(q, ks)]
+        # head is k=1: its sub-wave takes the 4 oldest k=1 requests only
+        assert serve.step() == 4 and serve.pending() == 6
+        answers = serve.drain()
+        assert set(answers) == set(rids) and serve.pending() == 0
+        for k in (1, 2):
+            rows = [i for i, kk in enumerate(ks) if kk == k]
+            got = np.stack([answers[rids[i]].dists for i in rows])
+            assert got.shape == (len(rows), k)
+            bf_d, _ = brute_force_knn(data, jnp.asarray(q[rows]), k)
+            np.testing.assert_allclose(got, np.asarray(bf_d),
+                                       rtol=1e-3, atol=1e-3)
+        # 4 sub-waves: 4×k=1, then 4×k=2, then the k=1 and k=2 stragglers
+        sv = serve.telemetry()["serving"]
+        assert sv["failed"] == 0 and sv["waves"] == 4
+
+    def test_poisoned_request_fails_alone(self, data):
+        # regression: one invalid request used to poison its whole wave
+        # (np.stack raised before any member was served). It must now
+        # complete as a claimable KnnFailure while its wave-mates answer.
+        eng = QueryEngine(LocalBackend(HerculesIndex.build(data, CFG)))
+        serve = KnnServeEngine(eng, KnnServeConfig(batch_slots=4))
+        good = np.asarray(make_query_workload(
+            jax.random.PRNGKey(10), data, 3, "5%"))
+        g0 = serve.submit(good[0])
+        bad = serve.submit(np.zeros(LEN // 2, np.float32))  # wrong length
+        g1 = serve.submit(good[1])
+        g2 = serve.submit(good[2])
+        answers = serve.drain()
+        assert serve.pending() == 0
+        assert isinstance(answers[bad], KnnFailure)
+        assert "ValueError" in answers[bad].error
+        got = np.stack([answers[r].dists for r in (g0, g1, g2)])
+        bf_d, _ = brute_force_knn(data, jnp.asarray(good), K)
+        np.testing.assert_allclose(got, np.asarray(bf_d),
+                                   rtol=1e-3, atol=1e-3)
+        assert serve.telemetry()["serving"]["failed"] == 1
+
+    def test_admission_control_queue_full(self, data):
+        eng = QueryEngine(LocalBackend(HerculesIndex.build(data, CFG)))
+        serve = KnnServeEngine(
+            eng, KnnServeConfig(batch_slots=2, max_queue=3))
+        q = np.asarray(make_query_workload(
+            jax.random.PRNGKey(11), data, 5, "5%"))
+        for i in range(3):
+            serve.submit(q[i])
+        with pytest.raises(QueueFull):
+            serve.submit(q[3])
+        assert serve.telemetry()["serving"]["rejected"] == 1
+        serve.step()                      # frees two slots
+        serve.submit(q[3])                # backpressure retry succeeds
+        serve.drain()
+        assert serve.pending() == 0
+
+    def test_difficulty_packing_serves_everything(self, data):
+        eng = QueryEngine(LocalBackend(HerculesIndex.build(data, CFG)))
+        serve = KnnServeEngine(
+            eng, KnnServeConfig(batch_slots=4, pack="difficulty"))
+        easy = np.asarray(make_query_workload(
+            jax.random.PRNGKey(12), data, 5, "1%"))
+        hard = np.asarray(make_query_workload(
+            jax.random.PRNGKey(13), data, 5, "ood"))
+        q = np.concatenate([easy, hard])
+        order = [0, 5, 1, 6, 2, 7, 3, 8, 4, 9]   # interleave easy/hard
+        rids = [serve.submit(q[i]) for i in order]
+        answers = serve.drain()
+        assert set(answers) == set(rids) and serve.pending() == 0
+        got = np.stack([answers[r].dists for r in rids])
+        bf_d, _ = brute_force_knn(data, jnp.asarray(q[order]), K)
+        np.testing.assert_allclose(got, np.asarray(bf_d),
+                                   rtol=1e-3, atol=1e-3)
+        sv = serve.telemetry()["serving"]
+        assert sv["pack"] == "difficulty" and sv["difficulty_scored"] == 10

@@ -184,6 +184,54 @@ class TestChunkReader:
         r.close()
 
 
+class TestScheduledChunks:
+    """The wave path's demand-scheduled fetch loop (iter_scheduled_chunks)."""
+    ROWS = np.arange(100 * 8, dtype=np.float32).reshape(100, 8)
+
+    def _reqs(self):
+        return [("a", 0, 10, 16), ("b", 20, 10, 16), ("c", 40, 10, 16),
+                ("d", 60, 10, 16)]
+
+    @pytest.mark.parametrize("mode", PREFETCH_MODES)
+    def test_fetches_in_request_order(self, mode):
+        from repro.data.pipeline import iter_scheduled_chunks
+        with make_chunk_reader(self.ROWS, 32, 8, prefetch=mode) as r:
+            got = list(iter_scheduled_chunks(r, self._reqs()))
+        assert [t for t, _ in got] == ["a", "b", "c", "d"]
+        for (tag, rows), (_, start, cnt, pad) in zip(got, self._reqs()):
+            assert rows.shape == (pad, 8)
+            assert np.array_equal(np.asarray(rows)[:cnt],
+                                  self.ROWS[start:start + cnt])
+
+    def test_still_needed_checked_at_submit_time(self):
+        """A request whose consumers were satisfied while earlier blocks
+        were in flight is dropped without a disk read; the drop decision
+        runs per-request, as late as the lookahead window allows."""
+        from repro.data.pipeline import iter_scheduled_chunks
+        dead = set()
+        checked = []
+
+        def still_needed(tag):
+            checked.append(tag)
+            return tag not in dead
+
+        with make_chunk_reader(self.ROWS, 32, 8, prefetch="sync") as r:
+            out = []
+            for tag, rows in iter_scheduled_chunks(
+                    r, self._reqs(), still_needed=still_needed, lookahead=1):
+                out.append(tag)
+                if tag == "a":
+                    dead.add("c")   # bound tightened: run c no longer needed
+        assert out == ["a", "b", "d"]
+        assert checked == ["a", "b", "c", "d"]
+
+    def test_lookahead_validation(self):
+        from repro.data.pipeline import iter_scheduled_chunks
+        with make_chunk_reader(self.ROWS, 32, 8, prefetch="sync") as r:
+            with pytest.raises(ValueError, match="lookahead"):
+                list(iter_scheduled_chunks(r, self._reqs(), lookahead=0))
+
+
 class TestChunkIterators:
     @pytest.mark.parametrize("chunk_size", [7, 64, 100, 1000])
     def test_device_chunks_thread_matches_sync(self, chunk_size):

@@ -1,0 +1,184 @@
+"""Wave-fused multi-query search: parity, sharing, telemetry.
+
+PR 7 acceptance criteria live here:
+  * a wave answer is bit-identical to serving each member through a
+    per-query ``QueryEngine.knn`` call, on every backend (in-memory
+    local/scan/sharded and streamed ooc-scan/ooc-local) — the shared
+    descent, shared BSF matrix and merged leaf-run schedule are pure
+    work-sharing, never an approximation;
+  * on a clustered workload the ooc-local wave path actually shares work:
+    ``runs_deduped > 0`` and the wave streams strictly fewer rows than the
+    same queries served independently;
+  * wave plans and per-query plans are distinct plan-cache entries.
+"""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BuildConfig, HerculesIndex, IndexConfig, LocalBackend,
+                        QueryEngine, ScanBackend, SearchConfig, exact_knn,
+                        make_backend, make_disk_backend, wave_knn)
+from repro.data import make_query_workload, random_walks
+from repro.storage import save_index
+
+jax.config.update("jax_platform_name", "cpu")
+
+NUM, LEN, K = 2048, 64, 3
+CFG = IndexConfig(build=BuildConfig(leaf_capacity=64),
+                  search=SearchConfig(k=K, l_max=4, chunk=256,
+                                      scan_block=256))
+
+
+@pytest.fixture(scope="module")
+def data():
+    return random_walks(jax.random.PRNGKey(0), NUM, LEN)
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    easy = make_query_workload(jax.random.PRNGKey(1), data, 4, "1%")
+    hard = make_query_workload(jax.random.PRNGKey(2), data, 4, "ood")
+    return jnp.concatenate([easy, hard])
+
+
+@pytest.fixture(scope="module")
+def clustered(data):
+    """Queries perturbed from nearby dataset rows: wave members share home
+    leaves, so the merged leaf-run schedule has real overlap to dedup."""
+    rows = np.asarray(data)[100:108]
+    noise = 0.01 * np.asarray(
+        jax.random.normal(jax.random.PRNGKey(3), rows.shape))
+    return jnp.asarray(rows + noise)
+
+
+@pytest.fixture(scope="module")
+def index(data):
+    return HerculesIndex.build(data, CFG)
+
+
+@pytest.fixture(scope="module")
+def saved_dir(index, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("wave") / "idx")
+    save_index(index, path)
+    return path
+
+
+def _per_query(engine, queries, **kw):
+    outs = [engine.knn(q[None], **kw) for q in np.asarray(queries)]
+    return types.SimpleNamespace(
+        dists=np.concatenate([np.asarray(r.dists) for r in outs]),
+        ids=np.concatenate([np.asarray(r.ids) for r in outs]),
+        path=np.concatenate([np.asarray(r.path) for r in outs]))
+
+
+def _assert_wave_parity(engine, queries):
+    solo = _per_query(engine, queries)
+    wave = engine.knn(queries, wave=True)
+    assert np.array_equal(np.asarray(wave.dists), solo.dists)
+    assert np.array_equal(np.sort(np.asarray(wave.ids), axis=1),
+                          np.sort(solo.ids, axis=1))
+
+
+class TestCoreWaveKnn:
+    def test_wave_knn_matches_exact_knn_bitwise(self, index, queries):
+        base = CFG.search
+        cfgs = [base,
+                dataclasses.replace(base, use_sax=False),
+                dataclasses.replace(base, force_scan=True),
+                dataclasses.replace(base, adaptive=False),
+                dataclasses.replace(base, refine_select="topk")]
+        for cfg in cfgs:
+            wave = wave_knn(index.tree, index.layout, queries, cfg,
+                            index.max_depth)
+            for i, q in enumerate(queries):
+                solo = exact_knn(index.tree, index.layout, q[None], cfg,
+                                 index.max_depth)
+                assert np.array_equal(np.asarray(wave.dists[i]),
+                                      np.asarray(solo.dists[0])), cfg
+                assert np.array_equal(np.sort(np.asarray(wave.ids[i])),
+                                      np.sort(np.asarray(solo.ids[0]))), cfg
+                assert int(wave.path[i]) == int(solo.path[0]), cfg
+
+
+class TestEngineWaveParity:
+    def test_local(self, index, queries):
+        _assert_wave_parity(QueryEngine(LocalBackend(index)), queries)
+
+    def test_scan(self, data, queries):
+        _assert_wave_parity(
+            QueryEngine(ScanBackend(data, CFG.search)), queries)
+
+    def test_sharded(self, data, queries):
+        _assert_wave_parity(
+            QueryEngine(make_backend("sharded", data, index_config=CFG,
+                                     num_shards=1)), queries)
+
+    def test_ooc_scan(self, saved_dir, queries):
+        eng = QueryEngine(make_disk_backend(
+            "ooc-scan", saved_dir, search=CFG.search, memory_budget_mb=1.0))
+        _assert_wave_parity(eng, queries)
+        st = eng.stats()
+        assert st["wave_calls"] == 1 and st["wave_rows_shared"] > 0
+
+    def test_ooc_local(self, saved_dir, queries):
+        for search in (CFG.search,
+                       dataclasses.replace(CFG.search, use_sax=False)):
+            eng = QueryEngine(make_disk_backend(
+                "ooc-local", saved_dir, search=search, memory_budget_mb=1.0))
+            _assert_wave_parity(eng, queries)
+            assert eng.stats()["wave_calls"] == 1
+
+
+class TestWaveSharing:
+    def test_clustered_wave_dedups_runs_and_streams_less(self, saved_dir,
+                                                         clustered):
+        eng = QueryEngine(make_disk_backend(
+            "ooc-local", saved_dir, search=CFG.search, memory_budget_mb=1.0))
+        solo = _per_query(eng, clustered)
+        rows_solo = eng.stats()["rows_streamed"]
+        assert eng.stats()["runs_deduped"] == 0   # per-query: nothing shared
+
+        wave = eng.knn(clustered, wave=True)
+        st = eng.stats()
+        rows_wave = st["rows_streamed"] - rows_solo
+        # exactness first, then the sharing pins
+        assert np.array_equal(np.asarray(wave.dists), solo.dists)
+        assert st["runs_deduped"] > 0
+        assert st["wave_rows_shared"] > 0
+        assert rows_wave < rows_solo
+
+    def test_engine_telemetry_surfaces_ooc_wave_counters(self, saved_dir,
+                                                         clustered):
+        eng = QueryEngine(make_disk_backend(
+            "ooc-local", saved_dir, search=CFG.search, memory_budget_mb=1.0))
+        eng.knn(clustered, wave=True)
+        tele = eng.telemetry()
+        assert tele["wave_calls"] == 1
+        ooc = tele["ooc"]
+        for key in ("rows_streamed", "wave_calls", "wave_rows_shared",
+                    "runs_deduped", "runs_skipped_bsf"):
+            assert key in ooc
+        assert ooc["wave_calls"] == 1
+
+    def test_in_memory_telemetry_has_no_ooc_section(self, index, queries):
+        eng = QueryEngine(LocalBackend(index))
+        eng.knn(queries, wave=True)
+        assert "ooc" not in eng.telemetry()
+
+
+class TestWavePlanCache:
+    def test_wave_and_solo_plans_are_distinct(self, index, queries):
+        eng = QueryEngine(LocalBackend(index))
+        eng.knn(queries)
+        eng.knn(queries, wave=True)
+        pc = eng.telemetry()["plan_cache"]
+        assert pc["misses"] == 2
+        # repeats of either flavour hit their own plan
+        eng.knn(queries)
+        eng.knn(queries, wave=True)
+        pc = eng.telemetry()["plan_cache"]
+        assert (pc["misses"], pc["hits"]) == (2, 2)
