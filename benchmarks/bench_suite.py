@@ -327,6 +327,46 @@ def bench_persistence(num=16384, n=128, nq=8, k=1, chunk=4096,
                  read_wait_seconds=round(st["read_wait_seconds"], 4),
                  overlap_blocks=int(st["overlap_blocks"]))
 
+        # format v3 leaf codecs: one store per codec over the same
+        # collection, streamed through ooc-scan. ``bytes_streamed`` is the
+        # bandwidth the codec buys (encoded stream + float32 re-check of
+        # the candidate pool); answers are asserted exact under every
+        # codec, so the column is a pure cost, not a quality trade.
+        from repro.storage import Hercules
+        from repro.storage.codecs import list_codecs
+
+        codec_root = path + "_codecs"
+        raw_bytes = None
+        for cname in list_codecs():
+            cpath = os.path.join(codec_root, cname.replace("-", "_"))
+            if not os.path.exists(os.path.join(cpath, "manifest.json")):
+                Hercules.create(cpath, cfg, data=np.asarray(data),
+                                chunk_size=chunk, codec=cname,
+                                overwrite=True).close()
+            ooc = make_disk_backend("ooc-scan", cpath, search=scfg,
+                                    memory_budget_mb=memory_budget_mb)
+            r = ooc.knn(q, k=k)
+            _check_exact(r.dists, data, q, k)
+            per_call = dict(ooc.stats())  # one call's streaming traffic
+            t = time_call(lambda: ooc.knn(q, k=k))
+            if cname == "raw":
+                raw_bytes = per_call["bytes_streamed"]
+            ratio = per_call["bytes_streamed"] / max(raw_bytes, 1)
+            rows_per_s = per_call["rows_streamed"] / (t / 1e6)
+            emit(f"codec_{cname.replace('-', '_')}_ooc_scan", t / nq,
+                 f"bytes={per_call['bytes_streamed']}"
+                 f";bytes_vs_raw={ratio:.3f}"
+                 f";series_per_s={rows_per_s:.0f}"
+                 f";fallbacks={per_call['codec_fallbacks']}",
+                 codec=cname,
+                 bytes_streamed=int(per_call["bytes_streamed"]),
+                 bytes_vs_raw=round(ratio, 4),
+                 series_per_second=round(rows_per_s, 1),
+                 codec_refine_rows=int(per_call["codec_refine_rows"]),
+                 codec_fallbacks=int(per_call["codec_fallbacks"]))
+        if tmp is not None:
+            shutil.rmtree(codec_root, ignore_errors=True)
+
         if load_path is None:
             # incremental ingest: append a journal segment (no base rewrite)
             # then compact it into the next base generation — the insert-

@@ -72,20 +72,32 @@ def iter_scopes(tree: ast.Module) -> Iterator[ast.AST]:
 
 
 #: Identifier components that mark a value as a mapped segment / reusable
-#: slot buffer by naming convention (`lrd_rows`, `mmap_view`, `slot`, ...).
+#: slot buffer by naming convention (`lrd_rows`, `mmap_view`, `slot`,
+#: `enc_block`, ...). ``enc`` is the format-v3 encoded sidecar — memory-
+#: mapped exactly like lrd/lsd, so the same aliasing hazards apply.
 VIEW_NAME_COMPONENTS = {
-    "lrd", "lsd", "mmap", "memmap", "slot", "slots", "view", "views",
+    "lrd", "lsd", "enc", "mmap", "memmap", "slot", "slots", "view", "views",
 }
 
-#: Attribute reads that hand out mapped segments (`saved.lrd`, `idx.lsd`).
-VIEW_ATTRS = {"lrd", "lsd"}
+#: Attribute reads that hand out mapped segments (`saved.lrd`, `idx.lsd`,
+#: `saved.enc`).
+VIEW_ATTRS = {"lrd", "lsd", "enc"}
 
 #: Method calls that hand out mapped segments or borrowed buffers.
 #: ``chunk`` is here because the ChunkSource protocol documents that
 #: ``source.chunk(lo, hi)`` may return a view of the underlying (possibly
 #: memory-mapped) buffer; ``_journal_rows`` returns mmap-mode np.load
 #: results per segment.
-VIEW_METHODS = {"_mapped", "_lrd", "_lsd", "chunk", "_journal_rows"}
+VIEW_METHODS = {"_mapped", "_lrd", "_lsd", "_enc", "chunk", "_journal_rows"}
+
+#: Method calls whose *result* is always a fresh buffer even when the
+#: receiver/arguments are mapped segments — the codec hot path's cleansers.
+#: ``decode`` reconstructs float32 rows from encoded bytes (the Codec
+#: protocol guarantees fresh arrays; storage/codecs.py), ``encode``
+#: likewise materializes the byte rows, and ``np.take`` is the
+#: copy-guaranteed gather (unlike ``x[idx]``, whose copy-vs-view outcome
+#: this model has to guess from the index expression).
+CLEANSING_CALLS = {"decode", "encode", "take"}
 
 #: ndarray methods that return *views* of their receiver.
 VIEW_PRESERVING_METHODS = {
@@ -119,10 +131,11 @@ class TaintTracker:
       ``.T``, and subscripts whose index is a slice or a constant
       (``x[lo:hi]``, ``x[0]`` are views).
     * **Cleansers** — ``np.array`` (copies by default), ``.copy()``,
-      ``.astype()``, and subscripts whose index is a *computed expression*
-      (``x[perm]`` is fancy indexing, which copies). ``x[i]`` inside a
-      loop is mis-modelled as a copy; acceptable — scalar-row extraction
-      has never been the bug.
+      ``.astype()``, codec ``.decode()`` / ``.encode()`` and ``np.take``
+      (:data:`CLEANSING_CALLS` — always fresh buffers), and subscripts
+      whose index is a *computed expression* (``x[perm]`` is fancy
+      indexing, which copies). ``x[i]`` inside a loop is mis-modelled as
+      a copy; acceptable — scalar-row extraction has never been the bug.
     """
 
     def __init__(self, scope: ast.AST):
@@ -182,9 +195,14 @@ class TaintTracker:
                 return False
             return _subscript_is_view(node.slice)
         if isinstance(node, ast.Call):
+            tail = last_attr(call_name(node))
+            if tail in CLEANSING_CALLS:
+                # decode/encode/take produce fresh buffers no matter how
+                # tainted their inputs — checked before the sources so a
+                # view-named receiver (`enc.decode(...)`) cannot re-taint
+                return False
             if self._call_is_source(node):
                 return True
-            tail = last_attr(call_name(node))
             if tail in ("asarray", "ascontiguousarray") and node.args:
                 # np.asarray of a view is (usually) still the same view;
                 # jnp.asarray is handled as a sink by alias_transfer.

@@ -29,7 +29,43 @@ on every backend (``tests/test_store.py``).
 Purely in-memory serving (no directory on disk) still goes through
 :func:`make_backend` + :class:`QueryEngine`; ``local`` | ``scan`` |
 ``scan-mxu`` | ``sharded`` all answer exactly and interchangeably, and
-:class:`KnnServeEngine` adds slot-based submit/poll/drain serving.
+:class:`KnnServeEngine` adds slot-based submit/poll/drain serving. All
+servable names live in the one :data:`BACKENDS` registry
+(``backend_names("memory")`` / ``backend_names("disk")`` are its two
+construction-path views; the ``BACKEND_NAMES`` / ``DISK_BACKEND_NAMES``
+tuples remain as deprecated aliases).
+
+**Compressed leaves (format v3).** ``Hercules.create(..., codec="bf16")``
+(or ``compact(codec=...)`` to migrate) stores an encoded sidecar next to
+the float32 rows; the out-of-core backends stream the encoded bytes and
+re-check candidates against full precision, so answers stay bit-identical
+while the stream shrinks to the codec's ratio. The :class:`Codec` protocol
+plus :func:`register_codec` / :func:`list_codecs` make the codec set
+pluggable; ``SearchConfig.codec`` (``"auto"`` follows the index) selects
+per call and flows through plan-cache keys like every other config field.
+
+**Telemetry.** ``QueryEngine.telemetry()`` returns the :class:`Telemetry`
+dataclass-of-sections (one shape for serving counters, plan-cache, paths,
+pruning, and — for disk backends — streaming/codec counters). The old
+dict keys keep working as deprecated aliases:
+
+======================================  ===================================
+old dict access                         Telemetry field
+======================================  ===================================
+``t["backend"] / ["calls"] /``          same-named top-level fields
+``["queries"] / ["wave_calls"]``
+``t["plan_cache"]["hits" | ...]``       ``t.plan_cache.hits`` ...
+``t["latency_s"]["total" | ...]``       ``t.latency.total`` ...
+``t["paths"]["scan_eapca" | ...]``      ``t.paths.scan_eapca`` ...
+``t["pruning"]["eapca_mean" | ...]``    ``t.pruning.eapca_mean`` ...
+``t["ooc"]["rows_streamed" | ...]``     ``t.ooc.rows_streamed`` ... (the
+                                        section is ``None`` — key absent —
+                                        for in-memory backends; it now also
+                                        carries ``bytes_streamed`` and the
+                                        ``codec_refine_rows`` /
+                                        ``codec_fallbacks`` counters)
+``t["serving"]`` (KnnServeEngine)       ``t.serving``
+======================================  ===================================
 
 Deprecated entry points (kept working; each docstring names its successor):
 
@@ -54,10 +90,12 @@ old surface                             store-API successor
 See README.md for the full tour.
 """
 from repro.core.engine import (  # noqa: F401
-    BACKEND_NAMES, DISK_BACKEND_NAMES, EngineConfig, LocalBackend,
-    OutOfCoreLocalBackend, OutOfCoreScanBackend, QueryEngine, ScanBackend,
-    SearchBackend, ShardedBackend, dense_scan_knn, kernel_scan_knn,
-    make_backend, make_disk_backend,
+    BACKEND_NAMES, BACKENDS, DISK_BACKEND_NAMES, BackendSpec, EngineConfig,
+    LatencyTelemetry, LocalBackend, OocTelemetry, OutOfCoreLocalBackend,
+    OutOfCoreScanBackend, PathsTelemetry, PlanCacheTelemetry,
+    PruningTelemetry, QueryEngine, ScanBackend, SearchBackend,
+    ShardedBackend, Telemetry, backend_names, dense_scan_knn,
+    kernel_scan_knn, make_backend, make_disk_backend, resolve_backend_name,
 )
 from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401
 from repro.core.index import HerculesIndex, IndexConfig  # noqa: F401
@@ -75,7 +113,7 @@ from repro.serve.engine import (  # noqa: F401
     KnnAnswer, KnnFailure, KnnServeConfig, KnnServeEngine, QueueFull,
 )
 from repro.storage import (  # noqa: F401
-    FORMAT_VERSION, Hercules, IndexFormatError, SavedIndex,
-    build_index_streaming, build_index_to_disk, load_index, open_index,
-    save_index,
+    CODEC_CHOICES, Codec, FORMAT_VERSION, Hercules, IndexFormatError,
+    SavedIndex, build_index_streaming, build_index_to_disk, get_codec,
+    list_codecs, load_index, open_index, register_codec, save_index,
 )

@@ -16,10 +16,11 @@ from repro.core.tree import (  # noqa: F401
 # The unified serving surface: every caller above the core answers queries
 # through a backend-agnostic QueryEngine (compiled-plan cache + telemetry).
 from repro.core.engine import (  # noqa: F401
-    BACKEND_NAMES, DISK_BACKEND_NAMES, EngineConfig, LocalBackend,
-    OutOfCoreLocalBackend, OutOfCoreScanBackend, QueryEngine, ScanBackend,
-    SearchBackend, ShardedBackend, dense_scan_knn, kernel_scan_knn,
-    make_backend, make_disk_backend,
+    BACKEND_NAMES, BACKENDS, DISK_BACKEND_NAMES, BackendSpec, EngineConfig,
+    LocalBackend, OutOfCoreLocalBackend, OutOfCoreScanBackend, QueryEngine,
+    ScanBackend, SearchBackend, ShardedBackend, Telemetry, backend_names,
+    dense_scan_knn, kernel_scan_knn, make_backend, make_disk_backend,
+    resolve_backend_name,
 )
 # Kernel execution-mode policy (SearchConfig.kernel_mode values).
 from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401

@@ -421,6 +421,104 @@ def _ooc_refine_block(rows: jax.Array, base: jax.Array, valid: jax.Array,
     return jax.lax.map(one, (queries, d0, p0))
 
 
+# -- codec-aware streaming (format v3 encoded leaves) -----------------------
+#
+# With a lossy codec the streamed bytes are approximations, so decoded
+# distances can only *select* candidates, never answer. Per block we turn
+# each decoded distance d̂ into a sound interval around the true distance
+# using the per-row reconstruction bound e embedded at encode time
+# (||s - ŝ|| <= e, storage/codecs.py):
+#
+#     sqrt(d_true) ∈ [sqrt(d̂) - e, sqrt(d̂) + e]
+#
+# and carry two running sets per query: the k smallest *upper* bounds
+# (a conservative BSF — the kth UB provably upper-bounds the true kth
+# distance) and the _CAND smallest *lower* bounds (the candidate pool).
+# After the stream, candidates are re-checked against the full-precision
+# float32 rows with the exact difference-form arithmetic — bit-identical
+# distances to LocalBackend — and a guard certifies completeness: every
+# dropped/pruned row had LB >= the kth UB, so it cannot beat the top-k.
+# Guard failure (bounds too loose for this batch) falls back to the raw
+# float32 stream — counted in ``codec_fallbacks``, never wrong.
+
+_CAND_MARGIN = 32   # candidate pool size = k + margin (see _codec_cand)
+
+# slack absorbing the float32 evaluation error of the decoded distances
+# themselves (identity-form matmul): additive in the *squared* domain,
+# scaled by the norms entering the dot product. The stored per-row ``e``
+# only covers reconstruction error, not arithmetic.
+_BOUND_REL = 1e-5
+_BOUND_ABS = 1e-6
+
+
+def _codec_cand(k: int, num: int) -> int:
+    return min(num, k + _CAND_MARGIN)
+
+
+def _merge_topc(d0, p0, d1, p1, c: int):
+    """Per-query: merge (value, position) pairs, keep the ``c`` smallest.
+    Unlike ``_merge_topk`` there is no duplicate suppression — codec
+    streams visit each position exactly once."""
+    d = jnp.concatenate([d0, d1])
+    pos = jnp.concatenate([p0, p1])
+    neg, idx = jax.lax.top_k(-d, c)
+    return -neg, pos[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "series_len", "k",
+                                             "cand", "mode"))
+def _codec_bounds_block(enc, queries, base, valid, ub_d, ub_p, lb_d, lb_p, *,
+                        codec, series_len: int, k: int, cand: int, mode: str):
+    """Fold one encoded row block into the UB/LB carries (see above).
+
+    ``enc`` is (B, W) uint8; rows at or past ``valid`` are padding. For the
+    bf16 codec on a kernel mode the decode is fused into the ED kernel
+    (``kops.decode_bf16_ed_matrix``): the payload is bitcast to bfloat16 and
+    upcast per tile in VMEM, so decoded float32 rows never touch HBM.
+    """
+    num = enc.shape[0]
+    qn2 = jnp.sum(queries * queries, axis=1)
+    if getattr(codec, "name", None) == "bf16" and mode != "ref":
+        payload, err = codec.split(enc)
+        d_dec = kops.decode_bf16_ed_matrix(queries, payload, mode=mode)
+        half = jax.lax.bitcast_convert_type(
+            jnp.reshape(payload, (num, series_len, 2)), jnp.bfloat16)
+        sn2 = jnp.sum(jnp.square(half.astype(jnp.float32)), axis=1)
+    else:
+        rows, err = codec.decode(enc, series_len)
+        sn2 = jnp.sum(rows * rows, axis=1)
+        d_dec = (qn2[:, None] + sn2[None, :]
+                 - 2.0 * (queries @ rows.T))
+    # additive slack in the squared domain, then sound sqrt-scale interval
+    delta = _BOUND_REL * (qn2[:, None] + sn2[None, :]) + _BOUND_ABS
+    r_lo = jnp.sqrt(jnp.maximum(d_dec - delta, 0.0))
+    r_hi = jnp.sqrt(jnp.maximum(d_dec, 0.0) + delta)
+    lb = jnp.square(jnp.maximum(r_lo - err[None, :], 0.0))
+    ub = jnp.square(r_hi + err[None, :])
+    live = jnp.arange(num) < valid
+    pos = jnp.where(live, base + jnp.arange(num, dtype=jnp.int32), -1)
+    lb = jnp.where(live[None, :], lb, INF)
+    ub = jnp.where(live[None, :], ub, INF)
+    pos_b = jnp.broadcast_to(pos, lb.shape)
+    ub_d, ub_p = jax.vmap(
+        lambda a, b, c, e: _merge_topc(a, b, c, e, k))(ub_d, ub_p, ub, pos_b)
+    lb_d, lb_p = jax.vmap(
+        lambda a, b, c, e: _merge_topc(a, b, c, e, cand))(lb_d, lb_p, lb,
+                                                          pos_b)
+    return ub_d, ub_p, lb_d, lb_p
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _codec_exact_topk(rows, p, queries, *, k: int):
+    """Exact top-k over the gathered candidate rows: (Q, C, n) float32 rows
+    at positions ``p`` (−1 = padding), same difference-form arithmetic as
+    ``_ooc_refine_block`` — distances bit-identical to LocalBackend's."""
+    d = jnp.sum(jnp.square(rows - queries[:, None, :]), axis=-1)
+    d = jnp.where(p >= 0, d, INF)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(p, idx, axis=1)
+
+
 def _difficulty_from_leaf_lbs(lbs) -> np.ndarray:
     """Per-query cost score in [0, 1] from the leaf-bound landscape: the
     fraction of alive leaves whose LB_EAPCA is within 2x of the query's
@@ -469,7 +567,11 @@ class _OutOfCoreBase(BackendBase):
                    "overlap_blocks": 0,
                    # wave-fused serving: fetches shared across wave members
                    "wave_calls": 0, "wave_rows_shared": 0,
-                   "runs_deduped": 0, "runs_skipped_bsf": 0}
+                   "runs_deduped": 0, "runs_skipped_bsf": 0,
+                   # codec streaming (format v3): candidate rows re-checked
+                   # against float32 truth, and whole-batch fallbacks when
+                   # the bounds guard could not certify completeness
+                   "codec_refine_rows": 0, "codec_fallbacks": 0}
 
     def _lrd(self) -> np.ndarray:
         """The LRD memmap, failing loudly if the SavedIndex was closed
@@ -478,6 +580,29 @@ class _OutOfCoreBase(BackendBase):
 
     def _lsd(self) -> np.ndarray:
         return self.saved._mapped("lsd")
+
+    def _enc(self) -> np.ndarray:
+        return self.saved._mapped("enc")
+
+    def _active_codec(self, cfg: SearchConfig):
+        """The codec instance this call streams under, or ``None`` for the
+        raw float32 path. ``cfg.codec="auto"`` follows the opened index;
+        ``"raw"`` forces the float32 stream (always available); any other
+        name must match what the index was encoded with."""
+        from repro.storage.codecs import get_codec
+
+        name = getattr(cfg, "codec", "auto")
+        saved_codec = getattr(self.saved, "codec", "raw")
+        if name == "auto":
+            name = saved_codec
+        if name == "raw":
+            return None
+        if name != saved_codec:
+            raise ValueError(
+                f"codec={name!r} but the index at {self.saved.path!r} was "
+                f"encoded with {saved_codec!r}; reopen after "
+                f"compact(codec={name!r}) or use codec='auto'|'raw'")
+        return get_codec(name)
 
     @property
     def series_len(self) -> int:
@@ -515,10 +640,14 @@ class _OutOfCoreBase(BackendBase):
         safe = jnp.clip(p, 0, self._perm.shape[0] - 1)
         return jnp.where(p >= 0, self._perm[safe], -1)
 
-    def _count(self, rows: int) -> None:
+    def _count(self, rows: int, row_bytes: int | None = None) -> None:
+        """Account one streamed block: ``row_bytes`` defaults to the raw
+        float32 width; codec streams pass their encoded width so
+        ``bytes_streamed`` reflects the real disk traffic."""
         self._t["blocks"] += 1
         self._t["rows_streamed"] += rows
-        self._t["bytes_streamed"] += rows * 4 * self.saved.series_len
+        self._t["bytes_streamed"] += rows * (
+            4 * self.saved.series_len if row_bytes is None else row_bytes)
 
     def make_plan(self, cfg, q_struct):
         # Streaming plans are Python loops over jitted block kernels; the
@@ -530,7 +659,39 @@ class _OutOfCoreBase(BackendBase):
         return {"num_series": self.saved.num_series,
                 "series_len": self.saved.series_len,
                 "memory_budget_mb": self.memory_budget_mb,
+                "codec": getattr(self.saved, "codec", "raw"),
                 **self._t}
+
+    def _codec_finalize(self, q, cfg: SearchConfig, ub_d, ub_p, lb_d, lb_p,
+                        valid_rows: int | None = None):
+        """Certify + exact-re-check the codec carries (see the module-level
+        codec notes). Returns ``(d, p, fallback_queries)``: exact top-k
+        distances/positions, and how many queries the guard could NOT
+        certify (0 = the returned answer is complete and exact).
+        ``valid_rows`` limits the certification to the leading real queries
+        of a padded batch — bucket-padding rows are sliced away by the
+        caller, so their (often uncertifiable, e.g. all-zero) guard status
+        must not force a fallback."""
+        k = cfg.k
+        theta = ub_d[:, k - 1]
+        # every row not carried in the LB pool had LB >= the pool's largest
+        # kept LB; if that is >= theta (>= the true kth distance), dropped
+        # and pruned rows can at most tie the kth answer
+        certified = np.asarray(lb_d[:, -1] >= theta)
+        if valid_rows is not None:
+            certified = certified[:valid_rows]
+        bad = int(certified.size - int(certified.sum()))
+        if bad:
+            return None, None, bad
+        cand_p = np.asarray(lb_p)
+        safe = np.clip(cand_p, 0, max(self.saved.n_pad - 1, 0))
+        # np.take = copy-guaranteed gather of the candidate rows (never a
+        # view of the mapped file, so the device transfer cannot alias it)
+        rows = jnp.asarray(np.take(self._lrd(), safe, axis=0))
+        self._t["codec_refine_rows"] += int(cand_p.size)
+        self._t["bytes_streamed"] += int(cand_p.size) * 4 * self.saved.series_len
+        d, p = _codec_exact_topk(rows, jnp.asarray(cand_p), q, k=k)
+        return d, p, 0
 
     def describe(self) -> dict:
         d = super().describe()
@@ -596,6 +757,13 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
 
     def _bind(self, cfg):
         mode = resolve_kernel_mode(cfg.kernel_mode)
+        codec = self._active_codec(cfg)
+        if codec is not None:
+            def run(q, valid_rows=None):
+                return self._stream_codec_knn(jnp.asarray(q), cfg, mode,
+                                              codec, valid_rows=valid_rows)
+            run.valid_aware = True
+            return run
         return lambda q: self._stream_knn(jnp.asarray(q), cfg, mode)
 
     def _stream_knn(self, q: jax.Array, cfg: SearchConfig,
@@ -617,22 +785,64 @@ class OutOfCoreScanBackend(_OutOfCoreBase):
         self._t["calls"] += 1
         return self._fill_result(d, p, self._ids_of(p), path=3, accessed=num)
 
+    def _stream_codec_knn(self, q: jax.Array, cfg: SearchConfig, mode: str,
+                          codec, valid_rows: int | None = None) -> KnnResult:
+        """Streamed scan over the *encoded* sidecar: decoded distances feed
+        the UB/LB carries, then candidates are re-checked against float32
+        rows (see the module-level codec notes). Bit-identical distances to
+        the raw stream; falls back to it when the guard cannot certify."""
+        from repro.data.pipeline import ArrayChunkSource, iter_device_chunks
+
+        num = self.saved.num_series
+        n = self.saved.series_len
+        W = codec.row_bytes(n)
+        R = self.stream_rows()
+        qn = q.shape[0]
+        k = cfg.k
+        cand = _codec_cand(k, num)
+        ub_d = jnp.full((qn, k), INF)
+        ub_p = jnp.full((qn, k), -1, jnp.int32)
+        lb_d = jnp.full((qn, cand), INF)
+        lb_p = jnp.full((qn, cand), -1, jnp.int32)
+        blocks = ArrayChunkSource(self._enc()[:num], R, dtype=np.uint8)
+        for start, enc in iter_device_chunks(blocks, prefetch=cfg.prefetch,
+                                             telemetry=self._t):
+            ub_d, ub_p, lb_d, lb_p = _codec_bounds_block(
+                enc, q, jnp.int32(start), jnp.int32(enc.shape[0]),
+                ub_d, ub_p, lb_d, lb_p,
+                codec=codec, series_len=n, k=k, cand=cand, mode=mode)
+            self._count(enc.shape[0], row_bytes=W)
+        d, p, bad = self._codec_finalize(q, cfg, ub_d, ub_p, lb_d, lb_p,
+                                         valid_rows=valid_rows)
+        if bad:
+            self._t["codec_fallbacks"] += bad
+            return self._stream_knn(q, cfg, mode)
+        self._t["calls"] += 1
+        return self._fill_result(d, p, self._ids_of(p), path=3, accessed=num)
+
     def make_wave_plan(self, cfg, q_struct):
         """The streamed scan already reads each block exactly once for the
         whole batch, so the wave path is the batch path — plus telemetry
         attributing the sharing: every streamed row serves all wave
-        members but is fetched once."""
+        members but is fetched once. Codec streams share identically (the
+        encoded block feeds the whole wave's bound carries)."""
         mode = resolve_kernel_mode(cfg.kernel_mode)
+        codec = self._active_codec(cfg)
 
-        def run(q):
+        def run(q, valid_rows=None):
             q = jnp.asarray(q)
             before = self._t["rows_streamed"]
-            res = self._stream_knn(q, cfg, mode)
+            if codec is not None:
+                res = self._stream_codec_knn(q, cfg, mode, codec,
+                                             valid_rows=valid_rows)
+            else:
+                res = self._stream_knn(q, cfg, mode)
             self._t["wave_calls"] += 1
             self._t["wave_rows_shared"] += ((self._t["rows_streamed"] - before)
                                             * max(int(q.shape[0]) - 1, 0))
             return res
 
+        run.valid_aware = True
         return run
 
 
@@ -679,6 +889,13 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
                 f"or rebuild with a smaller leaf_capacity")
 
     def _bind(self, cfg):
+        codec = self._active_codec(cfg)
+        if codec is not None:
+            def run(q, valid_rows=None):
+                return self._stream_codec_knn(jnp.asarray(q), cfg, codec,
+                                              valid_rows=valid_rows)
+            run.valid_aware = True
+            return run
         return lambda q: self._stream_knn(jnp.asarray(q), cfg)
 
     def _pad_bucket(self, count: int, cap: int) -> int:
@@ -834,7 +1051,156 @@ class OutOfCoreLocalBackend(_OutOfCoreBase):
             visited_leaves=jnp.full((qn,), len(seeded) + int(needed.sum()),
                                     jnp.int32))
 
+    def _stream_codec_knn(self, q: jax.Array, cfg: SearchConfig,
+                          codec, valid_rows: int | None = None) -> KnnResult:
+        """Index-pruned streaming over the *encoded* sidecar (format v3):
+        the `_stream_knn` phase structure with the exact running top-k
+        replaced by the sound UB/LB carries over decoded distances (see the
+        module-level codec notes). The kth *upper* bound plays the BSF role
+        in the leaf-level and per-series filters — it provably upper-bounds
+        the true kth distance, so pruning stays no-false-dismissal — and the
+        candidate pool is re-checked against full-precision float32 rows at
+        the end: distances bit-identical to the raw stream, with a
+        whole-batch fallback to it when the guard cannot certify."""
+        from repro.core.tree import route_to_leaf
+        from repro.data.pipeline import make_chunk_reader
+
+        k = cfg.k
+        qn = q.shape[0]
+        n = self.saved.series_len
+        num = self.saved.num_series
+        max_leaf = self.saved.max_leaf
+        W = codec.row_bytes(n)
+        R = self.stream_rows()
+        kmode = resolve_kernel_mode(cfg.kernel_mode)
+        rows_before = self._t["rows_streamed"]
+        cand = _codec_cand(k, num)
+        ub_d = jnp.full((qn, k), INF)
+        ub_p = jnp.full((qn, k), -1, jnp.int32)
+        lb_d = jnp.full((qn, cand), INF)
+        lb_p = jnp.full((qn, cand), -1, jnp.int32)
+
+        # every encoded fetch flows through one reader, same submit-ahead
+        # lookahead discipline as the raw path's lrd_reader
+        enc_reader = make_chunk_reader(self._enc(), R, W, np.uint8,
+                                       prefetch=cfg.prefetch)
+        lsd_reader = None
+
+        def bounds_all(ub_d, ub_p, lb_d, lb_p, extents):
+            """Fold (start, cnt, pad_to) encoded extents into the carries —
+            all submitted before the first is consumed."""
+            for start, cnt, pad_to in extents:
+                enc_reader.submit(start, cnt, pad_to)
+            for start, cnt, _ in extents:
+                enc = enc_reader.stage(enc_reader.get())
+                ub_d, ub_p, lb_d, lb_p = _codec_bounds_block(
+                    enc, q, jnp.int32(start), jnp.int32(cnt),
+                    ub_d, ub_p, lb_d, lb_p, codec=codec, series_len=n,
+                    k=k, cand=cand, mode=kmode)
+                self._count(cnt, row_bytes=W)
+            return ub_d, ub_p, lb_d, lb_p
+
+        try:
+            # -- phase 1: seed the conservative BSF (kth upper bound) from
+            # each query's home leaf plus its l_max best leaves ------------
+            lbs = self._leaf_lbs(q)                          # (Q, L)
+            home_nodes = route_to_leaf(self.saved.tree, q,
+                                       self.saved.max_depth)
+            home_ranks = np.asarray(self._leaf_rank)[np.asarray(home_nodes)]
+            l_max = min(cfg.l_max, self.saved.num_leaves)
+            _, best = jax.lax.top_k(-lbs, l_max)             # (Q, l_max)
+            seeded = sorted(set(int(r) for r in home_ranks if r >= 0)
+                            | set(int(r) for r in np.asarray(best).ravel()))
+            seeds = [(int(self._leaf_start[r]), int(self._leaf_count[r]),
+                      max_leaf) for r in seeded
+                     if int(self._leaf_count[r]) > 0]
+            seed_rows = sum(cnt for _, cnt, _ in seeds)
+            ub_d, ub_p, lb_d, lb_p = bounds_all(ub_d, ub_p, lb_d, lb_p,
+                                                seeds)
+
+            # -- phase 2: leaf-level pruning against the kth upper bound ---
+            slack = jnp.float32(1.0 - cfg.lb_slack)
+            bsf = ub_d[:, k - 1]
+            cand_l = lbs * slack < bsf[:, None]              # (Q, L)
+            needed = np.array(jnp.any(cand_l, axis=0))
+            needed[seeded] = False
+            n_alive = max(int((np.asarray(self._leaf_count) > 0).sum()), 1)
+            eapca_pr = 1.0 - np.asarray(
+                jnp.sum(cand_l, axis=1), np.float32) / n_alive
+
+            # -- phase 3: LSD sidecar filter, then encoded alive runs ------
+            pieces = self._runs(needed, R)
+            use_sax = bool(cfg.use_sax)
+            alive_counts = jnp.full((qn,), seed_rows, jnp.int32)
+            if not use_sax:
+                ub_d, ub_p, lb_d, lb_p = bounds_all(
+                    ub_d, ub_p, lb_d, lb_p,
+                    [(s, c, self._pad_bucket(c, R)) for s, c in pieces])
+            else:
+                m_sax = int(self._lsd().shape[1])
+                q_paa = S.paa(q, m_sax)
+                lsd_reader = make_chunk_reader(self._lsd(), R, m_sax,
+                                               np.uint8,
+                                               prefetch=cfg.prefetch)
+                for start, cnt in pieces:
+                    lsd_reader.submit(start, cnt, self._pad_bucket(cnt, R))
+                for start, cnt in pieces:
+                    pad_to = self._pad_bucket(cnt, R)
+                    codes = lsd_reader.stage(lsd_reader.get())
+                    ranks = np.zeros((pad_to,), np.int32)
+                    ranks[:cnt] = self._srank[start:start + cnt]
+                    self._t["sax_rows_read"] += cnt
+                    lb_row = jnp.maximum(
+                        kops.lb_sax(q_paa, codes, n, mode=kmode),
+                        lbs[:, ranks])                        # (Q, pad_to)
+                    bsf = ub_d[:, k - 1]
+                    live = ((lb_row * slack < bsf[:, None])
+                            & (jnp.arange(pad_to) < cnt)[None, :])
+                    alive_counts = alive_counts + jnp.sum(live, axis=1,
+                                                          dtype=jnp.int32)
+                    alive = np.asarray(jnp.any(live, axis=0))[:cnt]
+                    ub_d, ub_p, lb_d, lb_p = bounds_all(
+                        ub_d, ub_p, lb_d, lb_p,
+                        [(s0, c0, self._pad_bucket(c0, R))
+                         for s0, c0 in _alive_runs(alive, start)])
+        finally:
+            self._reap_reader(enc_reader)
+            if lsd_reader is not None:
+                self._reap_reader(lsd_reader)
+
+        d, p, bad = self._codec_finalize(q, cfg, ub_d, ub_p, lb_d, lb_p,
+                                         valid_rows=valid_rows)
+        if bad:
+            self._t["codec_fallbacks"] += bad
+            return self._stream_knn(q, cfg)
+        self._t["calls"] += 1
+        res = self._fill_result(
+            d, p, self._ids_of(p), path=2,
+            accessed=self._t["rows_streamed"] - rows_before)
+        sax_pr = (1.0 - alive_counts.astype(jnp.float32)
+                  / max(self.saved.num_series, 1)
+                  if use_sax else jnp.zeros((qn,), jnp.float32))
+        return res._replace(
+            eapca_pr=jnp.asarray(eapca_pr, jnp.float32),
+            sax_pr=sax_pr,
+            visited_leaves=jnp.full((qn,), len(seeded) + int(needed.sum()),
+                                    jnp.int32))
+
     def make_wave_plan(self, cfg, q_struct):
+        codec = self._active_codec(cfg)
+        if codec is not None:
+            # Codec streams fold whole blocks into batched bound carries, so
+            # the wave already shares every encoded fetch across members;
+            # the raw path's per-run demand scheduling (and its BSF-based
+            # run skipping) doesn't apply to the carry formulation.
+            def run(q, valid_rows=None):
+                res = self._stream_codec_knn(jnp.asarray(q), cfg, codec,
+                                             valid_rows=valid_rows)
+                self._t["wave_calls"] += 1
+                return res
+
+            run.valid_aware = True
+            return run
         return lambda q: self._stream_wave_knn(jnp.asarray(q), cfg)
 
     def estimate_difficulty(self, queries: jax.Array) -> np.ndarray:
@@ -1120,6 +1486,136 @@ class ShardedBackend(BackendBase):
 # The engine: bucketed batching + compiled-plan LRU + telemetry
 # ---------------------------------------------------------------------------
 
+class _TelemetrySection:
+    """Dict-compatibility shim for the telemetry dataclasses: the historical
+    ``telemetry()["plan_cache"]["hits"]`` access style keeps working (keys
+    are deprecated aliases of the fields), while attribute access —
+    ``telemetry().plan_cache.hits`` — is the API. ``None``-valued optional
+    sections behave like absent dict keys (``"ooc" not in telemetry()``)."""
+
+    _ALIASES: dict = {}
+
+    def keys(self):
+        return tuple(f.name for f in dataclasses.fields(self)
+                     if getattr(self, f.name) is not None)
+
+    def values(self):
+        return tuple(getattr(self, k) for k in self.keys())
+
+    def items(self):
+        return tuple((k, getattr(self, k)) for k in self.keys())
+
+    def _resolve(self, key):
+        key = self._ALIASES.get(key, key)
+        if key not in (f.name for f in dataclasses.fields(self)):
+            raise KeyError(key)
+        return key
+
+    def __getitem__(self, key):
+        key = self._resolve(key)
+        value = getattr(self, key)
+        if value is None:
+            raise KeyError(key)
+        return value
+
+    def __setitem__(self, key, value):
+        object.__setattr__(self, self._resolve(key), value)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __contains__(self, key):
+        return self.get(key) is not None
+
+    def __iter__(self):
+        return iter(self.keys())
+
+
+@dataclasses.dataclass
+class PlanCacheTelemetry(_TelemetrySection):
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    size: int = 0
+    capacity: int = 0
+    compiles: int = 0
+    compile_s: float = 0.0
+    invalidations: int = 0
+
+
+@dataclasses.dataclass
+class LatencyTelemetry(_TelemetrySection):
+    total: float = 0.0
+    last: float = 0.0
+    mean_per_call: float = 0.0
+    mean_per_query: float = 0.0
+
+
+@dataclasses.dataclass
+class PathsTelemetry(_TelemetrySection):
+    scan_eapca: int = 0
+    scan_sax: int = 0
+    pruned: int = 0
+    forced_scan: int = 0
+    unknown: int = 0
+
+
+@dataclasses.dataclass
+class PruningTelemetry(_TelemetrySection):
+    eapca_mean: float = 0.0
+    sax_mean: float = 0.0
+
+
+@dataclasses.dataclass
+class OocTelemetry(_TelemetrySection):
+    """Streaming counters of the out-of-core backends (absent — ``None``
+    section — for fully-resident backends). ``bytes_streamed`` counts the
+    bytes actually fetched (encoded width under a codec, plus the float32
+    re-check rows), the honest bandwidth number the codec benchmarks key
+    on; ``codec_refine_rows``/``codec_fallbacks`` account the exactness
+    machinery of format-v3 encoded streams."""
+    calls: int = 0
+    blocks: int = 0
+    rows_streamed: int = 0
+    bytes_streamed: int = 0
+    sax_rows_read: int = 0
+    read_seconds: float = 0.0
+    read_wait_seconds: float = 0.0
+    overlap_blocks: int = 0
+    wave_calls: int = 0
+    wave_rows_shared: int = 0
+    runs_deduped: int = 0
+    runs_skipped_bsf: int = 0
+    codec_refine_rows: int = 0
+    codec_fallbacks: int = 0
+
+
+@dataclasses.dataclass
+class Telemetry(_TelemetrySection):
+    """The one serving-telemetry shape (see ``repro.api`` for the key →
+    field mapping table). Sections are dataclasses; ``ooc`` is ``None``
+    unless the backend streams from disk, ``serving`` is filled by
+    :class:`repro.serve.engine.KnnServeEngine`."""
+    backend: str = ""
+    calls: int = 0
+    queries: int = 0
+    wave_calls: int = 0
+    plan_cache: PlanCacheTelemetry = dataclasses.field(
+        default_factory=PlanCacheTelemetry)
+    latency: LatencyTelemetry = dataclasses.field(
+        default_factory=LatencyTelemetry)
+    paths: PathsTelemetry = dataclasses.field(default_factory=PathsTelemetry)
+    pruning: PruningTelemetry = dataclasses.field(
+        default_factory=PruningTelemetry)
+    ooc: OocTelemetry | None = None
+    serving: dict | None = None
+
+    _ALIASES = {"latency_s": "latency"}
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     plan_cache_size: int = 32
@@ -1220,7 +1716,12 @@ class QueryEngine:
             self._plans.move_to_end(key)
 
         t0 = time.perf_counter()
-        res = plan(q)
+        if getattr(plan, "valid_aware", False):
+            # codec plans certify per-query completeness; bucket-padding
+            # rows (sliced away below) must not trip the certify guard
+            res = plan(q, valid_rows=qn)
+        else:
+            res = plan(q)
         jax.block_until_ready(res.dists)
         dt = time.perf_counter() - t0
         self._t["exec_s"] += dt
@@ -1259,47 +1760,40 @@ class QueryEngine:
 
     # -- introspection ------------------------------------------------------
 
-    def telemetry(self) -> dict:
+    def telemetry(self) -> Telemetry:
         t = self._t
         n_stat = max(t["stat_queries"], 1)
         bstats = self.backend.stats()
-        ooc = ({k: bstats[k] for k in
-                ("calls", "blocks", "rows_streamed", "wave_calls",
-                 "wave_rows_shared", "runs_deduped", "runs_skipped_bsf")
-                if k in bstats}
-               if "rows_streamed" in bstats else None)
-        out = {
-            "backend": self.backend.name,
-            "calls": t["calls"],
-            "queries": t["queries"],
-            "wave_calls": t["wave_calls"],
-            "plan_cache": {
-                "hits": t["hits"], "misses": t["misses"],
-                "evictions": t["evictions"], "size": len(self._plans),
-                "capacity": self.config.plan_cache_size,
-                "compiles": t["misses"], "compile_s": t["compile_s"],
-                "invalidations": t["invalidations"],
-            },
-            "latency_s": {
-                "total": t["exec_s"], "last": t["last_exec_s"],
-                "mean_per_call": t["exec_s"] / max(t["calls"], 1),
-                "mean_per_query": t["exec_s"] / max(t["queries"], 1),
-            },
-            "paths": {
-                "scan_eapca": int(t["paths"][0]),
-                "scan_sax": int(t["paths"][1]),
-                "pruned": int(t["paths"][2]),
-                "forced_scan": int(t["paths"][3]),
-                "unknown": t["path_unknown"],
-            },
-            "pruning": {
-                "eapca_mean": t["eapca_pr_sum"] / n_stat,
-                "sax_mean": t["sax_pr_sum"] / n_stat,
-            },
-        }
-        if ooc is not None:
-            out["ooc"] = ooc
-        return out
+        ooc = None
+        if "rows_streamed" in bstats:
+            ooc = OocTelemetry(**{f.name: bstats[f.name]
+                                  for f in dataclasses.fields(OocTelemetry)
+                                  if f.name in bstats})
+        return Telemetry(
+            backend=self.backend.name,
+            calls=t["calls"],
+            queries=t["queries"],
+            wave_calls=t["wave_calls"],
+            plan_cache=PlanCacheTelemetry(
+                hits=t["hits"], misses=t["misses"],
+                evictions=t["evictions"], size=len(self._plans),
+                capacity=self.config.plan_cache_size,
+                compiles=t["misses"], compile_s=t["compile_s"],
+                invalidations=t["invalidations"]),
+            latency=LatencyTelemetry(
+                total=t["exec_s"], last=t["last_exec_s"],
+                mean_per_call=t["exec_s"] / max(t["calls"], 1),
+                mean_per_query=t["exec_s"] / max(t["queries"], 1)),
+            paths=PathsTelemetry(
+                scan_eapca=int(t["paths"][0]),
+                scan_sax=int(t["paths"][1]),
+                pruned=int(t["paths"][2]),
+                forced_scan=int(t["paths"][3]),
+                unknown=t["path_unknown"]),
+            pruning=PruningTelemetry(
+                eapca_mean=t["eapca_pr_sum"] / n_stat,
+                sax_mean=t["sax_pr_sum"] / n_stat),
+            ooc=ooc)
 
     def stats(self) -> dict:
         return self.backend.stats()
@@ -1321,7 +1815,60 @@ class QueryEngine:
 # Name-based construction (benchmarks/run.py --backend, serve_knn CLI)
 # ---------------------------------------------------------------------------
 
-BACKEND_NAMES = ("local", "scan", "scan-mxu", "sharded")
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered backend name: which construction paths serve it
+    (``"memory"`` = :func:`make_backend` over an in-RAM collection,
+    ``"disk"`` = :func:`make_disk_backend` over a saved index) and a
+    one-line description for CLIs/docs."""
+    name: str
+    kinds: tuple[str, ...]
+    description: str
+
+
+#: The one registry of servable backend names. Every name-based entry point
+#: (``make_backend``, ``make_disk_backend``, ``Hercules.engine``, the serve
+#: CLI, benchmarks) resolves through here via :func:`resolve_backend_name`,
+#: so the valid-name set and the error message cannot drift between them.
+BACKENDS: dict[str, BackendSpec] = {s.name: s for s in (
+    BackendSpec("local", ("memory", "disk"),
+                "Hercules index in RAM: tree routing + EAPCA/SAX pruning "
+                "+ exact refine"),
+    BackendSpec("scan", ("memory", "disk"),
+                "exact dense scan of the full collection"),
+    BackendSpec("scan-mxu", ("memory",),
+                "dense scan through the Pallas ED kernel (MXU matmul form)"),
+    BackendSpec("sharded", ("memory",),
+                "series-sharded index under a device mesh"),
+    BackendSpec("ooc-scan", ("disk",),
+                "streamed blocked scan of the on-disk collection under a "
+                "memory budget"),
+    BackendSpec("ooc-local", ("disk",),
+                "index-pruned out-of-core answering (stream only "
+                "unprunable leaves/series)"),
+)}
+
+
+def backend_names(kind: str | None = None) -> tuple[str, ...]:
+    """Registered backend names, registration order; ``kind`` filters to
+    one construction path (``"memory"`` or ``"disk"``)."""
+    return tuple(n for n, s in BACKENDS.items()
+                 if kind is None or kind in s.kinds)
+
+
+def resolve_backend_name(name: str, *, kind: str) -> BackendSpec:
+    """The single place backend-name strings are validated. Returns the
+    :class:`BackendSpec` or raises the one canonical error message."""
+    spec = BACKENDS.get(name)
+    if spec is not None and kind in spec.kinds:
+        return spec
+    raise ValueError(f"unknown {kind} backend {name!r}; expected one of "
+                     f"{backend_names(kind)}")
+
+
+# deprecated aliases of the registry's two views — prefer
+# ``backend_names("memory")`` / ``backend_names("disk")``
+BACKEND_NAMES = backend_names("memory")
 
 
 def make_backend(name: str, data: jax.Array, *,
@@ -1329,11 +1876,12 @@ def make_backend(name: str, data: jax.Array, *,
                  search: SearchConfig | None = None,
                  num_shards: int | None = None,
                  mesh=None) -> SearchBackend:
-    """Build a backend over ``data`` by name.
+    """Build a backend over ``data`` by name (see :data:`BACKENDS`).
 
     ``local``/``sharded`` construct the Hercules index (or stacked indexes);
     ``scan``/``scan-mxu`` serve the raw collection directly.
     """
+    resolve_backend_name(name, kind="memory")
     if name == "local":
         cfg = index_config or IndexConfig(search=search or SearchConfig())
         return LocalBackend(HerculesIndex.build(data, cfg))
@@ -1346,10 +1894,10 @@ def make_backend(name: str, data: jax.Array, *,
         shards = num_shards or len(jax.devices())
         stacked = build_distributed_index(data, shards, cfg)
         return ShardedBackend(stacked, mesh)
-    raise ValueError(f"unknown backend {name!r}; expected one of {BACKEND_NAMES}")
+    raise AssertionError(f"registered backend {name!r} not constructed")
 
 
-DISK_BACKEND_NAMES = ("local", "scan", "ooc-scan", "ooc-local")
+DISK_BACKEND_NAMES = backend_names("disk")   # deprecated alias
 
 
 def make_disk_backend(name: str, store, *,
@@ -1378,6 +1926,7 @@ def make_disk_backend(name: str, store, *,
     """
     from repro.storage import open_index
 
+    resolve_backend_name(name, kind="disk")
     if isinstance(store, str):
         saved = open_index(store, verify=verify)
     else:
@@ -1404,5 +1953,4 @@ def make_disk_backend(name: str, store, *,
     if name == "ooc-local":
         return OutOfCoreLocalBackend(saved, search,
                                      memory_budget_mb=memory_budget_mb)
-    raise ValueError(f"unknown disk backend {name!r}; expected one of "
-                     f"{DISK_BACKEND_NAMES}")
+    raise AssertionError(f"registered backend {name!r} not constructed")

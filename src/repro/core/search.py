@@ -64,6 +64,12 @@ class SearchConfig:
                                  # (reader thread + two-slot host buffer;
                                  # data/pipeline.py owns the readers).
                                  # Answers are bit-identical across modes.
+    codec: str = "auto"          # out-of-core leaf codec: auto | raw | bf16
+                                 # | sax-residual (storage/codecs.py owns
+                                 # the registry; "auto" follows the opened
+                                 # index). Answers are bit-identical under
+                                 # every codec — lossy codecs only shrink
+                                 # the streamed bytes.
 
     def __post_init__(self):
         # every field is validated here (herculint config-plumbing): a bad
@@ -99,6 +105,10 @@ class SearchConfig:
         if self.prefetch not in PREFETCH_MODES:
             raise ValueError(f"prefetch={self.prefetch!r}; expected one of "
                              f"{PREFETCH_MODES}")
+        from repro.storage.codecs import CODEC_CHOICES
+        if self.codec not in CODEC_CHOICES:
+            raise ValueError(f"codec={self.codec!r}; expected one of "
+                             f"{CODEC_CHOICES}")
 
     def pad_multiple(self) -> int:
         import math

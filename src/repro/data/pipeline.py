@@ -108,13 +108,16 @@ class ChunkSource(Protocol):
 class _ChunkedBase:
     """Shared chunk arithmetic over a row-sliceable backing store."""
 
-    def __init__(self, rows, chunk_size: int):
+    def __init__(self, rows, chunk_size: int, dtype=np.float32):
         if chunk_size <= 0:
             raise ValueError("chunk_size must be positive")
         self._rows = rows
         self.num_series = int(rows.shape[0])
         self.series_len = int(rows.shape[1])
         self.chunk_size = int(chunk_size)
+        # row element type: float32 raw series by default; codec-encoded
+        # sources (format v3 ``enc.npy``) stream uint8 rows instead
+        self.dtype = np.dtype(dtype)
 
     @property
     def num_chunks(self) -> int:
@@ -125,15 +128,15 @@ class _ChunkedBase:
             raise IndexError(f"chunk {i} out of range ({self.num_chunks})")
         lo = i * self.chunk_size
         hi = min(lo + self.chunk_size, self.num_series)
-        return np.asarray(self._rows[lo:hi], dtype=np.float32)
+        return np.asarray(self._rows[lo:hi], dtype=self.dtype)
 
 
 class ArrayChunkSource(_ChunkedBase):
     """Chunk view over an in-memory (N, n) array — tests and the
     chunked-vs-one-shot equality harness."""
 
-    def __init__(self, data, chunk_size: int):
-        super().__init__(np.asarray(data), chunk_size)
+    def __init__(self, data, chunk_size: int, dtype=np.float32):
+        super().__init__(np.asarray(data), chunk_size, dtype)
 
 
 class NpyChunkSource(_ChunkedBase):
@@ -535,7 +538,8 @@ def _source_rows(source: ChunkSource):
 def _whole_source_reader(source: ChunkSource, prefetch: str):
     """A reader with every chunk of ``source`` submitted, in order."""
     reader = make_chunk_reader(_source_rows(source), source.chunk_size,
-                               source.series_len, np.float32,
+                               source.series_len,
+                               getattr(source, "dtype", np.float32),
                                prefetch=prefetch)
     num = source.num_series
     for i in range(source.num_chunks):
@@ -578,6 +582,11 @@ def iter_device_chunks(source: ChunkSource, device=None,
     which is what keeps the yielded device chunks immutable (and answers
     bit-identical to the sync path). Reader/read stats accumulate into
     ``telemetry`` (``read_wait_seconds``, ``overlap_blocks``, ...).
+
+    Codec note: sources whose ``dtype`` is uint8 (format v3 encoded rows)
+    stream encoded bytes through the very same machinery; the consumer
+    decodes *after* the yield, i.e. after the disk wait — so the reader's
+    prefetch of block i+1 overlaps block i's decode+refine compute.
     """
     device = device or jax.devices()[0]
     n = source.num_chunks

@@ -103,6 +103,29 @@ def ed_matrix(queries: jax.Array, series: jax.Array, *,
     return out[:q0, :s0]
 
 
+def decode_bf16_ed_matrix(queries: jax.Array, payload: jax.Array, *,
+                          bq: int | None = None, bn: int | None = None,
+                          bk: int | None = None, mode: str | None = None,
+                          use_pallas: bool = True,
+                          interpret: bool | None = None) -> jax.Array:
+    """Fused bf16 decode + squared ED: (Q, n) x (B, 2n) uint8 -> (Q, B).
+
+    ``payload`` is the byte image of bfloat16 rows (the prefix of
+    ``storage.codecs.Bf16Codec`` encoded rows). On the kernel path the
+    bytes are bitcast to a bfloat16 HBM array — a free reinterpret, no
+    widening copy — and the ED kernel upcasts each (bn, bk) tile to
+    float32 *in VMEM*, so decoded float32 rows never round-trip through
+    HBM. The ref path decodes eagerly and runs the direct-sum oracle.
+    """
+    mode = _resolve(mode, use_pallas, interpret)
+    if mode == "ref":
+        return _ref.decode_bf16_ed_matrix_ref(queries, payload)
+    num, twon = payload.shape
+    raw = jnp.reshape(payload, (num, twon // 2, 2))
+    series = jax.lax.bitcast_convert_type(raw, jnp.bfloat16)
+    return ed_matrix(queries, series, bq=bq, bn=bn, bk=bk, mode=mode)
+
+
 def ed_min(queries: jax.Array, series: jax.Array, *,
            bq: int | None = None, bn: int | None = None,
            bk: int | None = None, mode: str | None = None,

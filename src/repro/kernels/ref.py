@@ -24,6 +24,24 @@ def ed_min_ref(queries: jax.Array, series: jax.Array):
     return jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32)
 
 
+def decode_bf16_ref(payload: jax.Array) -> jax.Array:
+    """(B, 2n) uint8 bfloat16 payload -> (B, n) float32 rows.
+
+    The payload is the byte image of a little-endian bfloat16 array (what
+    ``storage.codecs.Bf16Codec`` writes); the upcast to float32 is exact.
+    """
+    num, twon = payload.shape
+    raw = jnp.reshape(payload, (num, twon // 2, 2))
+    return jax.lax.bitcast_convert_type(raw, jnp.bfloat16).astype(jnp.float32)
+
+
+def decode_bf16_ed_matrix_ref(queries: jax.Array,
+                              payload: jax.Array) -> jax.Array:
+    """Fused decode+ED oracle: (Q, n) x (B, 2n) uint8 -> (Q, B) squared ED
+    against the decoded rows, direct-sum formulation."""
+    return ed_matrix_ref(queries, decode_bf16_ref(payload))
+
+
 def lb_sax_matrix_ref(q_paa: jax.Array, codes: jax.Array, series_len: int,
                       alphabet: int = S.SAX_ALPHABET) -> jax.Array:
     """(Q, m) x (N, m) -> (Q, N) squared LB_SAX (MINDIST)."""

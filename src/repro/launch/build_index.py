@@ -37,11 +37,11 @@ import time
 import jax
 import numpy as np
 
-from repro.api import (DISK_BACKEND_NAMES, BuildConfig, Hercules,
+from repro.api import (BuildConfig, Hercules, backend_names,
                        HerculesIndex, IndexConfig, LocalBackend,
                        NpyChunkSource, QueryEngine, ScanBackend, SearchConfig,
                        ArrayChunkSource, brute_force_knn, build_index_to_disk,
-                       make_disk_backend, open_index)
+                       list_codecs, make_disk_backend, open_index)
 from repro.data import make_query_workload, random_walks
 
 
@@ -80,16 +80,17 @@ def cmd_build(args) -> None:
     cfg = _index_config(args)
     t0 = time.perf_counter()
     manifest = build_index_to_disk(source, args.out, cfg,
-                                   extra_meta={"data": provenance})
+                                   extra_meta={"data": provenance},
+                                   codec=args.codec)
     build_s = time.perf_counter() - t0
     thr = source.num_series / max(build_s, 1e-9)
     print(f"built + saved {source.num_series} x {source.series_len} in "
-          f"{build_s:.2f}s ({thr:.0f} series/s, chunks of {args.chunk_size}) "
-          f"-> {args.out}")
+          f"{build_s:.2f}s ({thr:.0f} series/s, chunks of {args.chunk_size}, "
+          f"codec {args.codec}) -> {args.out}")
 
     rows = {"num_series": source.num_series, "series_len": source.series_len,
             "chunk_size": args.chunk_size, "build_seconds": round(build_s, 3),
-            "series_per_second": round(thr, 1),
+            "series_per_second": round(thr, 1), "codec": args.codec,
             "manifest_build": manifest["extra"]["build"]}
 
     if args.verify_one_shot:
@@ -156,15 +157,17 @@ def cmd_compact(args) -> None:
     with Hercules.open(args.index, "a") as hx:
         pending, segs = hx.pending_rows, len(hx.journal["segments"])
         t0 = time.perf_counter()
-        manifest = hx.compact(chunk_size=args.chunk_size)
+        manifest = hx.compact(chunk_size=args.chunk_size, codec=args.codec)
         dt = time.perf_counter() - t0
         thr = hx.num_series / max(dt, 1e-9)
         print(f"compacted {pending} journal rows ({segs} segments) into "
               f"generation {hx.generation} in {dt:.2f}s "
-              f"({thr:.0f} series/s replayed); base now {hx.base_rows} rows")
+              f"({thr:.0f} series/s replayed); base now {hx.base_rows} rows, "
+              f"codec {hx.codec}")
         _write_json(args.json, {
             "index": args.index, "journal_rows": pending,
             "segments": segs, "generation": hx.generation,
+            "codec": hx.codec,
             "compact_seconds": round(dt, 3),
             "series_per_second": round(thr, 1),
             "base_rows": hx.base_rows,
@@ -216,7 +219,7 @@ def cmd_query(args) -> None:
         args.difficulty))
 
     rows: dict = {"index": args.index, "backend": args.backend, "k": k,
-                  "num_series": saved.num_series,
+                  "num_series": saved.num_series, "codec": saved.codec,
                   "memory_budget_mb": args.memory_budget_mb,
                   "prefetch": args.prefetch or saved.config.search.prefetch}
 
@@ -253,6 +256,13 @@ def cmd_query(args) -> None:
         st = backend.stats()
         rows["read_wait_seconds"] = round(st["read_wait_seconds"], 4)
         rows["overlap_blocks"] = st["overlap_blocks"]
+        rows["bytes_streamed"] = st["bytes_streamed"]
+        rows["codec_fallbacks"] = st["codec_fallbacks"]
+        if saved.codec != "raw":
+            print(f"codec {saved.codec}: streamed {st['bytes_streamed']} "
+                  f"bytes ({st['codec_refine_rows']} candidate rows "
+                  f"re-checked at float32, {st['codec_fallbacks']} "
+                  f"fallbacks)")
         if args.prefetch == "thread" and args.verify != "none":
             # thread-prefetch leg: answers must be bit-identical to the
             # synchronous reader on the same backend and budget
@@ -324,6 +334,9 @@ def main(argv=None) -> None:
                    help="chunk-read scheduling for the build (thread = "
                         "async reader + two-slot host buffer; identical "
                         "bits either way)")
+    b.add_argument("--codec", choices=list_codecs(), default="raw",
+                   help="leaf codec for the base files (format v3); lossy "
+                        "codecs stream fewer bytes, answers stay exact")
     b.add_argument("--json", default=None)
     b.set_defaults(fn=cmd_build)
 
@@ -345,12 +358,15 @@ def main(argv=None) -> None:
                             "build over the whole collection)")
     c.add_argument("--index", required=True)
     c.add_argument("--chunk-size", type=int, default=4096)
+    c.add_argument("--codec", choices=list_codecs(), default=None,
+                   help="re-encode the new generation under this leaf codec "
+                        "(default: keep the store's current codec)")
     c.add_argument("--json", default=None)
     c.set_defaults(fn=cmd_compact)
 
     q = sub.add_parser("query", help="load a saved index and answer queries")
     q.add_argument("--index", required=True)
-    q.add_argument("--backend", choices=DISK_BACKEND_NAMES, default="local")
+    q.add_argument("--backend", choices=backend_names("disk"), default="local")
     q.add_argument("--memory-budget-mb", type=float, default=64.0)
     q.add_argument("--queries", type=int, default=16)
     q.add_argument("--difficulty", default="5%")

@@ -20,7 +20,8 @@ import time
 import jax
 import numpy as np
 
-from repro.api import (BACKEND_NAMES, BuildConfig, IndexConfig, KnnServeConfig,
+from repro.api import (BuildConfig, IndexConfig, KnnServeConfig,
+                       backend_names,
                        KnnServeEngine, QueryEngine, QueueFull, SearchConfig,
                        brute_force_knn, make_backend)
 from repro.data import DIFFICULTY_LEVELS, make_query_workload, random_walks
@@ -28,7 +29,7 @@ from repro.data import DIFFICULTY_LEVELS, make_query_workload, random_walks
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", choices=BACKEND_NAMES, default="local")
+    ap.add_argument("--backend", choices=backend_names("memory"), default="local")
     ap.add_argument("--num-series", type=int, default=100_000)
     ap.add_argument("--length", type=int, default=128)
     ap.add_argument("--requests", type=int, default=100)

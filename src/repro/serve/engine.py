@@ -348,7 +348,9 @@ class KnnServeEngine(SlotQueue):
             pass
         return self._collect()
 
-    def telemetry(self) -> dict:
+    def telemetry(self):
+        """The engine's :class:`repro.core.engine.Telemetry` with the
+        ``serving`` section filled in."""
         t = self.engine.telemetry()
         t["serving"] = {"pending": self.pending(),
                         "served": self._served,

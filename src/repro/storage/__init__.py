@@ -6,6 +6,9 @@
 from repro.storage.build import (  # noqa: F401
     build_index_streaming, build_index_to_disk, stream_base_files,
 )
+from repro.storage.codecs import (  # noqa: F401
+    CODEC_CHOICES, Codec, get_codec, list_codecs, register_codec,
+)
 from repro.storage.format import (  # noqa: F401
     FORMAT_NAME, FORMAT_VERSION, IndexFormatError, SavedIndex, load_index,
     open_index, read_manifest, save_index, verify_files,

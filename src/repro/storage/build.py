@@ -51,9 +51,9 @@ from repro.core.layout import (assemble_layout, compute_layout_geometry,
 from repro.core.tree import HerculesTree, build_tree_chunked, tree_stats
 from repro.data.pipeline import (ChunkSource, iter_device_chunks,
                                  iter_host_chunks)
-from repro.storage.format import (LAYOUT_FILE, LAYOUT_STATIC_FIELDS, LRD_FILE,
-                                  LSD_FILE, SMALL_LAYOUT_FIELDS, TREE_FILE,
-                                  generation_name, write_manifest)
+from repro.storage.format import (ENC_FILE, LAYOUT_FILE, LAYOUT_STATIC_FIELDS,
+                                  LRD_FILE, LSD_FILE, SMALL_LAYOUT_FIELDS,
+                                  TREE_FILE, generation_name, write_manifest)
 
 
 def _check_series_len(source: ChunkSource, config: IndexConfig) -> None:
@@ -125,16 +125,23 @@ def _write_small_arrays(path: str, tree: HerculesTree, geo: LayoutGeometry,
 
 
 def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
-                      generation: int = 0, prefetch: str | None = None):
+                      generation: int = 0, prefetch: str | None = None,
+                      codec: str = "raw"):
     """Chunk-streamed build of one base-file generation under ``path``.
 
     Writes ``tree.npz``/``layout.npz``/``lrd.npy``/``lsd.npy`` (suffixed by
     ``generation`` when nonzero) WITHOUT committing a manifest — callers
     (:func:`build_index_to_disk`, the store's ``compact``) publish the
-    manifest as their own atomic commit step. Returns
+    manifest as their own atomic commit step. A non-``raw`` ``codec``
+    additionally writes the ``enc.npy`` sidecar: every chunk is encoded as
+    it streams past, so the encoded file costs one extra scatter, not a
+    second pass over the collection. Returns
     ``(names, statics, max_depth, timings)`` where ``names`` maps logical
     file names to the generation's actual names.
     """
+    from repro.storage.codecs import get_codec
+
+    codec_impl = get_codec(codec)
     _check_series_len(source, config)
     prefetch = _resolve_prefetch(config, prefetch)
     read_stats: dict = {}
@@ -143,8 +150,10 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
     t_tree = time.perf_counter() - t0
 
     os.makedirs(path, exist_ok=True)
-    names = {name: generation_name(name, generation)
-             for name in (TREE_FILE, LAYOUT_FILE, LRD_FILE, LSD_FILE)}
+    logical = [TREE_FILE, LAYOUT_FILE, LRD_FILE, LSD_FILE]
+    if codec != "raw":
+        logical.append(ENC_FILE)
+    names = {name: generation_name(name, generation) for name in logical}
 
     # LRD/LSD as on-disk memmaps, scattered chunk by chunk. Pad rows beyond
     # num_series stay zero (ftruncate zero-fill) — the same bytes the
@@ -157,6 +166,11 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
     lsd = np.lib.format.open_memmap(
         os.path.join(path, names[LSD_FILE]), mode="w+", dtype=np.uint8,
         shape=(geo.n_pad, config.sax_segments))
+    enc = None
+    if codec != "raw":
+        enc = np.lib.format.open_memmap(
+            os.path.join(path, names[ENC_FILE]), mode="w+", dtype=np.uint8,
+            shape=(geo.n_pad, codec_impl.row_bytes(n)))
     for start, chunk in iter_host_chunks(source, prefetch=prefetch,
                                          telemetry=read_stats):
         # the chunk may be a reusable reader-slot view: the device copy is
@@ -167,8 +181,13 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
         pos = geo.inv_perm[start:start + chunk.shape[0]]
         lrd[pos] = chunk
         lsd[pos] = np.asarray(S.isax(dev, config.sax_segments))
+        if enc is not None:
+            enc[pos] = codec_impl.encode(np.asarray(chunk))
     lrd.flush()
     lsd.flush()
+    if enc is not None:
+        enc.flush()
+        del enc
     del lrd, lsd
     t_write = time.perf_counter() - t0
 
@@ -176,6 +195,7 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
     statics = {k: getattr(geo, k) for k in LAYOUT_STATIC_FIELDS}
     timings = {
         "streaming": True,
+        "codec": codec,
         "chunk_size": source.chunk_size,
         "num_chunks": source.num_chunks,
         "prefetch": prefetch,
@@ -193,7 +213,8 @@ def stream_base_files(source: ChunkSource, path: str, config: IndexConfig,
 def build_index_to_disk(source: ChunkSource, path: str,
                         config: IndexConfig | None = None,
                         extra_meta: dict | None = None,
-                        prefetch: str | None = None) -> dict:
+                        prefetch: str | None = None,
+                        codec: str = "raw") -> dict:
     """Chunk-streamed build straight to an index directory; the collection
     only ever exists as the on-disk LRD file. Returns the manifest (plus
     timing under ``extra["build"]``).
@@ -210,8 +231,8 @@ def build_index_to_disk(source: ChunkSource, path: str,
         os.remove(stale)
 
     names, statics, max_depth, timings = stream_base_files(
-        source, path, config, generation=0, prefetch=prefetch)
+        source, path, config, generation=0, prefetch=prefetch, codec=codec)
     extra = dict(extra_meta or {})
     extra["build"] = timings
     return write_manifest(path, config, max_depth, statics, extra=extra,
-                          files=names)
+                          files=names, codec=codec)

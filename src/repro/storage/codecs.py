@@ -1,0 +1,298 @@
+"""Pluggable leaf-compression codecs for the on-disk LRD hot path.
+
+Format v3 indexes may carry, next to the raw float32 ``lrd.npy``, an
+*encoded* sidecar (``enc.npy``) holding one fixed-width ``uint8`` row per
+series.  Out-of-core backends stream the encoded rows instead of the raw
+ones (fewer bytes off disk), decode them on device, and use the decoded
+values only to *select* candidates; reported answers are always re-checked
+against the full-precision rows, so every codec — lossy or not — yields
+answers bit-identical to ``LocalBackend``.
+
+A codec is a frozen dataclass registered by name:
+
+``encode(block)``
+    host-side: ``(B, n) float32 -> (B, row_bytes(n)) uint8``.  For lossy
+    codecs the encoded row *embeds* a per-row reconstruction-error bound
+    ``e >= ||s - decode(encode(s))||_2`` (computed in float64 and inflated)
+    so the engine can turn approximate distances into sound lower/upper
+    bounds without touching the raw rows.
+``decode(enc, series_len)``
+    device-side (jit-traceable): ``(B, W) uint8 -> ((B, n) float32 rows,
+    (B,) float32 err)``.  The output is a fresh on-device buffer — it never
+    aliases the reader slot the encoded bytes arrived in (this is the
+    ``decode`` cleanse herculint's alias-transfer rule knows about).
+``exact``
+    whether ``decode(encode(x)) == x`` bit-for-bit (then ``err == 0``).
+
+Use :func:`register_codec` to add codecs; :func:`list_codecs` enumerates
+the registry and :func:`get_codec` resolves a validated name.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import summaries as S
+
+__all__ = [
+    "Codec",
+    "RawCodec",
+    "Bf16Codec",
+    "SaxResidualCodec",
+    "register_codec",
+    "get_codec",
+    "list_codecs",
+    "CODEC_CHOICES",
+    "sax_segments_for",
+]
+
+# Error bounds are computed in float64 and inflated by this relative margin
+# before being narrowed to float32, so the stored bound stays sound even
+# after the narrowing and the engine's float32 bound arithmetic.
+_ERR_INFLATE = 1.0 + 1e-6
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """Protocol for leaf codecs (see module docstring for the contract)."""
+
+    name: str
+    exact: bool
+
+    def row_bytes(self, series_len: int) -> int:
+        """Encoded bytes per series (0 => no sidecar; stream raw rows)."""
+
+    def encode(self, block: np.ndarray) -> np.ndarray:
+        """Host: ``(B, n) float32 -> (B, row_bytes(n)) uint8``."""
+
+    def decode(self, enc, series_len: int):
+        """Device (traceable): ``(B, W) uint8 -> (rows f32, err f32)``."""
+
+
+def _err_bound(block: np.ndarray, decoded: np.ndarray) -> np.ndarray:
+    """Sound per-row float32 upper bound on ``||row - decoded_row||_2``.
+
+    ``decoded`` is one float32 evaluation of the decode arithmetic; other
+    evaluations (e.g. XLA fusing mul+add into fma inside a larger jit) may
+    differ by ~1 ulp per element, so on top of the measured error we add an
+    analytic re-association margin proportional to the row norms.
+    """
+    b64 = block.astype(np.float64)
+    d64 = decoded.astype(np.float64)
+    diff = b64 - d64
+    margin = (np.sqrt(np.sum(d64 * d64, axis=1))
+              + np.sqrt(np.sum(b64 * b64, axis=1))) * 2.0 ** -21 + 1e-6
+    err = (np.sqrt(np.sum(diff * diff, axis=1)) + margin) * _ERR_INFLATE
+    err32 = err.astype(np.float32)
+    # float64 -> float32 narrowing may round down; bump one ulp to stay sound.
+    return np.where(err32.astype(np.float64) < err,
+                    np.nextafter(err32, np.float32(np.inf)), err32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RawCodec:
+    """Identity codec: rows are the float32 bytes themselves (v2 behaviour).
+
+    ``row_bytes`` is the raw width, but no ``enc.npy`` sidecar is written —
+    the engine streams ``lrd.npy`` directly, exactly as in format v2.
+    """
+
+    name: str = "raw"
+    exact: bool = True
+
+    def row_bytes(self, series_len: int) -> int:
+        return 4 * series_len
+
+    def encode(self, block: np.ndarray) -> np.ndarray:
+        rows = np.ascontiguousarray(block, dtype=np.float32)
+        return rows.view(np.uint8).reshape(rows.shape[0], -1)
+
+    def decode(self, enc, series_len: int):
+        raw = jnp.reshape(enc, (enc.shape[0], series_len, 4))
+        rows = jax.lax.bitcast_convert_type(raw, jnp.float32)
+        return rows, jnp.zeros((enc.shape[0],), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec:
+    """bfloat16 rows + an embedded float32 error bound.
+
+    Row layout (``W = 2n + 4`` bytes, ~51% of raw for n >= 32)::
+
+        [ 2n bytes : bfloat16 values ][ 4 bytes : float32 err bound ]
+
+    bfloat16 truncates the float32 mantissa, so ``decode`` is a widening
+    (exact) upcast of an inexact narrowing: the engine needs the stored
+    ``err`` to bound true distances.  The payload prefix is bit-castable
+    straight to ``bfloat16`` on device, which is what the fused
+    ``decode_bf16_ed_matrix`` kernel exploits.
+    """
+
+    name: str = "bf16"
+    exact: bool = False
+
+    def row_bytes(self, series_len: int) -> int:
+        return 2 * series_len + 4
+
+    def encode(self, block: np.ndarray) -> np.ndarray:
+        rows = np.ascontiguousarray(block, dtype=np.float32)
+        half = rows.astype(jnp.bfloat16)  # round-to-nearest-even
+        err = _err_bound(rows, half.astype(np.float32))
+        out = np.empty((rows.shape[0], self.row_bytes(rows.shape[1])),
+                       dtype=np.uint8)
+        out[:, :-4] = half.view(np.uint8)
+        out[:, -4:] = err.view(np.uint8).reshape(-1, 4)
+        return out
+
+    @staticmethod
+    def split(enc):
+        """Traceable: ``(B, W) uint8 -> ((B, 2n) payload, (B,) err)``."""
+        payload = enc[:, :-4]
+        err = jax.lax.bitcast_convert_type(
+            jnp.reshape(enc[:, -4:], (enc.shape[0], 1, 4)), jnp.float32)
+        return payload, err[:, 0]
+
+    def decode(self, enc, series_len: int):
+        payload, err = self.split(enc)
+        raw = jnp.reshape(payload, (enc.shape[0], series_len, 2))
+        rows = jax.lax.bitcast_convert_type(raw, jnp.bfloat16)
+        return rows.astype(jnp.float32), err
+
+
+def sax_segments_for(series_len: int) -> int:
+    """Segment count for the sax-residual codec: the default when it divides
+    ``series_len``, else the largest divisor of ``series_len`` <= default."""
+    m = min(S.NUM_SAX_SEGMENTS, series_len)
+    while series_len % m:
+        m -= 1
+    return m
+
+
+@functools.lru_cache(maxsize=1)
+def _sax_value_table() -> np.ndarray:
+    """Per-code reconstruction values: midpoints of the iSAX breakpoint
+    cells, with the open outer cells clamped half a unit past the edge.
+
+    Computed in host numpy (scipy ``ndtri``) so it is a plain constant —
+    safe to close over inside jit traces, unlike ``S.sax_breakpoints``.
+    The table only has to agree between encode and decode; soundness comes
+    from the embedded err bound, not from matching jax's ndtri bit-for-bit.
+    """
+    from scipy.special import ndtri
+
+    qs = np.arange(1, S.SAX_ALPHABET, dtype=np.float64) / S.SAX_ALPHABET
+    bp = ndtri(qs)
+    lo = np.concatenate(([bp[0] - 1.0], bp))
+    hi = np.concatenate((bp, [bp[-1] + 1.0]))
+    return ((lo + hi) / 2.0).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SaxResidualCodec:
+    """iSAX reconstruction + int8 residual + embedded scale and error bound.
+
+    Row layout (``W = m + n + 8`` bytes, ~26% of raw for n >= 32)::
+
+        [ m bytes : uint8 iSAX codes ][ n bytes : int8 residual ]
+        [ 4 bytes : float32 residual scale ][ 4 bytes : float32 err bound ]
+
+    ``decode`` rebuilds the PAA step function from the codes via a fixed
+    256-entry value table (breakpoint-cell midpoints), then adds the
+    dequantized residual.  The residual is quantized per row with
+    ``scale = max|residual| / 127``, so the bound stays tight on smooth
+    rows and the stored ``err`` keeps pruning sound on rough ones.
+    """
+
+    name: str = "sax-residual"
+    exact: bool = False
+
+    def row_bytes(self, series_len: int) -> int:
+        return sax_segments_for(series_len) + series_len + 8
+
+    def encode(self, block: np.ndarray) -> np.ndarray:
+        rows = np.ascontiguousarray(block, dtype=np.float32)
+        num, n = rows.shape
+        m = sax_segments_for(n)
+        table = _sax_value_table()
+        codes = np.asarray(S.isax(jnp.asarray(rows), m))
+        recon = np.repeat(table[codes], n // m, axis=1)
+        resid = rows - recon
+        scale = (np.max(np.abs(resid), axis=1) / 127.0).astype(np.float32)
+        scale = np.maximum(scale, np.float32(1e-30))  # avoid 0-div on decode
+        q = np.clip(np.rint(resid / scale[:, None]), -127, 127).astype(np.int8)
+        out = np.empty((num, self.row_bytes(n)), dtype=np.uint8)
+        out[:, :m] = codes
+        out[:, m:m + n] = q.view(np.uint8)
+        out[:, m + n:m + n + 4] = scale.view(np.uint8).reshape(-1, 4)
+        out[:, m + n + 4:] = np.zeros((num, 4), np.uint8)
+        # Bound the error against the *actual* decode output (device
+        # arithmetic may fuse differently than a host mirror would), then
+        # patch the bound into the reserved tail bytes.
+        decoded = np.asarray(self.decode(jnp.asarray(out), n)[0])
+        err = _err_bound(rows, decoded)
+        out[:, m + n + 4:] = err.view(np.uint8).reshape(-1, 4)
+        return out
+
+    def decode(self, enc, series_len: int):
+        n = series_len
+        m = sax_segments_for(n)
+        codes = enc[:, :m].astype(jnp.int32)
+        q = jax.lax.bitcast_convert_type(enc[:, m:m + n], jnp.int8)
+        scale = jax.lax.bitcast_convert_type(
+            jnp.reshape(enc[:, m + n:m + n + 4], (enc.shape[0], 1, 4)),
+            jnp.float32)[:, 0]
+        err = jax.lax.bitcast_convert_type(
+            jnp.reshape(enc[:, m + n + 4:], (enc.shape[0], 1, 4)),
+            jnp.float32)[:, 0]
+        table = jnp.asarray(_sax_value_table())
+        recon = jnp.repeat(table[codes], n // m, axis=1)
+        rows = recon + q.astype(jnp.float32) * scale[:, None]
+        return rows, err
+
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register_codec(name: str) -> Callable[[Callable[[], Codec]], Callable[[], Codec]]:
+    """Class/factory decorator: ``@register_codec("name")`` registers the
+    codec produced by calling the decorated object with no arguments."""
+
+    def deco(factory):
+        codec = factory()
+        if codec.name != name:
+            raise ValueError(
+                f"codec name mismatch: registered as {name!r} but "
+                f"instance reports {codec.name!r}")
+        _REGISTRY[name] = codec
+        return factory
+
+    return deco
+
+
+def list_codecs() -> tuple[str, ...]:
+    """Registered codec names, registration order (``raw`` first)."""
+    return tuple(_REGISTRY)
+
+
+def get_codec(name: str) -> Codec:
+    """Resolve a codec by name; raises ``ValueError`` on unknown names."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; expected one of {list_codecs()}"
+        ) from None
+
+
+register_codec("raw")(RawCodec)
+register_codec("bf16")(Bf16Codec)
+register_codec("sax-residual")(SaxResidualCodec)
+
+#: Valid ``codec=`` values for CLIs and ``SearchConfig`` ("auto" = follow
+#: whatever the opened index was encoded with).
+CODEC_CHOICES = ("auto",) + tuple(_REGISTRY)

@@ -23,13 +23,27 @@ set:
                       (``repro.storage.store.Hercules``) lands new chunks
                       here so appends never rewrite the base files.
 
-Format version 2 (this build) adds the journal section and an optional
-per-file ``path`` indirection: a compaction writes its new base files under
+Format version 2 adds the journal section and an optional per-file ``path``
+indirection: a compaction writes its new base files under
 *generation-numbered* names (``lrd-00001.npy``) and republishes the manifest
 atomically, so the old index stays valid until the single
 ``os.replace(manifest)`` commit point — the ParIS+-style "organize for
 appends, never rewrite in place" discipline. Version-1 directories (no
 journal, plain file names) still load unchanged.
+
+Format version 3 (this build) adds an optional **encoded leaf sidecar**:
+
+    enc.npy         codec-encoded rows, position-aligned with lrd.npy,
+                    (n_pad, row_bytes) uint8 — present only when the index
+                    was built/compacted with a lossy codec. Out-of-core
+                    backends stream it instead of lrd.npy (fewer bytes off
+                    disk) and fall back to lrd.npy rows to make reported
+                    answers exact. See ``repro/storage/codecs.py``.
+
+plus a manifest ``codec`` section (``{"name", "row_bytes", "exact"}``).
+Version-1/2 directories still load unchanged and report codec ``raw``;
+``Hercules.compact(codec=...)`` migrates an index between codecs (the
+sidecar is rebuilt whenever the base generation is rewritten).
 
 Loading offers two shapes: :func:`load_index` materializes a full in-memory
 :class:`HerculesIndex` (bit-identical to the one that was saved), while
@@ -62,13 +76,14 @@ from repro.core.search import SearchConfig
 from repro.core.tree import BuildConfig, HerculesTree
 
 FORMAT_NAME = "hercules-index"
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
 
 MANIFEST_FILE = "manifest.json"
 TREE_FILE = "tree.npz"
 LAYOUT_FILE = "layout.npz"
 LRD_FILE = "lrd.npy"
 LSD_FILE = "lsd.npy"
+ENC_FILE = "enc.npy"
 _ARRAY_FILES = (TREE_FILE, LAYOUT_FILE, LRD_FILE, LSD_FILE)
 
 JOURNAL_DIR = "journal"
@@ -145,6 +160,12 @@ def journal_of(manifest: dict) -> dict:
             "rows": int(j.get("rows", 0))}
 
 
+def codec_of(manifest: dict) -> str:
+    """Name of the leaf codec the base files were written with. Version-1/2
+    manifests have no ``codec`` section and are raw by construction."""
+    return str((manifest.get("codec") or {}).get("name", "raw"))
+
+
 def has_base(manifest: dict) -> bool:
     """Whether the directory holds a committed base index (an empty store
     created by ``Hercules.create`` has only a manifest + journal)."""
@@ -163,7 +184,8 @@ def write_manifest(path: str, config: IndexConfig, max_depth: int,
                    entries: dict[str, dict] | None = None,
                    journal: dict | None = None,
                    generation: int = 0,
-                   base: bool = True) -> dict:
+                   base: bool = True,
+                   codec: str = "raw") -> dict:
     """Checksum the base array files already present under ``path`` and
     commit them — together with the journal segment list — by atomically
     publishing the manifest. The ``os.replace`` here is the single commit
@@ -174,12 +196,19 @@ def write_manifest(path: str, config: IndexConfig, max_depth: int,
     entries verbatim (an append republishes the untouched base files
     without re-reading them); ``base=False`` commits a manifest with no
     base index at all (an empty store awaiting its first compaction).
+    ``codec`` names the leaf codec the base files carry; non-``raw`` codecs
+    add the ``enc.npy`` sidecar to the committed file set.
     """
+    from repro.storage.codecs import get_codec
+
+    codec_impl = get_codec(codec)  # validates the name
     if entries is None:
         entries = {}
         if base:
             names = files or {}
-            for name in _ARRAY_FILES:
+            required = _ARRAY_FILES if codec == "raw" \
+                else _ARRAY_FILES + (ENC_FILE,)
+            for name in required:
                 actual = names.get(name, name)
                 fp = os.path.join(path, actual)
                 if not os.path.exists(fp):
@@ -191,6 +220,7 @@ def write_manifest(path: str, config: IndexConfig, max_depth: int,
                 entries[name] = entry
     else:
         entries = {name: dict(entry) for name, entry in entries.items()}
+    series_len = int(statics.get("series_len", 0))
     manifest = {
         "format": FORMAT_NAME,
         "version": FORMAT_VERSION,
@@ -201,6 +231,10 @@ def write_manifest(path: str, config: IndexConfig, max_depth: int,
         "files": entries,
         "generation": int(generation),
         "journal": journal_of({"journal": journal} if journal else {}),
+        "codec": {"name": codec,
+                  "row_bytes": codec_impl.row_bytes(series_len)
+                  if series_len else 0,
+                  "exact": bool(codec_impl.exact)},
         "extra": dict(extra or {}),
     }
     tmp = os.path.join(path, MANIFEST_FILE + ".tmp")
@@ -341,6 +375,8 @@ class SavedIndex:
     max_leaf: int
     num_leaves: int
     num_series: int
+    codec: str = "raw"
+    enc: np.ndarray | None = None  # (n_pad, row_bytes) uint8 memmap (lossy)
 
     @property
     def n_pad(self) -> int:
@@ -353,15 +389,20 @@ class SavedIndex:
     def _mapped(self, name: str) -> np.ndarray:
         arr = getattr(self, name)
         if arr is None:
+            if name == "enc" and self.codec == "raw" and self.lrd is not None:
+                raise IndexFormatError(
+                    f"{self.path!r}: index has no encoded sidecar (codec is "
+                    f"'raw'); stream lrd instead")
             raise IndexFormatError(
                 f"{self.path!r}: SavedIndex is closed (its memory maps were "
                 f"released); reopen the index to read {name}")
         return arr
 
     def close(self) -> None:
-        """Release the LRD/LSD memory maps. Idempotent. Any backend still
-        holding this handle will fail loudly instead of reading a dead map."""
-        for name in ("lrd", "lsd"):
+        """Release the LRD/LSD (and encoded-sidecar) memory maps. Idempotent.
+        Any backend still holding this handle will fail loudly instead of
+        reading a dead map."""
+        for name in ("lrd", "lsd", "enc"):
             arr = getattr(self, name)
             setattr(self, name, None)
             release = getattr(arr, "release", None)
@@ -438,15 +479,33 @@ def open_saved(path: str, manifest: dict) -> SavedIndex:
         raise IndexFormatError(
             f"{path!r}: {LRD_FILE} shape {tuple(lrd.shape)} does not match "
             f"manifest statics {statics}")
+    codec = codec_of(manifest)
+    enc = None
+    if codec != "raw":
+        try:
+            enc = np.load(os.path.join(path, array_path(manifest, ENC_FILE)),
+                          mmap_mode="r", allow_pickle=False)
+        except (OSError, ValueError) as e:
+            raise IndexFormatError(
+                f"{path!r}: cannot map encoded sidecar: {e}") from e
+        row_bytes = int(manifest["codec"].get("row_bytes", 0))
+        if (enc.ndim != 2 or enc.dtype != np.uint8
+                or enc.shape != (lrd.shape[0], row_bytes)):
+            raise IndexFormatError(
+                f"{path!r}: {ENC_FILE} shape {tuple(enc.shape)}/{enc.dtype} "
+                f"does not match manifest codec section {manifest['codec']}")
     # REPRO_SANITIZE=1 wraps the maps in use-after-close guards (no-op
     # pass-through otherwise): an escaped view raises UseAfterCloseError
     # instead of segfaulting (PR 4)
     lrd = sanitize.guard_mmap(lrd, f"{path}:lrd")
     lsd = sanitize.guard_mmap(lsd, f"{path}:lsd")
+    if enc is not None:
+        enc = sanitize.guard_mmap(enc, f"{path}:enc")
     return SavedIndex(
         path=path, manifest=manifest, config=config,
         max_depth=int(manifest["max_depth"]), tree=tree, small=small,
-        lrd=lrd, lsd=lsd, **{k: int(statics[k]) for k in LAYOUT_STATIC_FIELDS})
+        lrd=lrd, lsd=lsd, codec=codec, enc=enc,
+        **{k: int(statics[k]) for k in LAYOUT_STATIC_FIELDS})
 
 
 def open_index(path: str, verify: bool = True) -> SavedIndex:

@@ -69,7 +69,7 @@ from repro.storage.format import (LAYOUT_STATIC_FIELDS, MANIFEST_FILE,
 # files a crashed (uncommitted) mutation may leave behind; anything matching
 # that the manifest does not reference is swept by a writable open
 _ORPHAN_BASE_RE = re.compile(
-    r"^(?:tree|layout)(?:-\d{5})?\.npz$|^(?:lrd|lsd)(?:-\d{5})?\.npy$"
+    r"^(?:tree|layout)(?:-\d{5})?\.npz$|^(?:lrd|lsd|enc)(?:-\d{5})?\.npy$"
     r"|^manifest\.json\.tmp$")
 _ORPHAN_SEG_RE = re.compile(r"^seg-\d{5}\.(?:lrd|lsd)\.npy$")
 
@@ -173,11 +173,18 @@ class Hercules:
     @classmethod
     def create(cls, path: str, config: IndexConfig | None = None, *,
                data=None, chunk_size: int = 8192, overwrite: bool = False,
-               extra_meta: dict | None = None) -> "Hercules":
+               extra_meta: dict | None = None,
+               codec: str = "raw") -> "Hercules":
         """Create a store at ``path`` (mode ``"a"``). With ``data`` (an
         array or :class:`ChunkSource`) the base index is built immediately
         via the chunked streaming builder; without it the store starts
-        empty and the first ``append`` + ``compact`` builds the base."""
+        empty and the first ``append`` + ``compact`` builds the base.
+        ``codec`` selects the leaf codec for the base files (see
+        ``repro.storage.codecs``); answers stay bit-identical under every
+        codec — lossy codecs only shrink the streamed bytes."""
+        from repro.storage.codecs import get_codec
+
+        get_codec(codec)  # validate before touching the directory
         config = config or IndexConfig()
         mf = os.path.join(path, MANIFEST_FILE)
         if os.path.exists(mf):
@@ -189,10 +196,10 @@ class Hercules:
         os.makedirs(path, exist_ok=True)
         if data is None:
             write_manifest(path, config, 0, _EMPTY_STATICS, extra=extra_meta,
-                           base=False)
+                           base=False, codec=codec)
         else:
             build_index_to_disk(_as_source(data, chunk_size), path, config,
-                                extra_meta=extra_meta)
+                                extra_meta=extra_meta, codec=codec)
         return cls.open(path, "a")
 
     @classmethod
@@ -264,6 +271,13 @@ class Hercules:
         return int(segs[0]["series_len"]) if segs else None
 
     @property
+    def codec(self) -> str:
+        """Leaf codec of the committed base files (``"raw"`` for v1/v2
+        indexes and empty stores). Change it with ``compact(codec=...)``."""
+        from repro.storage.format import codec_of
+        return codec_of(self.manifest)
+
+    @property
     def data_version(self) -> int:
         """Bumped by every append/compact — the plan-invalidation epoch."""
         return self._data_version
@@ -290,6 +304,7 @@ class Hercules:
             "pending_rows": self.pending_rows,
             "journal_segments": len(self.journal["segments"]),
             "series_len": self.series_len,
+            "codec": self.codec,
             "data_version": self._data_version,
             "cached_engines": len(self._engines),
         }
@@ -400,12 +415,14 @@ class Hercules:
             self.path, config, int(self.manifest.get("max_depth", 0)),
             self.manifest.get("layout_static", _EMPTY_STATICS), extra=extra,
             entries=self.manifest.get("files", {}), journal=journal,
-            generation=self.generation, base=has_base(self.manifest))
+            generation=self.generation, base=has_base(self.manifest),
+            codec=self.codec)
         self._invalidate_engines()
         return segment
 
     def compact(self, chunk_size: int = 8192,
-                prefetch: str | None = None) -> dict:
+                prefetch: str | None = None,
+                codec: str | None = None) -> dict:
         """Fold every journal segment into a new base-file generation.
 
         Replays base rows (original id order) followed by journal rows
@@ -414,12 +431,22 @@ class Hercules:
         so the compacted index is **bit-identical** to building once over
         the concatenated collection. The old generation stays valid until
         the atomic manifest commit; its files and the journal segments are
-        swept afterwards. No-op when the journal is empty. Returns the
-        manifest.
+        swept afterwards. No-op when the journal is empty (unless
+        ``codec`` asks for a migration). Returns the manifest.
+
+        ``codec`` re-encodes the new generation under a different leaf
+        codec (``None`` keeps the store's current codec) — the v2→v3 (or
+        codec→codec) migration path. Since the base files are rewritten
+        anyway, a codec switch costs nothing extra.
         """
         self._require_writable()
+        if codec is not None:
+            from repro.storage.codecs import get_codec
+            get_codec(codec)  # validate before any I/O
         journal = self.journal
-        if not journal["segments"]:
+        target_codec = self.codec if codec is None else codec
+        if not journal["segments"] and (target_codec == self.codec
+                                        or self.saved is None):
             return self.manifest
         config = self.config
         parts: list = []
@@ -436,19 +463,22 @@ class Hercules:
         gen = self.generation + 1
         t0 = time.perf_counter()
         names, statics, max_depth, timings = stream_base_files(
-            source, self.path, config, generation=gen, prefetch=prefetch)
+            source, self.path, config, generation=gen, prefetch=prefetch,
+            codec=target_codec)
         extra = self._extra_with_provenance(None)
         extra["build"] = timings
         extra["compact"] = {
             "generation": gen,
             "journal_rows": journal["rows"],
             "segments": len(journal["segments"]),
+            "codec": target_codec,
             "seconds": round(time.perf_counter() - t0, 4),
         }
         extra.pop("append", None)
         manifest = write_manifest(
             self.path, config, max_depth, statics, extra=extra, files=names,
-            journal=None, generation=gen, base=True)      # <- commit point
+            journal=None, generation=gen, base=True,      # <- commit point
+            codec=target_codec)
         del seg_maps, source, parts
 
         old = self.saved

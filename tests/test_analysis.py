@@ -115,6 +115,48 @@ class TestAliasTransfer:
         assert not findings_for(src, "alias-transfer")
         assert findings_for(src, "bare-suppression")
 
+    def test_flags_enc_sidecar_like_lrd(self):
+        # the format-v3 encoded sidecar is a mapped segment too: _enc()
+        # results, .enc attributes, and enc-named values are all taint
+        # sources for the device-transfer sinks
+        src = """
+            import jax.numpy as jnp
+            def a(self):
+                return jnp.asarray(self._enc()[0:64])
+            def b(saved):
+                return jnp.asarray(saved.enc)
+            def c(enc_block):
+                return jnp.asarray(enc_block)
+        """
+        assert len(findings_for(src, "alias-transfer")) == 3
+
+    def test_decode_cleanses_encoded_views(self):
+        # the codec hot path: decode()/encode() reconstruct fresh buffers,
+        # so their results are safe to transfer even when fed mapped bytes
+        src = """
+            import jax.numpy as jnp
+            def stream(self, codec, n):
+                enc = self._enc()[0:4096]
+                rows, err = codec.decode(enc, n)
+                return jnp.asarray(rows), jnp.asarray(err)
+            def build(codec, chunk):
+                import numpy as np
+                return jnp.asarray(codec.encode(np.asarray(chunk)))
+        """
+        assert not findings_for(src, "alias-transfer")
+
+    def test_np_take_is_a_copy_gather(self):
+        # the codec finalize pattern: np.take gathers candidate rows into
+        # a fresh array (unlike x[idx], whose copy-vs-view outcome the
+        # model guesses from the index expression)
+        src = """
+            import jax.numpy as jnp
+            import numpy as np
+            def finalize(self, safe):
+                return jnp.asarray(np.take(self._lrd(), safe, axis=0))
+        """
+        assert not findings_for(src, "alias-transfer")
+
 
 # ---------------------------------------------------------------------------
 # mmap-lifetime

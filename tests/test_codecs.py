@@ -1,0 +1,428 @@
+"""Compressed leaves (format v3): codec layer + encoded out-of-core serving.
+
+Covers the PR's acceptance contract:
+* per-codec round-trips — raw is bit-exact; lossy codecs reconstruct
+  within the *embedded* per-row error bound (the soundness invariant the
+  engine's pruning math relies on), example-based and property-based;
+* format v3 — ``enc.npy`` sidecar + manifest codec section on create,
+  v2 directories still open and serve, ``compact(codec=...)`` migrates in
+  both directions (raw -> lossy -> raw removes the sidecar);
+* serving — ooc-scan and ooc-local answer **bit-identically** to
+  ``LocalBackend`` under every codec (sync + threaded prefetch, waves,
+  and under ``REPRO_SANITIZE=1``), with the certify-guard fallback still
+  exact when forced;
+* API — registry validation, ``SearchConfig.codec`` validation, codec /
+  index mismatch errors, telemetry counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.engine as engine
+from repro.analysis import sanitize
+from repro.core.engine import LocalBackend, QueryEngine
+from repro.core.index import HerculesIndex, IndexConfig
+from repro.core.search import SearchConfig
+from repro.core.tree import BuildConfig
+from repro.data.synthetic import make_query_workload, random_walks
+from repro.storage import Hercules, open_index
+from repro.storage.codecs import (CODEC_CHOICES, Codec, get_codec,
+                                  list_codecs, register_codec,
+                                  sax_segments_for)
+from repro.storage.format import ENC_FILE, MANIFEST_FILE, array_path
+
+from _hypothesis_compat import given, settings, st
+
+NUM, LEN = 4096, 64
+CFG = IndexConfig(
+    build=BuildConfig(leaf_capacity=64),
+    search=SearchConfig(k=3, l_max=4, chunk=256, scan_block=512))
+LOSSY = ("bf16", "sax-residual")
+BUDGET_MB = 2.0
+
+
+@pytest.fixture(scope="module")
+def data():
+    return random_walks(jax.random.PRNGKey(0), NUM, LEN)
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    return make_query_workload(jax.random.PRNGKey(1), data, 5, "5%")
+
+
+@pytest.fixture(scope="module")
+def stores(data, tmp_path_factory):
+    root = tmp_path_factory.mktemp("codecs")
+    out = {}
+    for name in list_codecs():
+        path = str(root / name.replace("-", "_"))
+        Hercules.create(path, CFG, data=np.asarray(data), codec=name).close()
+        out[name] = path
+    return out
+
+
+@pytest.fixture(scope="module")
+def local_ref(data, queries):
+    res = LocalBackend(HerculesIndex.build(data, CFG)).knn(queries, k=3)
+    return np.asarray(res.dists), np.asarray(res.ids)
+
+
+def _blocks(seed=0, num=64, n=LEN, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(num, n)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# codec round-trips + embedded error-bound soundness
+# ---------------------------------------------------------------------------
+
+class TestCodecRoundTrip:
+    def test_registry_lists_builtins(self):
+        assert list_codecs() == ("raw", "bf16", "sax-residual")
+        assert CODEC_CHOICES == ("auto", "raw", "bf16", "sax-residual")
+        for name in list_codecs():
+            codec = get_codec(name)
+            assert isinstance(codec, Codec) and codec.name == name
+        with pytest.raises(ValueError, match="unknown codec"):
+            get_codec("zstd")
+
+    def test_raw_is_bit_exact(self):
+        block = _blocks(1)
+        codec = get_codec("raw")
+        enc = codec.encode(block)
+        assert enc.dtype == np.uint8
+        assert enc.shape == (block.shape[0], codec.row_bytes(LEN))
+        rows, err = codec.decode(jnp.asarray(enc), LEN)
+        np.testing.assert_array_equal(np.asarray(rows), block)
+        assert not np.any(np.asarray(err))
+
+    @pytest.mark.parametrize("name", LOSSY)
+    @pytest.mark.parametrize("scale", [1.0, 1e-3, 1e4])
+    def test_lossy_error_within_embedded_bound(self, name, scale):
+        block = _blocks(2, scale=scale)
+        codec = get_codec(name)
+        assert not codec.exact
+        enc = codec.encode(block)
+        assert enc.shape == (block.shape[0], codec.row_bytes(LEN))
+        rows, err = codec.decode(jnp.asarray(enc), LEN)
+        true = np.linalg.norm(
+            block.astype(np.float64)
+            - np.asarray(rows).astype(np.float64), axis=1)
+        assert np.all(true <= np.asarray(err).astype(np.float64)), name
+
+    @pytest.mark.parametrize("name", LOSSY)
+    def test_bound_holds_under_jit(self, name):
+        # XLA may fuse the decode arithmetic differently inside a larger
+        # jit than in the eager evaluation encode measured against; the
+        # analytic re-association margin must absorb that
+        block = _blocks(3, num=128, scale=3.0)
+        codec = get_codec(name)
+        enc = jnp.asarray(codec.encode(block))
+        rows, err = jax.jit(
+            lambda e: codec.decode(e, LEN))(enc)
+        true = np.linalg.norm(
+            block.astype(np.float64)
+            - np.asarray(rows).astype(np.float64), axis=1)
+        assert np.all(true <= np.asarray(err).astype(np.float64)), name
+
+    @pytest.mark.parametrize("name", list_codecs())
+    @pytest.mark.parametrize("n", [7, 16, 96, 128])
+    def test_ragged_lengths(self, name, n):
+        block = _blocks(4, num=9, n=n)
+        codec = get_codec(name)
+        enc = codec.encode(block)
+        assert enc.shape == (9, codec.row_bytes(n))
+        rows, err = codec.decode(jnp.asarray(enc), n)
+        true = np.linalg.norm(
+            block.astype(np.float64)
+            - np.asarray(rows).astype(np.float64), axis=1)
+        assert np.all(true <= np.asarray(err).astype(np.float64))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 40),
+           st.integers(1, 100), st.sampled_from(["bf16", "sax-residual"]),
+           st.floats(1e-4, 1e6))
+    def test_property_bound_soundness(self, seed, num, n, name, scale):
+        block = _blocks(seed % (2**16), num=num, n=n, scale=scale)
+        codec = get_codec(name)
+        rows, err = codec.decode(jnp.asarray(codec.encode(block)), n)
+        true = np.linalg.norm(
+            block.astype(np.float64)
+            - np.asarray(rows).astype(np.float64), axis=1)
+        assert np.all(true <= np.asarray(err).astype(np.float64))
+
+    def test_sax_segments_for_divides(self):
+        for n in (1, 7, 16, 64, 96, 100, 128):
+            m = sax_segments_for(n)
+            assert 1 <= m <= 16 and n % m == 0
+
+    def test_register_codec_name_mismatch_rejected(self):
+        @dataclasses.dataclass(frozen=True)
+        class Bogus:
+            name: str = "actually-this"
+            exact: bool = True
+
+            def row_bytes(self, n):
+                return 4 * n
+
+            def encode(self, block):
+                return get_codec("raw").encode(block)
+
+            def decode(self, enc, n):
+                return get_codec("raw").decode(enc, n)
+
+        with pytest.raises(ValueError, match="name mismatch"):
+            register_codec("registered-as-that")(Bogus)
+        assert "registered-as-that" not in list_codecs()
+
+
+# ---------------------------------------------------------------------------
+# format v3: sidecar files, manifest section, migration
+# ---------------------------------------------------------------------------
+
+class TestFormatV3:
+    def test_create_writes_sidecar_and_manifest_section(self, stores):
+        for name in LOSSY:
+            with Hercules.open(stores[name]) as hx:
+                assert hx.codec == name
+                sec = hx.manifest["codec"]
+                assert sec["name"] == name and sec["exact"] is False
+                assert sec["row_bytes"] == get_codec(name).row_bytes(LEN)
+                enc = hx.saved.enc
+                assert enc is not None and enc.dtype == np.uint8
+                assert enc.shape == (hx.saved.lrd.shape[0], sec["row_bytes"])
+
+    def test_raw_store_has_no_sidecar(self, stores):
+        with Hercules.open(stores["raw"]) as hx:
+            assert hx.codec == "raw" and hx.saved.enc is None
+            manifest = json.load(
+                open(os.path.join(stores["raw"], MANIFEST_FILE)))
+            assert ENC_FILE not in manifest["files"]
+            with pytest.raises(Exception, match="no encoded sidecar"):
+                hx.saved._mapped("enc")
+
+    def test_sidecar_decodes_consistently_with_lrd(self, stores):
+        for name in LOSSY:
+            with Hercules.open(stores[name]) as hx:
+                codec = get_codec(name)
+                rows, err = codec.decode(jnp.asarray(hx.saved.enc[:256]), LEN)
+                true = np.linalg.norm(
+                    hx.saved.lrd[:256].astype(np.float64)
+                    - np.asarray(rows).astype(np.float64), axis=1)
+                assert np.all(true <= np.asarray(err).astype(np.float64))
+
+    def test_invalid_codec_rejected_at_create(self, data, tmp_path):
+        with pytest.raises(ValueError, match="unknown codec"):
+            Hercules.create(str(tmp_path / "bad"), CFG,
+                            data=np.asarray(data)[:256], codec="zstd")
+
+    def test_v2_manifest_still_opens_and_serves(self, data, queries,
+                                                tmp_path):
+        path = str(tmp_path / "v2idx")
+        Hercules.create(path, CFG, data=np.asarray(data), codec="raw").close()
+        mf = os.path.join(path, MANIFEST_FILE)
+        manifest = json.load(open(mf))
+        manifest["version"] = 2
+        manifest.pop("codec", None)
+        json.dump(manifest, open(mf, "w"))
+        with Hercules.open(path) as hx:
+            assert hx.codec == "raw"
+            res = hx.query(queries, k=3, backend="ooc-scan",
+                           memory_budget_mb=BUDGET_MB)
+            mem = LocalBackend(HerculesIndex.build(data, CFG)).knn(queries,
+                                                                   k=3)
+            np.testing.assert_array_equal(np.asarray(res.dists),
+                                          np.asarray(mem.dists))
+
+    def test_compact_migrates_v2_to_v3_with_codec(self, data, queries,
+                                                  tmp_path, local_ref):
+        path = str(tmp_path / "migrate")
+        Hercules.create(path, CFG, data=np.asarray(data), codec="raw").close()
+        mf = os.path.join(path, MANIFEST_FILE)
+        manifest = json.load(open(mf))
+        manifest["version"] = 2
+        manifest.pop("codec", None)
+        json.dump(manifest, open(mf, "w"))
+        with Hercules.open(path, "a") as hx:
+            hx.compact(codec="bf16")
+            assert hx.codec == "bf16"
+            assert json.load(open(mf))["version"] >= 3
+            res = hx.query(queries, k=3, backend="ooc-local",
+                           memory_budget_mb=BUDGET_MB)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+
+    def test_compact_back_to_raw_drops_sidecar(self, data, tmp_path):
+        path = str(tmp_path / "back")
+        Hercules.create(path, CFG, data=np.asarray(data)[:512],
+                        codec="bf16").close()
+        with Hercules.open(path, "a") as hx:
+            enc_file = os.path.join(path, array_path(hx.manifest, ENC_FILE))
+            assert os.path.exists(enc_file)
+            hx.compact(codec="raw")
+            assert hx.codec == "raw" and hx.saved.enc is None
+            assert ENC_FILE not in hx.manifest["files"]
+            # the orphan sweep on the next writable open removes the old
+            # generation's sidecar file from disk
+        with Hercules.open(path, "a") as hx:
+            assert not any(f.startswith("enc")
+                           for f in os.listdir(path) if f.endswith(".npy"))
+
+    def test_append_then_compact_keeps_codec(self, data, queries, tmp_path,
+                                             local_ref):
+        path = str(tmp_path / "appended")
+        half = NUM // 2
+        arr = np.asarray(data)
+        Hercules.create(path, CFG, data=arr[:half], codec="bf16").close()
+        with Hercules.open(path, "a") as hx:
+            hx.append(arr[half:])
+            hx.compact()
+            assert hx.codec == "bf16" and hx.generation == 1
+            res = hx.query(queries, k=3, backend="ooc-scan",
+                           memory_budget_mb=BUDGET_MB)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+            np.testing.assert_array_equal(np.asarray(res.ids), local_ref[1])
+
+
+# ---------------------------------------------------------------------------
+# serving: bit-identical answers through the encoded stream
+# ---------------------------------------------------------------------------
+
+class TestCodecServing:
+    @pytest.mark.parametrize("backend", ["ooc-scan", "ooc-local"])
+    @pytest.mark.parametrize("name", list_codecs())
+    def test_bit_identical_to_local_backend(self, stores, queries, local_ref,
+                                            backend, name):
+        with Hercules.open(stores[name]) as hx:
+            eng = hx.engine(backend, memory_budget_mb=BUDGET_MB)
+            res = eng.knn(queries, k=3)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+            np.testing.assert_array_equal(np.asarray(res.ids), local_ref[1])
+            t = eng.stats()
+            assert t["codec_fallbacks"] == 0
+            if name in LOSSY:
+                assert t["codec_refine_rows"] > 0
+
+    @pytest.mark.parametrize("backend", ["ooc-scan", "ooc-local"])
+    @pytest.mark.parametrize("name", LOSSY)
+    def test_threaded_prefetch_under_sanitizer(self, stores, queries,
+                                               local_ref, backend, name,
+                                               monkeypatch):
+        monkeypatch.setenv(sanitize.ENV_VAR, "1")
+        assert sanitize.sanitize_enabled()
+        with Hercules.open(stores[name]) as hx:
+            eng = hx.engine(backend, memory_budget_mb=BUDGET_MB,
+                            prefetch="thread")
+            res = eng.knn(queries, k=3)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+            np.testing.assert_array_equal(np.asarray(res.ids), local_ref[1])
+
+    @pytest.mark.parametrize("backend", ["ooc-scan", "ooc-local"])
+    @pytest.mark.parametrize("name", LOSSY)
+    def test_wave_plan_bit_identical(self, stores, queries, local_ref,
+                                     backend, name):
+        with Hercules.open(stores[name]) as hx:
+            eng = hx.engine(backend, memory_budget_mb=BUDGET_MB)
+            res = eng.knn(queries, k=3, wave=True)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+            np.testing.assert_array_equal(np.asarray(res.ids), local_ref[1])
+            assert eng.telemetry().ooc.wave_calls >= 1
+
+    @pytest.mark.parametrize("name", LOSSY)
+    def test_forced_guard_fallback_stays_exact(self, stores, queries,
+                                               local_ref, name, monkeypatch):
+        # a zero candidate margin makes the LB pool exactly k wide, which
+        # the certify guard (k-th LB >= k-th UB) rejects for lossy codecs
+        monkeypatch.setattr(engine, "_CAND_MARGIN", 0)
+        with Hercules.open(stores[name]) as hx:
+            eng = hx.engine("ooc-scan", memory_budget_mb=BUDGET_MB)
+            res = eng.knn(queries, k=3)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+            assert eng.stats()["codec_fallbacks"] > 0
+
+    @pytest.mark.parametrize("name", LOSSY)
+    def test_bf16_streams_fewer_bytes_than_raw(self, stores, queries, name):
+        with Hercules.open(stores["raw"]) as hx:
+            eng = hx.engine("ooc-scan", memory_budget_mb=BUDGET_MB)
+            eng.knn(queries, k=3)
+            raw_bytes = eng.stats()["bytes_streamed"]
+        with Hercules.open(stores[name]) as hx:
+            eng = hx.engine("ooc-scan", memory_budget_mb=BUDGET_MB)
+            eng.knn(queries, k=3)
+            enc_bytes = eng.stats()["bytes_streamed"]
+        # encoded stream + float32 re-check must stay well under raw
+        assert enc_bytes < 0.62 * raw_bytes
+
+    def test_codec_raw_override_streams_float32(self, stores, queries,
+                                                local_ref):
+        with Hercules.open(stores["bf16"]) as hx:
+            eng = hx.engine("ooc-scan", memory_budget_mb=BUDGET_MB,
+                            search=dataclasses.replace(CFG.search,
+                                                       codec="raw"))
+            res = eng.knn(queries, k=3)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+            assert eng.stats()["codec_refine_rows"] == 0
+
+    def test_codec_mismatch_raises(self, stores, queries):
+        with Hercules.open(stores["bf16"]) as hx:
+            eng = hx.engine("ooc-scan", memory_budget_mb=BUDGET_MB,
+                            search=dataclasses.replace(
+                                CFG.search, codec="sax-residual"))
+            with pytest.raises(ValueError, match="encoded with"):
+                eng.knn(queries, k=3)
+
+    def test_lossy_codec_on_raw_index_raises(self, stores, queries):
+        with Hercules.open(stores["raw"]) as hx:
+            eng = hx.engine("ooc-scan", memory_budget_mb=BUDGET_MB,
+                            search=dataclasses.replace(CFG.search,
+                                                       codec="bf16"))
+            with pytest.raises(ValueError, match="encoded with"):
+                eng.knn(queries, k=3)
+
+    def test_search_config_validates_codec(self):
+        with pytest.raises(ValueError, match="codec"):
+            SearchConfig(codec="zstd")
+        assert SearchConfig(codec="bf16").codec == "bf16"
+
+    def test_telemetry_exposes_codec_counters(self, stores, queries):
+        with Hercules.open(stores["bf16"]) as hx:
+            eng = hx.engine("ooc-scan", memory_budget_mb=BUDGET_MB)
+            eng.knn(queries, k=3)
+            tele = eng.telemetry()
+            assert tele.ooc.codec_fallbacks == 0
+            assert tele.ooc.codec_refine_rows > 0
+            assert tele["ooc"]["bytes_streamed"] == tele.ooc.bytes_streamed
+            assert hx.describe()["codec"] == "bf16"
+            assert eng.stats()["codec"] == "bf16"
+
+
+# ---------------------------------------------------------------------------
+# direct open_index path (no store facade)
+# ---------------------------------------------------------------------------
+
+class TestSavedIndexCodec:
+    def test_open_index_maps_sidecar(self, stores):
+        saved = open_index(stores["sax-residual"])
+        try:
+            assert saved.codec == "sax-residual"
+            enc = saved._mapped("enc")
+            assert enc.dtype == np.uint8
+        finally:
+            saved.close()
+
+    def test_backend_through_query_engine(self, stores, queries, local_ref):
+        saved = open_index(stores["bf16"])
+        try:
+            eng = QueryEngine(engine.OutOfCoreScanBackend(
+                saved, CFG.search, memory_budget_mb=BUDGET_MB))
+            res = eng.knn(queries, k=3)
+            np.testing.assert_array_equal(np.asarray(res.dists), local_ref[0])
+        finally:
+            saved.close()

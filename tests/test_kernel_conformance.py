@@ -178,6 +178,71 @@ class TestEDMinConformance:
 
 
 # ---------------------------------------------------------------------------
+# decode_bf16 + ed_matrix (fused codec decode, format v3)
+# ---------------------------------------------------------------------------
+
+def _bf16_payload(seed, q, n, length, scale=1.0):
+    """Queries + the byte image of bf16-quantized rows (what Bf16Codec's
+    payload prefix stores), via the same astype both codec and XLA use."""
+    qa, sa = _qs(seed, q, n, length, scale=scale)
+    payload = np.asarray(sa.astype(jnp.bfloat16)).view(np.uint8)
+    return qa, jnp.asarray(payload.reshape(n, 2 * length))
+
+
+class TestDecodeBf16EDConformance:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 9), st.integers(1, 130),
+           st.integers(1, 96))
+    def test_property_ragged_shapes(self, seed, q, n, length):
+        qa, payload = _bf16_payload(seed, q, n, length)
+        out = ops.decode_bf16_ed_matrix(qa, payload, mode=MODE)
+        assert_close(out, ref.decode_bf16_ed_matrix_ref(qa, payload))
+
+    @pytest.mark.parametrize("q,n,length", [
+        (1, 1, 1),          # fully degenerate
+        (1, 100, 128),      # single query, ragged rows
+        (5, 77, 48),        # ragged everything
+        (8, 129, 33),       # one past a block boundary
+    ])
+    def test_shapes(self, q, n, length):
+        qa, payload = _bf16_payload(0, q, n, length)
+        out = ops.decode_bf16_ed_matrix(qa, payload, mode=MODE)
+        assert_close(out, ref.decode_bf16_ed_matrix_ref(qa, payload))
+
+    def test_decode_matches_numpy_bitcast(self):
+        # the byte image decodes to exactly the bf16 values (upcast exact)
+        _, payload = _bf16_payload(3, 1, 13, 40)
+        rows = ref.decode_bf16_ref(payload)
+        want = np.asarray(payload, np.uint8).reshape(13, 40, 2) \
+            .view("<u2").squeeze(-1).astype(np.uint32) << 16
+        want = want.view(np.float32).reshape(13, 40)
+        np.testing.assert_array_equal(np.asarray(rows), want)
+
+    def test_fused_matches_codec_decode_then_ed(self):
+        # the fused entry point == Bf16Codec.decode followed by ed_matrix:
+        # the engine's kernel-mode branch and generic branch agree
+        from repro.storage.codecs import get_codec
+
+        codec = get_codec("bf16")
+        rng = np.random.default_rng(7)
+        block = rng.normal(size=(33, 48)).astype(np.float32) * 3.0
+        enc = jnp.asarray(codec.encode(block))
+        payload, _ = codec.split(enc)
+        qa = jnp.asarray(rng.normal(size=(4, 48)).astype(np.float32))
+        fused = ops.decode_bf16_ed_matrix(qa, payload, mode=MODE)
+        rows, _ = codec.decode(enc, 48)
+        assert_close(fused, ref.ed_matrix_ref(qa, rows))
+
+    def test_large_magnitudes(self):
+        # bf16 keeps f32's exponent range: 1e18-scale rows stay finite
+        qa, payload = _bf16_payload(2, 3, 17, 24, scale=1.0e18)
+        out = ops.decode_bf16_ed_matrix(qa, payload, mode=MODE)
+        want = ref.decode_bf16_ed_matrix_ref(qa, payload)
+        assert np.all(np.isfinite(np.asarray(want)))
+        assert_close(out, want, scale=1.0e18)
+
+
+# ---------------------------------------------------------------------------
 # lb_sax
 # ---------------------------------------------------------------------------
 

@@ -37,7 +37,8 @@ from repro.data.pipeline import ArrayChunkSource
 from repro.data.synthetic import make_query_workload, random_walks
 from repro.storage import (Hercules, IndexFormatError, load_index,
                            open_index, save_index)
-from repro.storage.format import JOURNAL_DIR, MANIFEST_FILE
+from repro.storage.format import (FORMAT_VERSION, JOURNAL_DIR,
+                                  MANIFEST_FILE)
 
 from tests._hypothesis_compat import given, settings, st
 
@@ -295,7 +296,7 @@ class TestCrashSafety:
 
     def test_v1_directory_still_opens(self, data_a, tmp_path, queries):
         """A pre-journal (version 1) manifest opens, serves, and migrates
-        to v2 on its first append."""
+        to the current format version on its first append."""
         path = str(tmp_path / "idx")
         save_index(HerculesIndex.build(data_a, CFG), path)
         mf = os.path.join(path, MANIFEST_FILE)
@@ -309,7 +310,7 @@ class TestCrashSafety:
             assert hx.generation == 0 and hx.pending_rows == 0
             hx.query(queries, k=1)
             hx.append(data_a[:16])
-        assert json.load(open(mf))["version"] == 2
+        assert json.load(open(mf))["version"] == FORMAT_VERSION
 
 
 class TestResourceRelease:
