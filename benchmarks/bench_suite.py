@@ -327,6 +327,47 @@ def bench_persistence(num=16384, n=128, nq=8, k=1, chunk=4096,
                  read_wait_seconds=round(st["read_wait_seconds"], 4),
                  overlap_blocks=int(st["overlap_blocks"]))
 
+        # sharded out-of-core serving: the same saved index through a
+        # dist-ooc mesh, one reader per shard. Rows only for shard counts
+        # the visible device world can host — force more with
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N. Answers are
+        # asserted exact and identical across shard counts; rows_streamed
+        # is per shard, so the imbalance column is the plan quality.
+        import warnings as _warnings
+
+        n_dev = len(jax.devices())
+        dist_ref = None
+        for shards in (1, 2, 4, 8):
+            if shards > n_dev:
+                print(f"# dist_ooc_shards_{shards}: skipped "
+                      f"({n_dev} visible device(s); force 8 with XLA_FLAGS="
+                      f"--xla_force_host_platform_device_count=8)")
+                continue
+            with _warnings.catch_warnings():
+                _warnings.simplefilter("ignore", RuntimeWarning)
+                dooc = make_disk_backend(
+                    "dist-ooc", path,
+                    search=_dc.replace(cfg.search, k=k, prefetch="thread"),
+                    memory_budget_mb=memory_budget_mb, shards=shards)
+            r_d = dooc.knn(q, k=k)
+            _check_exact(r_d.dists, data, q, k)
+            if dist_ref is not None:
+                assert np.array_equal(np.asarray(dist_ref),
+                                      np.asarray(r_d.dists)), \
+                    "shard counts disagree"
+            dist_ref = r_d.dists
+            ds = dict(dooc.stats()["dist"])  # one call's streaming traffic
+            t = time_call(lambda: dooc.knn(q, k=k))
+            emit(f"dist_ooc_shards_{shards}", t / nq,
+                 f"rows_streamed={sum(ds['rows_streamed'])}"
+                 f";imbalance={ds['imbalance']:.2f}"
+                 f";read_wait_s={sum(ds['read_wait_seconds']):.4f}",
+                 shards=shards,
+                 rows_streamed=[int(r) for r in ds["rows_streamed"]],
+                 imbalance=round(float(ds["imbalance"]), 4),
+                 plan_imbalance=round(float(ds["plan_imbalance"]), 4),
+                 read_wait_seconds=round(sum(ds["read_wait_seconds"]), 4))
+
         # format v3 leaf codecs: one store per codec over the same
         # collection, streamed through ooc-scan. ``bytes_streamed`` is the
         # bandwidth the codec buys (encoded stream + float32 re-check of

@@ -77,6 +77,10 @@ def iter_scopes(tree: ast.Module) -> Iterator[ast.AST]:
 #: mapped exactly like lrd/lsd, so the same aliasing hazards apply.
 VIEW_NAME_COMPONENTS = {
     "lrd", "lsd", "enc", "mmap", "memmap", "slot", "slots", "view", "views",
+    # dist-ooc per-shard row-range views (repro.distributed.ooc._ShardRows):
+    # a `shard_rows` / `shard_view` name is a window onto the mapped base
+    # file — slicing it hands out mmap-backed memory like slicing the file
+    "shard", "shards",
 }
 
 #: Attribute reads that hand out mapped segments (`saved.lrd`, `idx.lsd`,
@@ -87,7 +91,10 @@ VIEW_ATTRS = {"lrd", "lsd", "enc"}
 #: ``chunk`` is here because the ChunkSource protocol documents that
 #: ``source.chunk(lo, hi)`` may return a view of the underlying (possibly
 #: memory-mapped) buffer; ``_journal_rows`` returns mmap-mode np.load
-#: results per segment.
+#: results per segment. A ``_ShardView._mapped()`` result (the dist-ooc
+#: per-shard ``_ShardRows`` range view) is covered by ``_mapped``:
+#: slicing it inside ``shard_map`` yields mapped memory exactly like
+#: slicing the base file, so the device-transfer rules apply unchanged.
 VIEW_METHODS = {"_mapped", "_lrd", "_lsd", "_enc", "chunk", "_journal_rows"}
 
 #: Method calls whose *result* is always a fresh buffer even when the

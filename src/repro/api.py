@@ -44,6 +44,17 @@ plus :func:`register_codec` / :func:`list_codecs` make the codec set
 pluggable; ``SearchConfig.codec`` (``"auto"`` follows the index) selects
 per call and flows through plan-cache keys like every other config field.
 
+**Distributed serving (dist-ooc).** ``hx.engine("dist-ooc", shards=8)``
+serves one on-disk index from every device of a mesh at once: the manifest
+records a shard *plan* (contiguous leaf-run row ranges balanced by rows —
+:class:`ShardPlan` / :func:`shard_plan`, derivable on open for old
+indexes), each device memory-maps and streams **only its own** row range,
+and per-shard top-k merges through a ``shard_map`` collective whose stable
+``top_k`` reproduces the single-host tie order — answers stay bit-identical
+to ``local`` for every shard count, codec, and ``kernel_mode``. Telemetry
+gains a per-shard ``dist`` section (see README "Distributed serving" for
+the ``XLA_FLAGS=--xla_force_host_platform_device_count`` recipe).
+
 **Telemetry.** ``QueryEngine.telemetry()`` returns the :class:`Telemetry`
 dataclass-of-sections (one shape for serving counters, plan-cache, paths,
 pruning, and — for disk backends — streaming/codec counters). The old
@@ -64,6 +75,9 @@ old dict access                         Telemetry field
                                         carries ``bytes_streamed`` and the
                                         ``codec_refine_rows`` /
                                         ``codec_fallbacks`` counters)
+``t["dist"]["rows_streamed" | ...]``    ``t.dist.rows_streamed`` ...
+                                        (per-shard lists; ``None`` — key
+                                        absent — except under ``dist-ooc``)
 ``t["serving"]`` (KnnServeEngine)       ``t.serving``
 ======================================  ===================================
 
@@ -90,11 +104,11 @@ old surface                             store-API successor
 See README.md for the full tour.
 """
 from repro.core.engine import (  # noqa: F401
-    BACKEND_NAMES, BACKENDS, DISK_BACKEND_NAMES, BackendSpec, EngineConfig,
-    LatencyTelemetry, LocalBackend, OocTelemetry, OutOfCoreLocalBackend,
-    OutOfCoreScanBackend, PathsTelemetry, PlanCacheTelemetry,
-    PruningTelemetry, QueryEngine, ScanBackend, SearchBackend,
-    ShardedBackend, Telemetry, backend_names, dense_scan_knn,
+    BACKEND_NAMES, BACKENDS, DISK_BACKEND_NAMES, BackendSpec, DistTelemetry,
+    EngineConfig, LatencyTelemetry, LocalBackend, OocTelemetry,
+    OutOfCoreLocalBackend, OutOfCoreScanBackend, PathsTelemetry,
+    PlanCacheTelemetry, PruningTelemetry, QueryEngine, ScanBackend,
+    SearchBackend, ShardedBackend, Telemetry, backend_names, dense_scan_knn,
     kernel_scan_knn, make_backend, make_disk_backend, resolve_backend_name,
 )
 from repro.kernels.compat import KERNEL_MODES, resolve_kernel_mode  # noqa: F401
@@ -113,7 +127,8 @@ from repro.serve.engine import (  # noqa: F401
     KnnAnswer, KnnFailure, KnnServeConfig, KnnServeEngine, QueueFull,
 )
 from repro.storage import (  # noqa: F401
-    CODEC_CHOICES, Codec, FORMAT_VERSION, Hercules, IndexFormatError,
-    SavedIndex, build_index_streaming, build_index_to_disk, get_codec,
-    list_codecs, load_index, open_index, register_codec, save_index,
+    BALANCE_WARN_RATIO, CODEC_CHOICES, Codec, FORMAT_VERSION, Hercules,
+    IndexFormatError, SavedIndex, ShardPlan, build_index_streaming,
+    build_index_to_disk, get_codec, list_codecs, load_index, open_index,
+    partition_plan, register_codec, save_index, shard_plan,
 )

@@ -1594,6 +1594,31 @@ class OocTelemetry(_TelemetrySection):
 
 
 @dataclasses.dataclass
+class DistTelemetry(_TelemetrySection):
+    """Per-shard accounting of the distributed out-of-core backend
+    (``dist-ooc``; absent for single-host backends). List fields are
+    indexed by shard. ``imbalance`` is the max/min per-shard
+    ``rows_streamed`` ratio of the traffic actually served;
+    ``plan_imbalance`` is the same ratio over the shard *plan*'s row
+    counts, and ``balance_warning`` mirrors the
+    ``repro.storage.partition`` guardrail (plan ratio above
+    ``BALANCE_WARN_RATIO``). ``row_range`` is each shard's assigned
+    ``[lo, hi)`` file-row range and ``rows_touched`` the absolute extremes
+    its readers actually touched (``None`` until the first read) — the
+    residency-confinement proof: touched ⊆ assigned, always."""
+    shards: int = 0
+    rows_streamed: list = dataclasses.field(default_factory=list)
+    read_wait_seconds: list = dataclasses.field(default_factory=list)
+    bytes_streamed: list = dataclasses.field(default_factory=list)
+    imbalance: float = 1.0
+    plan_rows: list = dataclasses.field(default_factory=list)
+    plan_imbalance: float = 1.0
+    balance_warning: bool = False
+    row_range: list = dataclasses.field(default_factory=list)
+    rows_touched: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
 class Telemetry(_TelemetrySection):
     """The one serving-telemetry shape (see ``repro.api`` for the key →
     field mapping table). Sections are dataclasses; ``ooc`` is ``None``
@@ -1611,6 +1636,7 @@ class Telemetry(_TelemetrySection):
     pruning: PruningTelemetry = dataclasses.field(
         default_factory=PruningTelemetry)
     ooc: OocTelemetry | None = None
+    dist: DistTelemetry | None = None
     serving: dict | None = None
 
     _ALIASES = {"latency_s": "latency"}
@@ -1698,7 +1724,11 @@ class QueryEngine:
                 [q, jnp.zeros((bucket - q.shape[0], q.shape[1]), q.dtype)],
                 axis=0)
 
-        key = (cfg, bucket, q.shape[1], q.dtype.name, wave)
+        # plan_signature folds backend identity the SearchConfig cannot see
+        # into the key — e.g. dist-ooc's mesh shape: a plan compiled for one
+        # mesh must never serve another
+        key = (cfg, bucket, q.shape[1], q.dtype.name, wave,
+               getattr(self.backend, "plan_signature", None))
         plan = self._plans.get(key)
         if plan is None:
             t0 = time.perf_counter()
@@ -1769,6 +1799,12 @@ class QueryEngine:
             ooc = OocTelemetry(**{f.name: bstats[f.name]
                                   for f in dataclasses.fields(OocTelemetry)
                                   if f.name in bstats})
+        dist = None
+        if "dist" in bstats:
+            dsec = bstats["dist"]
+            dist = DistTelemetry(**{f.name: dsec[f.name]
+                                    for f in dataclasses.fields(DistTelemetry)
+                                    if f.name in dsec})
         return Telemetry(
             backend=self.backend.name,
             calls=t["calls"],
@@ -1793,7 +1829,7 @@ class QueryEngine:
             pruning=PruningTelemetry(
                 eapca_mean=t["eapca_pr_sum"] / n_stat,
                 sax_mean=t["sax_pr_sum"] / n_stat),
-            ooc=ooc)
+            ooc=ooc, dist=dist)
 
     def stats(self) -> dict:
         return self.backend.stats()
@@ -1846,6 +1882,9 @@ BACKENDS: dict[str, BackendSpec] = {s.name: s for s in (
     BackendSpec("ooc-local", ("disk",),
                 "index-pruned out-of-core answering (stream only "
                 "unprunable leaves/series)"),
+    BackendSpec("dist-ooc", ("disk",),
+                "sharded out-of-core serving: each mesh device streams its "
+                "own leaf-run row range, top-k merged collectively"),
 )}
 
 
@@ -1904,7 +1943,9 @@ def make_disk_backend(name: str, store, *,
                       search: SearchConfig | None = None,
                       memory_budget_mb: float = 64.0,
                       verify: bool = True,
-                      prefetch: str | None = None) -> SearchBackend:
+                      prefetch: str | None = None,
+                      shards: int | None = None,
+                      mesh=None) -> SearchBackend:
     """Serve a saved index by backend name.
 
     ``store`` is an index-directory path, an already-open ``SavedIndex``,
@@ -1916,7 +1957,10 @@ def make_disk_backend(name: str, store, *,
     stream them under ``memory_budget_mb``. ``prefetch`` overrides
     ``SearchConfig.prefetch`` for the streamed backends (``"thread"`` =
     async reader thread + two-slot host buffer; answers bit-identical to
-    ``"sync"``).
+    ``"sync"``). ``dist-ooc`` serves the index from every device of a
+    mesh at once — ``shards`` (default: device count) or an explicit
+    ``mesh`` picks the layout; each shard streams only its own leaf-run
+    row range and ``memory_budget_mb`` applies per shard.
 
     .. deprecated:: store API
         For directory paths prefer ``repro.api.Hercules.open(path)
@@ -1953,4 +1997,11 @@ def make_disk_backend(name: str, store, *,
     if name == "ooc-local":
         return OutOfCoreLocalBackend(saved, search,
                                      memory_budget_mb=memory_budget_mb)
+    if name == "dist-ooc":
+        # lazy import: core must not depend on repro.distributed at import
+        from repro.distributed.ooc import DistOutOfCoreBackend
+
+        return DistOutOfCoreBackend(saved, search,
+                                    memory_budget_mb=memory_budget_mb,
+                                    shards=shards, mesh=mesh)
     raise AssertionError(f"registered backend {name!r} not constructed")

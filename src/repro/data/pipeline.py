@@ -235,10 +235,19 @@ class SyncChunkReader:
         """Host→device transfer of a fetched block. Sync blocks are fresh
         arrays the transfer machinery keeps alive, so the async
         ``device_put`` needs no completion barrier (``block`` is accepted
-        for surface parity with the threaded reader and ignored)."""
+        for surface parity with the threaded reader and ignored).
+
+        ``device=None`` defers to jax's current default device — NOT a
+        hardcoded ``jax.devices()[0]`` — so a consumer running under a
+        ``jax.default_device(...)`` context (each dist-ooc shard pins its
+        stream to its own mesh device that way) gets its blocks on the
+        right device, same as the threaded reader's ``_staged_copy``."""
         del block
+        if device is None:
+            # herculint: ok[alias-transfer] -- sync get() returns a fresh buffer per call; nothing refills it, so a zero-copy alias is harmless
+            return jax.device_put(view)
         # herculint: ok[alias-transfer] -- sync get() returns a fresh buffer per call; nothing refills it, so a zero-copy alias is harmless
-        return jax.device_put(view, device or jax.devices()[0])
+        return jax.device_put(view, device)
 
     def close(self) -> None:
         self._closed = True

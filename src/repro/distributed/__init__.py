@@ -3,6 +3,7 @@ from repro.distributed.sharding import (  # noqa: F401
     batch_sharding, cache_sharding, install_activation_hook, param_sharding,
     shard_params_tree,
 )
+from repro.distributed.ooc import DistOutOfCoreBackend  # noqa: F401
 from repro.distributed.search import (  # noqa: F401
     StackedIndex, build_distributed_index, distributed_knn,
 )

@@ -223,7 +223,8 @@ def cmd_query(args) -> None:
                   "memory_budget_mb": args.memory_budget_mb,
                   "prefetch": args.prefetch or saved.config.search.prefetch}
 
-    if args.backend.startswith("ooc"):
+    streams = "ooc" in args.backend   # ooc-scan | ooc-local | dist-ooc
+    if streams:
         # one budget→rows code path: the backends' own classmethod (the CLI
         # used to re-derive this by hand and could drift from _validate)
         from repro.core.engine import _OutOfCoreBase
@@ -233,7 +234,8 @@ def cmd_query(args) -> None:
     t0 = time.perf_counter()
     backend = make_disk_backend(args.backend, args.index,
                                 memory_budget_mb=args.memory_budget_mb,
-                                prefetch=args.prefetch)
+                                prefetch=args.prefetch,
+                                shards=args.shards)
     rows["load_seconds"] = round(time.perf_counter() - t0, 3)
     if args.backend == "ooc-scan":
         # a scan_block too large for the budget is auto-shrunk by the
@@ -252,7 +254,7 @@ def cmd_query(args) -> None:
     print(f"{args.backend}: loaded in {rows['load_seconds']}s, answered "
           f"{len(queries)} queries in {rows['query_seconds']}s")
 
-    if args.backend.startswith("ooc"):
+    if streams:
         st = backend.stats()
         rows["read_wait_seconds"] = round(st["read_wait_seconds"], 4)
         rows["overlap_blocks"] = st["overlap_blocks"]
@@ -263,12 +265,26 @@ def cmd_query(args) -> None:
                   f"bytes ({st['codec_refine_rows']} candidate rows "
                   f"re-checked at float32, {st['codec_fallbacks']} "
                   f"fallbacks)")
+        if args.backend == "dist-ooc":
+            ds = st["dist"]
+            rows["dist"] = ds
+            print(f"dist-ooc: {ds['shards']} shards streamed "
+                  f"{ds['rows_streamed']} rows (imbalance "
+                  f"{ds['imbalance']:.2f}, plan {ds['plan_imbalance']:.2f})")
+            for rng_, touched in zip(ds["row_range"], ds["rows_touched"]):
+                if touched is not None and not (
+                        rng_[0] <= touched[0] and touched[1] <= rng_[1]):
+                    raise SystemExit(
+                        f"dist-ooc: shard reader touched rows {touched} "
+                        f"outside its assigned range {rng_}")
+            print("dist-ooc: every shard reader stayed inside its row range")
         if args.prefetch == "thread" and args.verify != "none":
             # thread-prefetch leg: answers must be bit-identical to the
             # synchronous reader on the same backend and budget
             sync_be = make_disk_backend(
                 args.backend, args.index,
-                memory_budget_mb=args.memory_budget_mb, prefetch="sync")
+                memory_budget_mb=args.memory_budget_mb, prefetch="sync",
+                shards=args.shards)
             _assert_same(f"{args.backend} prefetch thread==sync",
                          res, sync_be.knn(queries, k=k))
     _assert_readers_joined()
@@ -376,6 +392,10 @@ def main(argv=None) -> None:
                    help="ooc read scheduling override (default: the saved "
                         "config's). thread additionally asserts bit-parity "
                         "against the sync reader when --verify is set")
+    q.add_argument("--shards", type=int, default=None,
+                   help="mesh size for --backend dist-ooc (default: one "
+                        "shard per visible device; force host devices with "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     q.add_argument("--verify", choices=("none", "parity", "exact"),
                    default="none")
     q.add_argument("--json", default=None)

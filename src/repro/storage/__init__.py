@@ -13,4 +13,8 @@ from repro.storage.format import (  # noqa: F401
     FORMAT_NAME, FORMAT_VERSION, IndexFormatError, SavedIndex, load_index,
     open_index, read_manifest, save_index, verify_files,
 )
+from repro.storage.partition import (  # noqa: F401
+    BALANCE_WARN_RATIO, RECORDED_SHARD_COUNTS, ShardPlan, partition_plan,
+    partition_section, shard_plan,
+)
 from repro.storage.store import Hercules  # noqa: F401

@@ -178,6 +178,30 @@ def segment_file_names(seg_id: int) -> tuple[str, str]:
             f"{JOURNAL_DIR}/seg-{seg_id:05d}.lsd.npy")
 
 
+def partition_of(manifest: dict) -> dict:
+    """The shard-plan section, normalized. Manifests written before the
+    distributed-serving subsystem have none — plans then derive on open
+    (``repro.storage.partition.shard_plan``)."""
+    p = manifest.get("partition") or {}
+    return {"version": int(p.get("version", 0)),
+            "balanced_by": str(p.get("balanced_by", "rows")),
+            "plans": dict(p.get("plans", {}))}
+
+
+def _partition_meta(path: str, entries: dict) -> dict | None:
+    """One shard plan per generation, computed from the just-committed leaf
+    tables (``layout.npz``) — every base commit (save, build, compact, and
+    an append's republish) records the same deterministic cut
+    ``shard_plan`` would derive on open."""
+    from repro.storage.partition import partition_section
+
+    entry = entries.get(LAYOUT_FILE)
+    if entry is None:
+        return None
+    small = _load_npz(path, entry.get("path", LAYOUT_FILE))
+    return partition_section(small["leaf_start"], small["leaf_count"])
+
+
 def write_manifest(path: str, config: IndexConfig, max_depth: int,
                    statics: dict, extra: dict | None = None, *,
                    files: dict[str, str] | None = None,
@@ -235,6 +259,7 @@ def write_manifest(path: str, config: IndexConfig, max_depth: int,
                   "row_bytes": codec_impl.row_bytes(series_len)
                   if series_len else 0,
                   "exact": bool(codec_impl.exact)},
+        "partition": _partition_meta(path, entries),
         "extra": dict(extra or {}),
     }
     tmp = os.path.join(path, MANIFEST_FILE + ".tmp")

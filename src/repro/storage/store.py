@@ -54,7 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import summaries as S
-from repro.core.engine import QueryEngine, make_disk_backend
+from repro.core.engine import (QueryEngine, make_disk_backend,
+                               resolve_backend_name)
 from repro.core.index import HerculesIndex, IndexConfig
 from repro.core.search import INF, KnnResult, SearchConfig
 from repro.data.pipeline import ChunkSource, _ChunkedBase, iter_chunks
@@ -513,38 +514,49 @@ class Hercules:
                search: SearchConfig | None = None,
                memory_budget_mb: float = 64.0,
                engine_config=None,
-               prefetch: str | None = None) -> QueryEngine:
+               prefetch: str | None = None,
+               shards: int | None = None) -> QueryEngine:
         """A :class:`QueryEngine` over the base index, cached per
         configuration. Serves the **base** only — use :meth:`query` to also
         see journal rows pending compaction. ``append``/``compact``
         invalidate every cached plan and re-resolve the backend against the
         new store state on the next call. ``prefetch`` overrides
         ``SearchConfig.prefetch`` for the ooc backends (``"thread"`` = async
-        reader + two-slot host buffer; answers bit-identical)."""
+        reader + two-slot host buffer; answers bit-identical). ``shards``
+        picks the mesh size for ``backend="dist-ooc"`` (default: one shard
+        per visible device; the budget then applies per shard)."""
         self._require_open()
         if self.saved is None:
             raise IndexFormatError(
                 f"{self.path!r}: store has no base index yet — append then "
                 f"compact() before serving")
+        # validate the name *before* it enters the cache key, so unknown
+        # names fail with the registry's canonical message instead of being
+        # cached and re-raised from construction on every call
+        spec = resolve_backend_name(backend, kind="disk")
         if prefetch is not None:
             search = dataclasses.replace(search or self.config.search,
                                          prefetch=prefetch)
-        # the budget only parameterizes the ooc backends — keep it out of
-        # the key otherwise, so budget variants don't duplicate an already
-        # fully materialized local/scan backend
-        budget = float(memory_budget_mb) if backend.startswith("ooc") else None
-        key = (backend, search, budget, engine_config)
+        # the budget only parameterizes the streaming (ooc/dist) backends —
+        # keep it out of the key otherwise, so budget variants don't
+        # duplicate an already fully materialized local/scan backend
+        streams = "ooc" in spec.name
+        budget = float(memory_budget_mb) if streams else None
+        key = (backend, search, budget, engine_config,
+               shards if backend == "dist-ooc" else None)
         eng = self._engines.get(key)
         if eng is None:
             be = make_disk_backend(backend, self, search=search,
-                                   memory_budget_mb=memory_budget_mb)
+                                   memory_budget_mb=memory_budget_mb,
+                                   shards=shards)
             eng = QueryEngine(be, engine_config)
             self._engines[key] = eng
         return eng
 
     def query(self, queries, k: int | None = None, *,
               backend: str = "local", search: SearchConfig | None = None,
-              memory_budget_mb: float = 64.0, **overrides: Any) -> KnnResult:
+              memory_budget_mb: float = 64.0, shards: int | None = None,
+              **overrides: Any) -> KnnResult:
         """Exact kNN over the *whole* store: base index via the named
         backend plus an exact merge of any journal rows still pending
         compaction (same difference-form arithmetic, ids continuing the
@@ -556,7 +568,7 @@ class Hercules:
         if self.saved is None:
             return self._journal_only_knn(q, k, search, overrides)
         eng = self.engine(backend, search=search,
-                          memory_budget_mb=memory_budget_mb)
+                          memory_budget_mb=memory_budget_mb, shards=shards)
         res = eng.knn(q, k=k, **overrides)
         if self.pending_rows:
             res = self._merge_journal(res, q, res.dists.shape[1])

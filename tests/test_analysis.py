@@ -145,6 +145,34 @@ class TestAliasTransfer:
         """
         assert not findings_for(src, "alias-transfer")
 
+    def test_flags_shard_view_slice_transfer(self):
+        # dist-ooc per-shard row-range views: slicing a shard view hands
+        # out mmap-backed memory exactly like slicing the base file, so a
+        # copyless device transfer inside the shard_map fan-out is the
+        # same aliasing bug — shard-named values and _mapped() results of
+        # a view object are both taint sources
+        src = """
+            import jax.numpy as jnp
+            def refine(self, lo, hi):
+                shard_rows = self._view._mapped("lrd")
+                return jnp.asarray(shard_rows[lo:hi])
+            def gather(shard_view, lo, hi):
+                return jnp.asarray(shard_view[lo:hi])
+        """
+        assert len(findings_for(src, "alias-transfer")) == 2
+
+    def test_shard_take_is_cleansing(self):
+        # _ShardRows.take (like np.take) is the copy-guaranteed gather the
+        # codec re-check path uses — its result owns its bytes
+        src = """
+            import jax.numpy as jnp
+            import numpy as np
+            def recheck(self, idx):
+                shard_rows = self._view._mapped("lrd")
+                return jnp.asarray(shard_rows.take(idx, axis=0))
+        """
+        assert not findings_for(src, "alias-transfer")
+
     def test_np_take_is_a_copy_gather(self):
         # the codec finalize pattern: np.take gathers candidate rows into
         # a fresh array (unlike x[idx], whose copy-vs-view outcome the
