@@ -10,7 +10,7 @@ import json
 import sys
 from pathlib import Path
 
-from repro.analysis import deadcode, herculint
+from repro.analysis import callgraph, deadcode, herculint
 
 
 def _repo_root() -> Path:
@@ -37,6 +37,10 @@ def main(argv=None) -> int:
     ap.add_argument("--deadcode", action="store_true",
                     help="print the import-graph dead-code report "
                          "(informational; never fails the run by itself)")
+    ap.add_argument("--graph", type=Path, metavar="OUT",
+                    help="emit the project call graph + per-function "
+                         "summaries + telemetry contract as JSON (the "
+                         "interprocedural state the v2 rules consume)")
     args = ap.parse_args(argv)
 
     root = args.repo_root.resolve()
@@ -44,8 +48,19 @@ def main(argv=None) -> int:
                            root / "examples"]
     findings = herculint.run_lint(roots, root)
 
+    # --graph and --deadcode share one ProjectGraph — the same modules,
+    # import edges, and summaries the rules just consumed.
+    project = None
+    if args.graph or args.deadcode:
+        project = callgraph.build_project_graph(root, roots)
+    if args.graph:
+        args.graph.write_text(
+            json.dumps(project.to_json(), indent=2) + "\n")
+        n_fn = len(project.index.functions)
+        print(f"call graph written: {args.graph} "
+              f"({len(project.modules)} modules, {n_fn} functions)")
     if args.deadcode:
-        report = deadcode.build_report(root)
+        report = deadcode.build_report(root, project=project)
         print(deadcode.format_report(report))
         print()
     else:

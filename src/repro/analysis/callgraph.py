@@ -1,0 +1,600 @@
+"""Project-wide call graph + per-function summaries (herculint v2).
+
+v1's rules each re-analysed one function body at a time, so a view that
+escaped through a helper return (``reader.get()`` sliced inside a private
+method, ``device_put`` three frames later) linted clean. This module
+gives the rules the missing interprocedural layer:
+
+* a **call graph** over every function/method in the linted roots, with
+  call edges resolved by bare name (same file first, project-wide when
+  unambiguous — a *linter's* resolution, not a type checker's);
+* a **summary** per function — ``returns_tainted`` (the return value may
+  be an mmap-segment/slot view), ``returns_self_view`` (the return
+  borrows memory owned by the receiver — the handle-derivation fact
+  ``mmap-lifetime`` needs), ``cleanses_return`` (the return always owns
+  its bytes, overriding name-based taint heuristics), and the
+  ``acquires_locks`` / ``releases_locks`` sets the lockdep tooling and
+  ``--graph`` JSON expose;
+* a **telemetry index** — declared ``*Telemetry`` dataclass fields vs
+  the string counter keys observed at bump/consume sites — backing the
+  ``telemetry-contract`` rule;
+* the **module import graph** the dead-code report walks (one graph for
+  ``--graph``, ``--deadcode`` and the rules; they cannot drift).
+
+Summaries are computed to a fixed point: a helper that returns another
+helper's tainted return is itself returns-tainted, however deep the
+chain. Resolution is deliberately conservative — a verdict is only
+issued when every candidate definition agrees — so the summaries refine
+the name heuristics in both directions without inventing findings.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.rules.common import (
+    CLEANSING_CALLS, COPYING_CALLS, TaintTracker, VIEW_ATTRS, VIEW_METHODS,
+    _subscript_is_view, call_name, dotted, last_attr, name_components,
+    statements_in_order,
+)
+
+#: Bare names too common / too dynamic to resolve project-wide. Same-file
+#: definitions still resolve (a file-local ``get`` is unambiguous enough).
+_UNRESOLVABLE = {
+    "get", "put", "close", "open", "load", "save", "run", "main", "check",
+    "stats", "describe", "keys", "values", "items", "append", "update",
+    "__init__", "__enter__", "__exit__", "__post_init__",
+}
+
+#: Project-wide resolution gives up beyond this many candidate defs.
+_MAX_GLOBAL_CANDIDATES = 3
+
+#: Name components that mark an attribute as a lock-like object.
+_LOCK_COMPONENTS = {"lock", "mutex", "cond", "condition", "sem", "semaphore"}
+
+
+@dataclasses.dataclass
+class FunctionSummary:
+    """What the rest of the project may assume about one function."""
+    qualname: str                  # dotted scope path within the file
+    path: str                      # repo-relative posix path
+    name: str                      # bare name (resolution key)
+    lineno: int
+    end_lineno: int
+    calls: Tuple[str, ...] = ()    # raw dotted names called in the body
+    returns_tainted: bool = False
+    returns_self_view: bool = False
+    cleanses_return: bool = False
+    acquires_locks: Tuple[str, ...] = ()
+    releases_locks: Tuple[str, ...] = ()
+
+    def to_json(self) -> dict:
+        return {
+            "qualname": self.qualname, "path": self.path,
+            "line": self.lineno,
+            "returns_tainted": self.returns_tainted,
+            "returns_self_view": self.returns_self_view,
+            "cleanses_return": self.cleanses_return,
+            "acquires_locks": list(self.acquires_locks),
+            "releases_locks": list(self.releases_locks),
+        }
+
+
+@dataclasses.dataclass
+class TelemetryIndex:
+    """Declared telemetry counter fields vs the keys actually plumbed.
+
+    ``fed`` and ``consumed`` are deliberately separate sets: a bump site
+    must justify itself against declarations/consumers, never against
+    other bumps (else a typo'd counter bumped twice would validate
+    itself).
+    """
+    #: field name -> (path, line) of its declaring ``*Telemetry`` dataclass
+    declared: Dict[str, Tuple[str, int]] = dataclasses.field(
+        default_factory=dict)
+    #: keys *written*: counter-store bumps, ``_t``/``stats`` dict-literal
+    #: inits, ``*Telemetry(...)`` ctor kwargs, telemetry()/stats()
+    #: assembly dict literals
+    fed: Set[str] = dataclasses.field(default_factory=set)
+    #: keys *read*: counter-store loads, any string subscript read inside
+    #: a ``telemetry()`` / ``stats()`` assembly method
+    consumed: Set[str] = dataclasses.field(default_factory=set)
+    #: deprecated-key aliases (``_ALIASES`` dict literals)
+    aliases: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def observed(self) -> Set[str]:
+        return self.fed | self.consumed
+
+
+class SummaryIndex:
+    """Queryable per-function summaries for the taint/derivation rules.
+
+    The empty index (``SummaryIndex.empty()``) answers ``None`` to every
+    verdict — running a rule against it reproduces v1's single-scope
+    behaviour exactly, which is what the meta-tests pin.
+    """
+
+    def __init__(self, functions: Iterable[FunctionSummary],
+                 telemetry: TelemetryIndex | None = None):
+        self.functions: Dict[str, FunctionSummary] = {}
+        self._by_name: Dict[str, List[FunctionSummary]] = {}
+        for fn in functions:
+            self.functions[f"{fn.path}::{fn.qualname}"] = fn
+            self._by_name.setdefault(fn.name, []).append(fn)
+        self.telemetry = telemetry or TelemetryIndex()
+
+    @classmethod
+    def empty(cls) -> "SummaryIndex":
+        return cls(())
+
+    # ---- resolution ----------------------------------------------------
+    def candidates(self, bare: str, path: Optional[str]) -> List[FunctionSummary]:
+        """Definitions a call of ``bare`` may reach: same file first;
+        project-wide only when the name is specific and near-unique."""
+        defs = self._by_name.get(bare, [])
+        if not defs:
+            return []
+        local = [d for d in defs if d.path == path]
+        if local:
+            return local
+        if bare in _UNRESOLVABLE or len(defs) > _MAX_GLOBAL_CANDIDATES:
+            return []
+        return defs
+
+    def call_verdict(self, call: ast.Call, path: Optional[str]) -> Optional[str]:
+        """``"tainted"`` / ``"cleanses"`` / ``None`` for a call expression,
+        by unanimous vote of the resolved candidate definitions."""
+        bare = last_attr(call_name(call))
+        if bare is None:
+            return None
+        cands = self.candidates(bare, path)
+        if not cands:
+            return None
+        if all(c.returns_tainted for c in cands):
+            return "tainted"
+        if all(c.cleanses_return for c in cands):
+            return "cleanses"
+        return None
+
+    def returns_self_view(self, call: ast.Call, path: Optional[str]) -> bool:
+        """True when every candidate for this call returns a view borrowing
+        the receiver's memory (``mmap-lifetime`` derivation through
+        helpers)."""
+        bare = last_attr(call_name(call))
+        if bare is None:
+            return False
+        cands = self.candidates(bare, path)
+        return bool(cands) and all(c.returns_self_view for c in cands)
+
+
+#: Sentinel: "build a single-file index from the source being linted".
+AUTO = object()
+
+
+# ---------------------------------------------------------------------------
+# summary extraction
+# ---------------------------------------------------------------------------
+
+def _function_nodes(tree: ast.Module) -> Iterable[Tuple[str, ast.AST]]:
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                yield qual, child
+                yield from walk(child, qual)
+            elif isinstance(child, ast.ClassDef):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                yield from walk(child, qual)
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def _lock_name(expr: ast.expr) -> Optional[str]:
+    name = dotted(expr)
+    if name and name_components(name.replace(".", "_")) & _LOCK_COMPONENTS:
+        return name
+    return None
+
+
+def _collect_locks(fn: ast.AST) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    acquires: List[str] = []
+    releases: List[str] = []
+    for stmt in statements_in_order(fn):
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                name = _lock_name(item.context_expr)
+                if name:
+                    acquires.append(name)
+                    releases.append(name)    # with-block releases on exit
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute):
+                recv = _lock_name(node.func.value)
+                if recv is None:
+                    continue
+                if node.func.attr == "acquire":
+                    acquires.append(recv)
+                elif node.func.attr == "release":
+                    releases.append(recv)
+    dedup = lambda xs: tuple(dict.fromkeys(xs))  # noqa: E731
+    return dedup(acquires), dedup(releases)
+
+
+class _SelfBorrow:
+    """Does an expression borrow memory owned by ``self``?
+
+    The derivation facts ``mmap-lifetime`` keys on, restricted to the
+    receiver: ``self.lrd``-style mapped attributes, ``self._mapped()``-style
+    mapped methods, calls to other self-methods already summarised as
+    self-view returners, and view-preserving wrappers of any of those.
+    """
+
+    def __init__(self, index: SummaryIndex, path: str):
+        self._index = index
+        self._path = path
+
+    def borrows(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Attribute):
+            if not self._rooted_at_self(node.value):
+                return False
+            return node.attr in VIEW_ATTRS or node.attr == "T" or \
+                bool(name_components(node.attr) & {"lrd", "lsd", "enc",
+                                                   "mmap", "view"})
+        if isinstance(node, ast.Subscript):
+            return self.borrows(node.value) and _subscript_is_view(node.slice)
+        if isinstance(node, ast.Call):
+            tail = last_attr(call_name(node))
+            if tail in CLEANSING_CALLS or tail in COPYING_CALLS:
+                return False
+            if isinstance(node.func, ast.Attribute) and \
+                    self._rooted_at_self(node.func.value):
+                if tail in VIEW_METHODS:
+                    return True
+                if self._index.returns_self_view(node, self._path):
+                    return True
+            if tail in ("asarray", "ascontiguousarray") and node.args:
+                mod = call_name(node) or ""
+                if not mod.startswith(("jnp.", "jax.")):
+                    return self.borrows(node.args[0])
+            return False
+        if isinstance(node, ast.IfExp):
+            return self.borrows(node.body) or self.borrows(node.orelse)
+        return False
+
+    @staticmethod
+    def _rooted_at_self(node: ast.expr) -> bool:
+        while isinstance(node, ast.Attribute):
+            node = node.value
+        return isinstance(node, ast.Name) and node.id == "self"
+
+
+_FRESH_CALLS = CLEANSING_CALLS | COPYING_CALLS | {"zeros", "ones", "empty",
+                                                  "full", "arange", "stack",
+                                                  "concatenate"}
+
+
+def _always_fresh(node: ast.expr, index: SummaryIndex, path: str) -> bool:
+    """True when the expression's value certainly owns its bytes."""
+    if isinstance(node, (ast.Constant, ast.BinOp, ast.Compare, ast.BoolOp,
+                         ast.UnaryOp)):
+        return True
+    if isinstance(node, ast.Call):
+        tail = last_attr(call_name(node))
+        if tail in _FRESH_CALLS:
+            return True
+        return index.call_verdict(node, path) == "cleanses"
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return bool(node.elts) and all(
+            _always_fresh(e, index, path) for e in node.elts)
+    return False
+
+
+def _summarise(qual: str, fn: ast.AST, path: str,
+               index: SummaryIndex) -> FunctionSummary:
+    taint = TaintTracker(fn, summaries=index, path=path)
+    borrow = _SelfBorrow(index, path)
+    returns_tainted = False
+    returns_self_view = False
+    return_values: List[ast.expr] = []
+    calls: List[str] = []
+    for stmt in statements_in_order(fn):
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if name:
+                    calls.append(name)
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            return_values.append(stmt.value)
+            if taint.is_tainted(stmt.value):
+                returns_tainted = True
+            if borrow.borrows(stmt.value):
+                returns_self_view = True
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            taint.handle_for(stmt)
+        else:
+            taint.handle_assign(stmt)
+    cleanses = bool(return_values) and not returns_tainted and all(
+        _always_fresh(v, index, path) for v in return_values)
+    acquires, releases = _collect_locks(fn)
+    return FunctionSummary(
+        qualname=qual, path=path, name=fn.name,
+        lineno=fn.lineno, end_lineno=fn.end_lineno or fn.lineno,
+        calls=tuple(dict.fromkeys(calls)),
+        returns_tainted=returns_tainted,
+        returns_self_view=returns_self_view,
+        cleanses_return=cleanses,
+        acquires_locks=acquires, releases_locks=releases)
+
+
+# ---------------------------------------------------------------------------
+# telemetry declaration / observation collection
+# ---------------------------------------------------------------------------
+
+#: Receivers whose string-keyed subscripts count as telemetry sites.
+_COUNTER_RECEIVERS = {"_t", "stats"}
+
+
+def _is_counter_receiver(expr: ast.expr) -> bool:
+    tail = last_attr(dotted(expr))
+    return tail in _COUNTER_RECEIVERS
+
+
+def _collect_telemetry(tree: ast.Module, path: str,
+                       tix: TelemetryIndex) -> None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and \
+                node.name.endswith("Telemetry") and node.name != "Telemetry":
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and \
+                        isinstance(stmt.target, ast.Name) and \
+                        not stmt.target.id.startswith("_"):
+                    tix.declared.setdefault(stmt.target.id,
+                                            (path, stmt.lineno))
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                tname = tgt.id if isinstance(tgt, ast.Name) else (
+                    tgt.attr if isinstance(tgt, ast.Attribute) else None)
+                if tname == "_ALIASES" and isinstance(node.value, ast.Dict):
+                    for k, v in zip(node.value.keys, node.value.values):
+                        if isinstance(k, ast.Constant) and \
+                                isinstance(v, ast.Constant):
+                            tix.aliases[str(k.value)] = str(v.value)
+                # dict literals initialising a counter store feed keys
+                if tname in _COUNTER_RECEIVERS and \
+                        isinstance(node.value, ast.Dict):
+                    for k in node.value.keys:
+                        if isinstance(k, ast.Constant) and \
+                                isinstance(k.value, str):
+                            tix.fed.add(k.value)
+        # string-keyed subscripts on a counter receiver: Store = bump
+        # (fed), Load = read (consumed)
+        if isinstance(node, ast.Subscript) and \
+                isinstance(node.slice, ast.Constant) and \
+                isinstance(node.slice.value, str) and \
+                _is_counter_receiver(node.value):
+            if isinstance(node.ctx, ast.Store):
+                tix.fed.add(node.slice.value)
+            else:
+                tix.consumed.add(node.slice.value)
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "get" and node.args and \
+                isinstance(node.args[0], ast.Constant) and \
+                isinstance(node.args[0].value, str) and \
+                _is_counter_receiver(node.func.value):
+            tix.consumed.add(node.args[0].value)
+        # *Telemetry(...) ctor kwargs feed declared fields wherever they
+        # appear (the telemetry() assembly path)
+        if isinstance(node, ast.Call):
+            tail = last_attr(call_name(node)) or ""
+            if tail.endswith("Telemetry") and tail != "Telemetry":
+                for kw in node.keywords:
+                    if kw.arg:
+                        tix.fed.add(kw.arg)
+        # telemetry()/stats() assembly: dict-literal keys feed the
+        # reported structure; string subscript reads consume counters
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name in ("telemetry", "stats"):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Dict):
+                    for k in sub.keys:
+                        if isinstance(k, ast.Constant) and \
+                                isinstance(k.value, str):
+                            tix.fed.add(k.value)
+                if isinstance(sub, ast.Subscript) and \
+                        isinstance(sub.slice, ast.Constant) and \
+                        isinstance(sub.slice.value, str) and \
+                        isinstance(sub.ctx, ast.Load):
+                    tix.consumed.add(sub.slice.value)
+
+
+# ---------------------------------------------------------------------------
+# index / graph construction
+# ---------------------------------------------------------------------------
+
+_FIXED_POINT_ROUNDS = 4
+
+
+def build_index(sources: Dict[str, str]) -> SummaryIndex:
+    """Summaries + telemetry index over ``{rel_path: source}``, iterated to
+    a fixed point so taint flows through helper-call chains."""
+    trees: Dict[str, ast.Module] = {}
+    for path, src in sources.items():
+        try:
+            trees[path] = ast.parse(src)
+        except SyntaxError:
+            continue
+    tix = TelemetryIndex()
+    for path, tree in trees.items():
+        _collect_telemetry(tree, path, tix)
+
+    index = SummaryIndex.empty()
+    index.telemetry = tix
+    for _ in range(_FIXED_POINT_ROUNDS):
+        fresh: List[FunctionSummary] = []
+        for path, tree in trees.items():
+            for qual, fn in _function_nodes(tree):
+                fresh.append(_summarise(qual, fn, path, index))
+        new_index = SummaryIndex(fresh, tix)
+        if _verdicts(new_index) == _verdicts(index):
+            return new_index
+        index = new_index
+    return index
+
+
+def _verdicts(index: SummaryIndex):
+    return {k: (f.returns_tainted, f.returns_self_view, f.cleanses_return)
+            for k, f in index.functions.items()}
+
+
+def index_for_source(source: str, rel_path: str = "<source>") -> SummaryIndex:
+    """Single-file index — what ``lint_source`` builds when no project
+    index is supplied (fixtures with helper + caller in one string)."""
+    return build_index({rel_path: source})
+
+
+# ---------------------------------------------------------------------------
+# module import graph (shared with the dead-code report)
+# ---------------------------------------------------------------------------
+
+PKG = "repro"
+
+_DYNAMIC_RE = re.compile(r"import_module\(\s*f?['\"]([\w\.]+)\{")
+
+
+def _module_name(py: Path, src_root: Path) -> str:
+    rel = py.resolve().relative_to(src_root.resolve())
+    parts = list(rel.with_suffix("").parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def discover_modules(src_root: Path) -> Dict[str, Path]:
+    out = {}
+    for py in sorted((src_root / PKG).rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        out[_module_name(py, src_root)] = py
+    return out
+
+
+def module_imports(py: Path, modules: Dict[str, Path],
+                   self_name: str) -> Set[str]:
+    """repro.* modules statically imported by *py* (incl. the dynamic
+    ``import_module(f"...")`` registry edges)."""
+    try:
+        tree = ast.parse(py.read_text())
+    except SyntaxError:
+        return set()
+    edges: Set[str] = set()
+
+    def add(name: str):
+        # an import of a package reaches its __init__; an import of an
+        # attribute from a package may actually be a submodule
+        while name:
+            if name in modules:
+                edges.add(name)
+                return
+            name = name.rpartition(".")[0]
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] == PKG:
+                    add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level:  # relative import — resolve against self
+                base = self_name.split(".")
+                if modules.get(self_name, Path()).name != "__init__.py":
+                    base = base[:-1]
+                base = base[:len(base) - (node.level - 1)]
+                mod = ".".join(base + ([mod] if mod else []))
+            if mod.split(".")[0] != PKG:
+                continue
+            add(mod)
+            for a in node.names:
+                add(f"{mod}.{a.name}")
+
+    for m in _DYNAMIC_RE.finditer(py.read_text()):
+        prefix = m.group(1).rstrip(".")
+        if prefix.split(".")[0] == PKG:
+            for name in modules:
+                if name.startswith(prefix + "."):
+                    edges.add(name)
+    edges.discard(self_name)
+    return edges
+
+
+@dataclasses.dataclass
+class ProjectGraph:
+    """The one project graph: module imports + function call graph +
+    summaries. ``--graph`` serialises it; ``--deadcode`` walks
+    ``imports``; the v2 rules consume ``index``."""
+    repo_root: Path
+    modules: Dict[str, Path]
+    imports: Dict[str, Set[str]]
+    index: SummaryIndex
+    calls: Dict[str, Set[str]]     # function key -> resolved callee keys
+
+    def to_json(self) -> dict:
+        return {
+            "modules": {name: str(p.relative_to(self.repo_root))
+                        for name, p in sorted(self.modules.items())},
+            "imports": {name: sorted(edges)
+                        for name, edges in sorted(self.imports.items())},
+            "functions": {key: fn.to_json()
+                          for key, fn in sorted(self.index.functions.items())},
+            "calls": {key: sorted(callees)
+                      for key, callees in sorted(self.calls.items())
+                      if callees},
+            "telemetry": {
+                "declared": {k: list(v) for k, v in
+                             sorted(self.index.telemetry.declared.items())},
+                "observed": sorted(self.index.telemetry.observed),
+                "aliases": dict(sorted(self.index.telemetry.aliases.items())),
+            },
+        }
+
+
+def build_project_graph(repo_root: Path,
+                        roots: Optional[Iterable[Path]] = None) -> ProjectGraph:
+    src_root = repo_root / "src"
+    modules = discover_modules(src_root)
+    imports = {name: module_imports(py, modules, name)
+               for name, py in modules.items()}
+
+    files: List[Path] = []
+    for root in (roots or [src_root]):
+        root = Path(root)
+        if root.is_file() and root.suffix == ".py":
+            files.append(root)
+        elif root.is_dir():
+            files.extend(sorted(p for p in root.rglob("*.py")
+                                if "__pycache__" not in p.parts))
+    sources: Dict[str, str] = {}
+    for py in files:
+        try:
+            rel = py.resolve().relative_to(repo_root.resolve()).as_posix()
+        except ValueError:
+            rel = str(py)
+        sources[rel] = py.read_text()
+    index = build_index(sources)
+
+    calls: Dict[str, Set[str]] = {}
+    for key, fn in index.functions.items():
+        resolved: Set[str] = set()
+        for raw in fn.calls:
+            bare = last_attr(raw)
+            for cand in index.candidates(bare, fn.path):
+                resolved.add(f"{cand.path}::{cand.qualname}")
+        calls[key] = resolved
+    return ProjectGraph(repo_root=repo_root, modules=modules,
+                        imports=imports, index=index, calls=calls)

@@ -7,6 +7,13 @@ Walks the static import graph from four root sets — the public API
 specially: a call like ``importlib.import_module(f"repro.configs.{...}")``
 adds edges to every module under that prefix.
 
+Since v2 the module graph itself lives in
+:mod:`repro.analysis.callgraph` — one graph shared by this report, the
+``--graph`` JSON emission, and the interprocedural lint rules, so the
+three can never disagree about what imports what. ``build_report``
+accepts a prebuilt :class:`~repro.analysis.callgraph.ProjectGraph` to
+avoid re-parsing when the caller already has one.
+
 Some modules are reachable only from tests: the ``configs/`` + ``models/``
 LLM architecture exemplars predate the Hercules pivot and are kept
 deliberately as dry-run/trace fixtures for the distributed tooling. They
@@ -16,12 +23,13 @@ unreachable is genuinely dead and should be deleted.
 """
 from __future__ import annotations
 
-import ast
-import re
 from pathlib import Path
-from typing import Dict, Iterable, List, Set
+from typing import Dict, Iterable, List, Optional, Set
 
-PKG = "repro"
+from repro.analysis import callgraph
+from repro.analysis.callgraph import (  # noqa: F401  (public re-exports)
+    PKG, discover_modules, module_imports,
+)
 
 #: Modules (by prefix) that are intentionally kept even when nothing on
 #: the api/CLI path imports them. Keyed by dotted-prefix.
@@ -36,72 +44,8 @@ INTENTIONAL: Dict[str, str] = {
         "shape-level traces."),
 }
 
-_DYNAMIC_RE = re.compile(r"import_module\(\s*f?['\"]([\w\.]+)\{")
-
-
-def _module_name(py: Path, src_root: Path) -> str:
-    rel = py.resolve().relative_to(src_root.resolve())
-    parts = list(rel.with_suffix("").parts)
-    if parts[-1] == "__init__":
-        parts = parts[:-1]
-    return ".".join(parts)
-
-
-def discover_modules(src_root: Path) -> Dict[str, Path]:
-    out = {}
-    for py in sorted((src_root / PKG).rglob("*.py")):
-        if "__pycache__" in py.parts:
-            continue
-        out[_module_name(py, src_root)] = py
-    return out
-
-
-def _imports_of(py: Path, modules: Dict[str, Path],
-                self_name: str) -> Set[str]:
-    """repro.* modules statically imported by *py* (incl. dynamic registry)."""
-    try:
-        tree = ast.parse(py.read_text())
-    except SyntaxError:
-        return set()
-    edges: Set[str] = set()
-
-    def add(name: str):
-        # an import of a package reaches its __init__; an import of an
-        # attribute from a package may actually be a submodule
-        while name:
-            if name in modules:
-                edges.add(name)
-                return
-            name = name.rpartition(".")[0]
-
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Import):
-            for a in node.names:
-                if a.name.split(".")[0] == PKG:
-                    add(a.name)
-        elif isinstance(node, ast.ImportFrom):
-            mod = node.module or ""
-            if node.level:  # relative import — resolve against self
-                base = self_name.split(".")
-                # drop one component for the module itself unless package
-                if modules.get(self_name, Path()).name != "__init__.py":
-                    base = base[:-1]
-                base = base[:len(base) - (node.level - 1)]
-                mod = ".".join(base + ([mod] if mod else []))
-            if mod.split(".")[0] != PKG:
-                continue
-            add(mod)
-            for a in node.names:
-                add(f"{mod}.{a.name}")
-
-    for m in _DYNAMIC_RE.finditer(py.read_text()):
-        prefix = m.group(1).rstrip(".")
-        if prefix.split(".")[0] == PKG:
-            for name in modules:
-                if name.startswith(prefix + "."):
-                    edges.add(name)
-    edges.discard(self_name)
-    return edges
+#: Backwards-compatible alias — the edge extractor moved to callgraph.
+_imports_of = module_imports
 
 
 def _closure(seeds: Iterable[str], graph: Dict[str, Set[str]]) -> Set[str]:
@@ -120,11 +64,11 @@ def _closure(seeds: Iterable[str], graph: Dict[str, Set[str]]) -> Set[str]:
     return seen
 
 
-def build_report(repo_root: Path) -> dict:
-    src_root = repo_root / "src"
-    modules = discover_modules(src_root)
-    graph = {name: _imports_of(py, modules, name)
-             for name, py in modules.items()}
+def build_report(repo_root: Path,
+                 project: Optional[callgraph.ProjectGraph] = None) -> dict:
+    if project is None:
+        project = callgraph.build_project_graph(repo_root)
+    modules, graph = project.modules, project.imports
 
     def external_roots(dirname: str) -> Set[str]:
         roots: Set[str] = set()
@@ -132,7 +76,7 @@ def build_report(repo_root: Path) -> dict:
         if not d.is_dir():
             return roots
         for py in sorted(d.rglob("*.py")):
-            roots |= _imports_of(py, modules, f"<{dirname}>")
+            roots |= module_imports(py, modules, f"<{dirname}>")
         return roots
 
     root_sets = {

@@ -34,6 +34,7 @@ import re
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.analysis import callgraph
 from repro.analysis.rules import ALL_RULES
 
 SUPPRESS_RE = re.compile(
@@ -97,12 +98,20 @@ def _context_for(line: int, spans: Dict[Tuple[int, int], str]) -> str:
     return best
 
 
-def lint_source(source: str, rel_path: str,
-                rules=ALL_RULES) -> Tuple[List[Finding], List[Finding]]:
+def lint_source(source: str, rel_path: str, rules=ALL_RULES,
+                summaries=callgraph.AUTO,
+                ) -> Tuple[List[Finding], List[Finding]]:
     """Lint one source string.
 
     Returns ``(findings, suppression_problems)`` — the latter are
     bare-suppression findings (missing ``-- reason``).
+
+    ``summaries`` is the interprocedural :class:`~repro.analysis.callgraph
+    .SummaryIndex` consulted by the v2 rules. The default
+    (:data:`callgraph.AUTO`) builds a single-file index from *source*
+    itself — enough for self-contained fixtures; ``run_lint`` passes the
+    project-wide index instead. Pass ``SummaryIndex.empty()`` to
+    reproduce v1's single-scope behaviour.
     """
     try:
         tree = ast.parse(source)
@@ -110,6 +119,8 @@ def lint_source(source: str, rel_path: str,
         f = Finding("parse-error", rel_path, e.lineno or 1, 0, "<module>",
                     "", f"could not parse: {e.msg}")
         return [f], []
+    if summaries is callgraph.AUTO:
+        summaries = callgraph.index_for_source(source, rel_path)
     lines = source.splitlines()
     spans = _qualname_index(tree)
 
@@ -132,7 +143,7 @@ def lint_source(source: str, rel_path: str,
     seen_occurrences: Dict[Tuple[str, str, str], int] = {}
     findings: List[Finding] = []
     for rule in rules:
-        for raw in rule.check(tree, rel_path, lines):
+        for raw in rule.check(tree, rel_path, lines, summaries=summaries):
             sup = suppress.get(raw.line) or suppress.get(raw.line - 1)
             if sup and (raw.rule in sup[0] or "all" in sup[0]):
                 continue
@@ -148,10 +159,10 @@ def lint_source(source: str, rel_path: str,
     return findings, problems
 
 
-def lint_file(path: Path, repo_root: Path,
-              rules=ALL_RULES) -> Tuple[List[Finding], List[Finding]]:
+def lint_file(path: Path, repo_root: Path, rules=ALL_RULES,
+              summaries=callgraph.AUTO) -> Tuple[List[Finding], List[Finding]]:
     rel = path.resolve().relative_to(repo_root.resolve()).as_posix()
-    return lint_source(path.read_text(), rel, rules)
+    return lint_source(path.read_text(), rel, rules, summaries=summaries)
 
 
 def iter_python_files(roots: Iterable[Path]) -> List[Path]:
@@ -168,10 +179,19 @@ def iter_python_files(roots: Iterable[Path]) -> List[Path]:
 
 def run_lint(roots: Iterable[Path], repo_root: Path,
              rules=ALL_RULES) -> List[Finding]:
-    """All findings (including bare-suppression problems) for *roots*."""
+    """All findings (including bare-suppression problems) for *roots*.
+
+    Builds one project-wide summary index over every file in *roots*
+    first, so the rules see helper returns across file boundaries."""
+    files = iter_python_files(roots)
+    sources: Dict[str, str] = {}
+    for path in files:
+        rel = path.resolve().relative_to(repo_root.resolve()).as_posix()
+        sources[rel] = path.read_text()
+    index = callgraph.build_index(sources)
     findings: List[Finding] = []
-    for path in iter_python_files(roots):
-        got, problems = lint_file(path, repo_root, rules)
+    for rel, src in sources.items():
+        got, problems = lint_source(src, rel, rules, summaries=index)
         findings.extend(got)
         findings.extend(problems)
     return findings

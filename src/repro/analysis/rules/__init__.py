@@ -1,24 +1,38 @@
 """herculint rule registry.
 
 Each rule module exposes ``RULE_ID``, ``DESCRIPTION`` and
-``check(tree, rel_path, src_lines) -> Iterable[RawFinding]``. The engine
-(:mod:`repro.analysis.herculint`) attaches file paths, enclosing-scope
-qualnames and ratchet fingerprints.
+``check(tree, rel_path, src_lines, summaries=None) ->
+Iterable[RawFinding]``. The engine (:mod:`repro.analysis.herculint`)
+attaches file paths, enclosing-scope qualnames and ratchet fingerprints;
+``summaries`` is the project-wide interprocedural
+:class:`~repro.analysis.callgraph.SummaryIndex` (v2 — rules that don't
+need it ignore it).
 """
 from repro.analysis.rules import (
     alias_transfer,
     atomic_commit,
     config_plumbing,
+    exactness_invariant,
     lock_discipline,
     mmap_lifetime,
+    plan_key_completeness,
+    telemetry_contract,
 )
 
-ALL_RULES = (
+#: v1 rule set — single-scope heuristics only. Kept addressable so the
+#: benchmarks (and the v1-vs-v2 meta-tests) can run the old engine shape.
+V1_RULES = (
     alias_transfer,
     mmap_lifetime,
     atomic_commit,
     lock_discipline,
     config_plumbing,
+)
+
+ALL_RULES = V1_RULES + (
+    plan_key_completeness,
+    exactness_invariant,
+    telemetry_contract,
 )
 
 RULE_IDS = tuple(r.RULE_ID for r in ALL_RULES)

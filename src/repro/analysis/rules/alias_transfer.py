@@ -85,10 +85,11 @@ def header_exprs(stmt: ast.stmt) -> List[ast.expr]:
     return []
 
 
-def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
     jnp_names, device_put_names = _jnp_aliases(tree)
     for scope in iter_scopes(tree):
-        taint = TaintTracker(scope)
+        taint = TaintTracker(scope, summaries=summaries, path=rel_path)
         for stmt in _scope_statements(scope):
             for expr in header_exprs(stmt):
                 for call in (n for n in ast.walk(expr)

@@ -84,7 +84,8 @@ def _is_mutation(call: ast.Call) -> bool:
     return False
 
 
-def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
     scopes = [tree]
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):

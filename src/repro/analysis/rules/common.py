@@ -143,9 +143,17 @@ class TaintTracker:
       whose index is a *computed expression* (``x[perm]`` is fancy
       indexing, which copies). ``x[i]`` inside a loop is mis-modelled as
       a copy; acceptable — scalar-row extraction has never been the bug.
+    * **Summaries (v2)** — when a :class:`~repro.analysis.callgraph.SummaryIndex`
+      is supplied, helper calls are resolved through it: a call whose every
+      candidate definition is ``returns_tainted`` is a source (the
+      interprocedural escape v1 missed), and one whose candidates all
+      ``cleanses_return`` is a cleanser even if its name *sounds* like a
+      view. Name heuristics still apply when resolution fails.
     """
 
-    def __init__(self, scope: ast.AST):
+    def __init__(self, scope: ast.AST, summaries=None, path=None):
+        self.summaries = summaries
+        self.path = path
         self.tainted: set = set()
         self.cleansed: set = set()  # view-named but explicitly copied
         self.readers: set = set()
@@ -208,7 +216,15 @@ class TaintTracker:
                 # tainted their inputs — checked before the sources so a
                 # view-named receiver (`enc.decode(...)`) cannot re-taint
                 return False
+            verdict = (self.summaries.call_verdict(node, self.path)
+                       if self.summaries is not None else None)
+            if verdict == "cleanses":
+                # every resolvable definition returns a fresh buffer —
+                # overrides the name heuristics below
+                return False
             if self._call_is_source(node):
+                return True
+            if verdict == "tainted":
                 return True
             if tail in ("asarray", "ascontiguousarray") and node.args:
                 # np.asarray of a view is (usually) still the same view;

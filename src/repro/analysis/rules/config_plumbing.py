@@ -28,7 +28,8 @@ DESCRIPTION = ("every SearchConfig field must be validated in __post_init__ "
                "and participate in the plan-cache key (pass cfg whole)")
 
 
-def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
     for node in ast.walk(tree):
         if not isinstance(node, ast.ClassDef):
             continue

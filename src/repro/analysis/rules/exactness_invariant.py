@@ -1,0 +1,150 @@
+"""Rule: exactness-invariant — no raw BSF compare against decoded values.
+
+The format-v3 exactness contract (PR 8): candidate pruning over encoded
+leaves is only exact when the comparison against the best-so-far goes
+through the **certified interval pattern** — per-row LB/UB carries with
+encoder-embedded reconstruction bounds — or when the distance is
+recomputed from decoded bytes in float32 difference form over a
+copy-gathered candidate pool. A raw ``decoded_distance <= bsf`` skips
+the slack accounting: bf16 round-trip error silently drops true
+neighbours, and the answer is wrong without any test noticing until the
+exact oracle disagrees.
+
+Per scope, the rule taints names assigned from ``.decode(...)`` calls
+(and arithmetic derived from them) and flags ``<``/``<=``/``>``/``>=``
+comparisons where one side is decoded-derived and the other names a
+best-so-far (``bsf`` / ``theta`` / ``best`` / ``tau``), unless the
+decoded side is itself a certified bound (its identifiers mention
+lb/ub/bound/slack) or was cleansed by the recompute pattern
+(``np.take`` gather or an ``.astype(np.float32)`` recompute).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.rules.common import (
+    RawFinding, call_name, iter_scopes, last_attr, name_components,
+    statements_in_order, _target_names, _walk_stmts,
+)
+
+RULE_ID = "exactness-invariant"
+DESCRIPTION = ("comparisons of decoded/codec values against the BSF must "
+               "flow through certified LB/UB slack or a float32 "
+               "difference-form recompute, never a raw <=")
+
+_BSF_COMPONENTS = {"bsf", "theta", "best", "tau"}
+_BOUND_COMPONENTS = {"lb", "ub", "lower", "upper", "bound", "bounds",
+                     "slack", "certified"}
+_COMPARE_OPS = (ast.Lt, ast.LtE, ast.Gt, ast.GtE)
+
+
+def _names_in(expr: ast.expr) -> Set[str]:
+    out = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out
+
+
+def _components_in(expr: ast.expr) -> Set[str]:
+    comps: Set[str] = set()
+    for name in _names_in(expr):
+        comps |= name_components(name)
+    return comps
+
+
+def _is_float32_recompute(expr: ast.expr) -> bool:
+    """``x.astype(np.float32)`` / ``np.float32(...)`` / ``np.take`` —
+    the sanctioned recompute/copy-gather cleansers."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            tail = last_attr(call_name(node))
+            if tail == "take":
+                return True
+            if tail == "astype":
+                args = [ast.unparse(a) for a in node.args]
+                if any("float32" in a or "float64" in a for a in args):
+                    return True
+            if tail in ("float32", "float64"):
+                return True
+    return False
+
+
+class _DecodedTaint:
+    """Names holding decoded/codec-reconstructed values in this scope."""
+
+    def __init__(self):
+        self.decoded: Set[str] = set()
+
+    def expr_decoded(self, expr: ast.expr) -> bool:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call) and \
+                    last_attr(call_name(node)) == "decode":
+                return True
+            if isinstance(node, ast.Name) and node.id in self.decoded:
+                return True
+        return False
+
+    def handle(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            value, targets = stmt.value, stmt.targets
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            value, targets = stmt.value, [stmt.target]
+        elif isinstance(stmt, ast.AugAssign):
+            if self.expr_decoded(stmt.value):
+                for name in _target_names(stmt.target):
+                    self.decoded.add(name)
+            return
+        else:
+            return
+        tainted = self.expr_decoded(value) and not _is_float32_recompute(value)
+        for tgt in targets:
+            for name in _target_names(tgt):
+                if tainted:
+                    self.decoded.add(name)
+                else:
+                    self.decoded.discard(name)
+
+
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
+    for scope in iter_scopes(tree):
+        taint = _DecodedTaint()
+        stmts = (_walk_stmts(scope.body) if isinstance(scope, ast.Module)
+                 else statements_in_order(scope))
+        for stmt in stmts:
+            yield from _scan_compares(stmt, taint)
+            taint.handle(stmt)
+
+
+def _scan_compares(stmt: ast.stmt,
+                   taint: _DecodedTaint) -> Iterator[RawFinding]:
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if not (isinstance(node, ast.Compare) and len(node.ops) == 1 and
+                isinstance(node.ops[0], _COMPARE_OPS)):
+            continue
+        left, right = node.left, node.comparators[0]
+        for dec_side, bsf_side in ((left, right), (right, left)):
+            if not taint.expr_decoded(dec_side):
+                continue
+            if not _components_in(bsf_side) & _BSF_COMPONENTS:
+                continue
+            if _components_in(dec_side) & _BOUND_COMPONENTS:
+                continue    # certified LB/UB slack pattern
+            if _is_float32_recompute(dec_side):
+                continue    # sanctioned recompute
+            yield RawFinding(
+                RULE_ID, node.lineno, node.col_offset,
+                f"raw BSF comparison against a decoded value "
+                f"({ast.unparse(node)}): codec round-trip error is not "
+                "accounted for, so true neighbours can be pruned. Compare "
+                "certified LB/UB-with-slack instead, or recompute the "
+                "distance in float32 difference form over a copied "
+                "candidate pool (np.take + astype(np.float32)).")
+            return  # one finding per statement

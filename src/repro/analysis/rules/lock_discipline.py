@@ -31,7 +31,8 @@ _LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore",
                    "BoundedSemaphore"}
 
 
-def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
     for node in ast.walk(tree):
         if isinstance(node, ast.ClassDef):
             yield from _check_class(node)

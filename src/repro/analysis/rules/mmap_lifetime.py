@@ -56,9 +56,17 @@ def _is_opener(call: ast.Call) -> bool:
 
 
 class _Derivations:
-    """Maps local names to the handle they borrow their memory from."""
+    """Maps local names to the handle they borrow their memory from.
 
-    def __init__(self):
+    With a summary index (v2), calls to helpers summarised as
+    ``returns_self_view`` derive from their receiver — the
+    ``saved.rows()`` → private ``self._mapped()[lo:hi]`` chain that v1's
+    name list could not see.
+    """
+
+    def __init__(self, summaries=None, path=None):
+        self.summaries = summaries
+        self.path = path
         self.handles: set = set()          # dotted handle names
         self.roots: Dict[str, str] = {}    # view name -> handle name
 
@@ -86,6 +94,10 @@ class _Derivations:
             if tail in _DERIVING_METHODS and isinstance(node.func,
                                                         ast.Attribute):
                 return self.root_of(node.func.value)
+            if self.summaries is not None and \
+                    isinstance(node.func, ast.Attribute) and \
+                    self.summaries.returns_self_view(node, self.path):
+                return self.root_of(node.func.value)
             if tail in _VIEW_PRESERVING:
                 mod = call_name(node) or ""
                 if mod.startswith(("jnp.", "jax.")):
@@ -98,17 +110,19 @@ class _Derivations:
         return None
 
 
-def check(tree: ast.Module, rel_path: str, src_lines) -> Iterator[RawFinding]:
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
     scopes: List[ast.AST] = [tree]
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             scopes.append(node)
     for scope in scopes:
-        yield from _check_scope(scope)
+        yield from _check_scope(scope, summaries, rel_path)
 
 
-def _check_scope(scope: ast.AST) -> Iterator[RawFinding]:
-    deriv = _Derivations()
+def _check_scope(scope: ast.AST, summaries=None,
+                 rel_path=None) -> Iterator[RawFinding]:
+    deriv = _Derivations(summaries=summaries, path=rel_path)
     closed: Dict[str, int] = {}            # handle -> close() lineno
     regions: List[Tuple[str, int]] = []    # (handle, with-block end lineno)
 

@@ -1,0 +1,148 @@
+"""Rule: plan-key-completeness — everything a plan reads must key it.
+
+The plan-cache bug class this repo has shipped twice: a compiled plan is
+cached under a key, the plan *producer* reads state the key does not
+mention, and a later lookup reuses a plan compiled for different
+semantics. PR 8 had to add ``SearchConfig.codec`` to the key by hand;
+PR 9 had to add the backend mesh signature. This rule automates the
+audit.
+
+For every function containing a plan-cache store
+(``self._plans[key] = make_...(...)`` / ``self._programs[cfg] = ...`` —
+any container whose name mentions plan/program), the rule resolves the
+key expression (a tuple assigned to the key name, or the indexing
+expression itself) and flags:
+
+* a ``cfg.<field>`` / ``config.<field>`` attribute read anywhere in the
+  function whose field is not covered by the key (bare ``cfg`` in the
+  key covers all fields via frozen-dataclass equality);
+* backend state (``self.<attr>`` dotted reads) consumed by the producer
+  call but absent from the key — unless the key carries a
+  ``plan_signature`` element, the established convention for folding a
+  backend's identity into the key.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from repro.analysis.rules.common import (
+    RawFinding, dotted, name_components, statements_in_order,
+)
+
+RULE_ID = "plan-key-completeness"
+DESCRIPTION = ("every SearchConfig field and backend attribute a cached "
+               "plan's producer reads must appear in the plan-cache key "
+               "or its plan_signature element")
+
+_CONTAINER_COMPONENTS = {"plan", "plans", "program", "programs"}
+_CFG_COMPONENTS = {"cfg", "config"}
+
+#: self.<attr> reads in a producer that do not parameterise the compiled
+#: plan: the cache container itself and lifecycle/telemetry plumbing.
+_BENIGN_SELF_ATTRS = {"_t", "stats", "telemetry"}
+
+
+def _is_plan_container(expr: ast.expr) -> bool:
+    name = dotted(expr)
+    if name is None:
+        return False
+    return bool(name_components(name.replace(".", "_"))
+                & _CONTAINER_COMPONENTS)
+
+
+def _functions(tree: ast.Module) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
+    for fn in _functions(tree):
+        yield from _check_function(fn)
+
+
+def _check_function(fn: ast.AST) -> Iterator[RawFinding]:
+    key_tuples: Dict[str, ast.Tuple] = {}
+    stores: List[Tuple[ast.expr, ast.expr, ast.stmt]] = []
+    # (key expr, producer expr, store stmt) per plan-cache write
+
+    for stmt in statements_in_order(fn):
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and \
+                        isinstance(stmt.value, ast.Tuple):
+                    key_tuples[tgt.id] = stmt.value
+                if isinstance(tgt, ast.Subscript) and \
+                        _is_plan_container(tgt.value):
+                    stores.append((tgt.slice, stmt.value, stmt))
+
+    for key_expr, producer, stmt in stores:
+        if isinstance(key_expr, ast.Name) and key_expr.id in key_tuples:
+            elements = list(key_tuples[key_expr.id].elts)
+        elif isinstance(key_expr, ast.Tuple):
+            elements = list(key_expr.elts)
+        else:
+            elements = [key_expr]
+        element_srcs = [ast.unparse(e) for e in elements]
+        covered = " ".join(element_srcs)
+        whole_names: Set[str] = {e.id for e in elements
+                                 if isinstance(e, ast.Name)}
+        has_signature = "plan_signature" in covered
+
+        # --- (1) cfg fields read anywhere in the function ---------------
+        flagged_fields: Set[str] = set()
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Attribute) and
+                    isinstance(node.value, ast.Name)):
+                continue
+            recv = node.value.id
+            if not name_components(recv) & _CFG_COMPONENTS:
+                continue
+            if recv in whole_names:
+                continue        # cfg itself is in the key: all fields keyed
+            ref = f"{recv}.{node.attr}"
+            if any(ref in src for src in element_srcs) or \
+                    node.attr in flagged_fields:
+                continue
+            flagged_fields.add(node.attr)
+            yield RawFinding(
+                RULE_ID, node.lineno, node.col_offset,
+                f"'{ref}' steers the cached plan at line {stmt.lineno} but "
+                f"the plan-cache key ({', '.join(element_srcs)}) does not "
+                f"include it: a config differing only in '{node.attr}' "
+                "would reuse a plan compiled for different semantics. Put "
+                f"'{recv}' itself (or '{ref}') in the key.")
+
+        # --- (2) backend state read by the producer ---------------------
+        if has_signature:
+            continue
+        # the callee of `self._build(...)` is the factory, not state the
+        # plan bakes in; its *receiver* (`self.backend.make_plan`) and
+        # its arguments are state
+        callees = {id(n.func) for n in ast.walk(producer)
+                   if isinstance(n, ast.Call)}
+        flagged_attrs: Set[str] = set()
+        for node in ast.walk(producer):
+            if not (isinstance(node, ast.Attribute) and
+                    isinstance(node.value, ast.Name) and
+                    node.value.id == "self"):
+                continue
+            if id(node) in callees:
+                continue
+            if node.attr in _BENIGN_SELF_ATTRS or node.attr in flagged_attrs:
+                continue
+            ref = f"self.{node.attr}"
+            if any(ref in src for src in element_srcs):
+                continue
+            flagged_attrs.add(node.attr)
+            yield RawFinding(
+                RULE_ID, node.lineno, node.col_offset,
+                f"plan producer reads '{ref}' but the plan-cache key "
+                f"({', '.join(element_srcs)}) carries neither it nor a "
+                "plan_signature element: if this state can differ between "
+                "instances sharing the cache (or change across reopen), "
+                "stale plans serve wrong answers. Fold it into a "
+                "plan_signature tuple and key on that (the PR 9 mesh "
+                "convention).")

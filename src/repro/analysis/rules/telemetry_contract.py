@@ -1,0 +1,80 @@
+"""Rule: telemetry-contract — counters and their declarations can't drift.
+
+The unified ``Telemetry`` report (PR 8) is assembled from raw counter
+dicts (``self._t[...]`` in the backends, ``self.stats[...]`` in the
+readers) into declared ``*Telemetry`` dataclass sections. Two failure
+modes have nearly shipped:
+
+* **drift** — a call site bumps a counter key that no declared section
+  field and no consumer ever reads: the bump is dead weight and the
+  operator dashboards silently miss the signal the author thought they
+  added;
+* **dead counters** — a section declares a field nothing ever feeds:
+  the report shows a frozen zero, indistinguishable from "healthy".
+
+This rule is project-wide: it checks the file at hand against the
+:class:`~repro.analysis.callgraph.TelemetryIndex` built over the whole
+lint run (declared fields from every ``*Telemetry`` dataclass, fed keys
+from every bump/assembly site, consumed keys from every
+``telemetry()``/``stats()`` reader). Without a summary index the rule is
+inert — there is no file-local way to know the project contract.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.rules.common import (
+    RawFinding, dotted, last_attr,
+)
+
+RULE_ID = "telemetry-contract"
+DESCRIPTION = ("every counter bumped at a call site must back a declared "
+               "Telemetry section field (or a consumer), and every "
+               "declared field must be fed by some bump")
+
+_COUNTER_RECEIVERS = {"_t", "stats"}
+
+
+def _is_counter_receiver(expr: ast.expr) -> bool:
+    return last_attr(dotted(expr)) in _COUNTER_RECEIVERS
+
+
+def check(tree: ast.Module, rel_path: str, src_lines,
+          summaries=None) -> Iterator[RawFinding]:
+    tix = getattr(summaries, "telemetry", None)
+    if tix is None or not tix.declared:
+        return
+
+    valid_bump_keys = set(tix.declared) | set(tix.aliases) | tix.consumed
+
+    # --- drift: bumps in this file against the project contract ---------
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, ast.Store) and \
+                isinstance(node.slice, ast.Constant) and \
+                isinstance(node.slice.value, str) and \
+                _is_counter_receiver(node.value):
+            key = node.slice.value
+            if key not in valid_bump_keys:
+                yield RawFinding(
+                    RULE_ID, node.lineno, node.col_offset,
+                    f"counter '{key}' is bumped here but no declared "
+                    "*Telemetry section field, alias, or telemetry()/"
+                    "stats() consumer reads it: the signal never reaches "
+                    "the report. Declare it as a section field (and "
+                    "assemble it) or drop the bump.")
+
+    # --- dead counters: declarations in this file never fed -------------
+    alive = tix.fed | set(tix.aliases.values())
+    for field, (path, line) in sorted(tix.declared.items()):
+        if path != rel_path:
+            continue
+        if field not in alive:
+            yield RawFinding(
+                RULE_ID, line, 0,
+                f"Telemetry section field '{field}' is declared here but "
+                "nothing ever feeds it (no counter bump, dict-literal "
+                "init, or assembly kwarg): the report will show a frozen "
+                "default, indistinguishable from a healthy zero. Wire a "
+                "bump or delete the field.")

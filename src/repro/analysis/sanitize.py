@@ -28,6 +28,8 @@ environment variable is unset.
 from __future__ import annotations
 
 import os
+import threading
+import traceback
 
 import numpy as np
 
@@ -166,3 +168,227 @@ def guard_mmap(arr, label: str):
     if arr is not None and sanitize_enabled():
         return MmapGuard(arr, label)
     return arr
+
+
+# ---------------------------------------------------------------------------
+# lockdep: lock-order-cycle detection + thread ownership (PR 10)
+# ---------------------------------------------------------------------------
+
+class LockOrderError(SanitizerError):
+    """Two locks were acquired in opposite orders on different paths —
+    a latent ABBA deadlock. Raised *before* blocking, at the acquisition
+    that would close the cycle, with both acquisition stacks."""
+
+
+class ThreadOwnershipError(SanitizerError):
+    """A single-owner structure (``SlotQueue`` / reader slots) was touched
+    from a thread other than the one it is bound to."""
+
+
+class HeldLockError(SanitizerError):
+    """A thread-pool work item started or finished while holding a lock —
+    pool threads must never carry locks across work-item boundaries."""
+
+
+def _stack(skip: int = 2) -> str:
+    """Formatted stack of the caller, trimmed of sanitizer frames."""
+    return "".join(traceback.format_stack()[:-skip])
+
+
+class _LockDep:
+    """Process-global lock-acquisition-order graph.
+
+    Kept deliberately simple: an edge A→B is recorded (with the stack
+    that created it) the first time B is acquired while A is held; when
+    acquiring B with A held, an existing *path* B→…→A means some other
+    code path takes the same locks in the opposite order — the classic
+    ABBA shape — and :class:`LockOrderError` is raised before the
+    acquisition can block. Keys are the wrapper-supplied names, so two
+    instances sharing a name class (e.g. per-shard locks) are one node;
+    that is the conservative direction for deadlock detection.
+    """
+
+    def __init__(self):
+        self._mutex = threading.Lock()       # guards the edge graph
+        self._edges: dict = {}               # (a, b) -> recording stack
+        self._held = threading.local()
+
+    def held(self):
+        if not hasattr(self._held, "names"):
+            self._held.names = []
+        return self._held.names
+
+    def reset(self) -> None:
+        """Clear the edge graph and the calling thread's held list
+        (test isolation)."""
+        with self._mutex:
+            self._edges.clear()
+        if hasattr(self._held, "names"):
+            self._held.names = []
+
+    def _find_path(self, src: str, dst: str):
+        """Stack of the first edge on a src→…→dst path, or None."""
+        seen, frontier = {src}, [(src, None)]
+        while frontier:
+            node, first_stack = frontier.pop()
+            for (a, b), stack in self._edges.items():
+                if a != node or b in seen:
+                    continue
+                edge_stack = first_stack or stack
+                if b == dst:
+                    return edge_stack
+                seen.add(b)
+                frontier.append((b, edge_stack))
+        return None
+
+    def note_acquire(self, name: str) -> None:
+        held = self.held()
+        if held:
+            with self._mutex:
+                for prior in held:
+                    if prior == name:
+                        continue    # reentrant / same name class
+                    reverse = self._find_path(name, prior)
+                    if reverse is not None:
+                        raise LockOrderError(
+                            f"lock-order cycle: acquiring '{name}' while "
+                            f"holding '{prior}', but '{name}' -> "
+                            f"'{prior}' was already established — the "
+                            "ABBA deadlock shape. Acquisition stack "
+                            f"establishing the opposite order:\n{reverse}\n"
+                            f"Current acquisition stack:\n{_stack()}")
+                    self._edges.setdefault((prior, name), _stack())
+        held.append(name)
+
+    def note_release(self, name: str) -> None:
+        held = self.held()
+        if name in held:
+            # remove the most recent acquisition of this name
+            for i in range(len(held) - 1, -1, -1):
+                if held[i] == name:
+                    del held[i]
+                    break
+
+
+#: Process-global lockdep state (shared so cycles across subsystems are
+#: visible). Tests call ``LOCKDEP.reset()`` between fixtures.
+LOCKDEP = _LockDep()
+
+
+class LockdepLock:
+    """Transparent proxy over a ``threading.Lock`` / ``RLock`` /
+    ``Condition`` that feeds the acquisition-order graph. All other
+    attributes (``wait`` / ``notify`` / ...) delegate to the wrapped
+    object."""
+
+    def __init__(self, lock, name: str):
+        self._lock = lock
+        self._name = name
+
+    def acquire(self, *args, **kwargs):
+        LOCKDEP.note_acquire(self._name)   # raises before blocking
+        ok = self._lock.acquire(*args, **kwargs)
+        if not ok:                          # non-blocking attempt failed
+            LOCKDEP.note_release(self._name)
+        return ok
+
+    def release(self):
+        self._lock.release()
+        LOCKDEP.note_release(self._name)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def __getattr__(self, attr):
+        return getattr(self._lock, attr)
+
+    def __repr__(self):
+        return f"LockdepLock({self._name}, {self._lock!r})"
+
+
+def wrap_lock(lock, name: str):
+    """Wrap a lock/condition for lockdep when sanitizing, else pass
+    through unchanged (zero overhead in production)."""
+    if sanitize_enabled():
+        return LockdepLock(lock, name)
+    return lock
+
+
+def wrap_condition(cond, name: str):
+    """Alias of :func:`wrap_lock` — conditions feed the same order graph
+    through their ``acquire``/``release``; ``wait``/``notify`` delegate."""
+    return wrap_lock(cond, name)
+
+
+def lockdep_task(fn, name: str = "pool-task"):
+    """Wrap a thread-pool work item: entering or leaving a work item
+    while holding any lockdep-tracked lock raises :class:`HeldLockError`
+    (pool threads are recycled — a carried lock deadlocks a *later*,
+    unrelated work item). No-op passthrough when not sanitizing."""
+    if not sanitize_enabled():
+        return fn
+
+    def wrapped(*args, **kwargs):
+        held = list(LOCKDEP.held())
+        if held:
+            raise HeldLockError(
+                f"work item '{name}' entered while holding {held}: pool "
+                f"work must start lock-free.\n{_stack()}")
+        result = fn(*args, **kwargs)
+        leaked = list(LOCKDEP.held())
+        if leaked:
+            raise HeldLockError(
+                f"work item '{name}' returned while still holding "
+                f"{leaked}: a recycled pool thread would deadlock the "
+                f"next item.\n{_stack()}")
+        return result
+
+    return wrapped
+
+
+class ThreadAffinity:
+    """First-touch thread ownership for single-owner structures.
+
+    ``SlotQueue`` and the chunk readers' consumer side are lock-free *by
+    contract*: exactly one thread drives them. The contract is invisible
+    at runtime — until a foreign thread touches the structure and a
+    torn list/dict update corrupts a wave. Under ``REPRO_SANITIZE=1``
+    each :meth:`check` binds the structure to the first touching thread
+    and raises :class:`ThreadOwnershipError` (with the binding stack and
+    the foreign stack) on any touch from another thread.
+    """
+
+    def __init__(self, label: str):
+        self._label = label
+        self._owner = None
+        self._bind_stack = None
+        self._bind_op = None
+
+    def check(self, op: str) -> None:
+        if not sanitize_enabled():
+            return
+        me = threading.current_thread()
+        if self._owner is None:
+            self._owner, self._bind_op = me, op
+            self._bind_stack = _stack()
+            return
+        if me is not self._owner:
+            raise ThreadOwnershipError(
+                f"{self._label}.{op} called from thread "
+                f"'{me.name}' but the structure is bound to "
+                f"'{self._owner.name}' (first touch: "
+                f"{self._bind_op}). It is lock-free by contract — exactly "
+                "one thread may drive it; hand off through a queue "
+                "instead. Binding stack:\n"
+                f"{self._bind_stack}\nForeign touch stack:\n{_stack()}")
+
+    def rebind(self) -> None:
+        """Release ownership (intentional handoff between threads)."""
+        self._owner = None
+        self._bind_stack = None
+        self._bind_op = None

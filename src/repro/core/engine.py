@@ -1429,7 +1429,20 @@ class ShardedBackend(BackendBase):
             raise ValueError(f"index has {stacked.num_shards} shards but the "
                              f"mesh has {ndev} devices")
         self.mesh = mesh
-        self._programs: dict[SearchConfig, Callable] = {}
+        self._programs: dict[tuple, Callable] = {}
+
+    @property
+    def plan_signature(self) -> tuple:
+        """Identity of everything the compiled program bakes in besides
+        ``cfg``: the mesh topology and the sharded index's shape. Part of
+        every plan-cache key (here and in ``QueryEngine``) so plans can
+        never be reused across a different mesh or a reopened index —
+        the PR 9 dist-ooc convention, now enforced by the
+        plan-key-completeness lint."""
+        st = self.stacked
+        return (self.name, st.num_shards,
+                tuple((a, int(s)) for a, s in self.mesh.shape.items()),
+                st.max_depth, st.layout.num_series, st.layout.series_len)
 
     @property
     def series_len(self) -> int:
@@ -1443,12 +1456,13 @@ class ShardedBackend(BackendBase):
         validate_runtime_config(cfg, self.stacked.layout.lrd.shape[-2])
 
     def _run_for(self, cfg: SearchConfig):
-        if cfg not in self._programs:
+        key = (cfg, self.plan_signature)
+        if key not in self._programs:
             from repro.distributed.search import make_distributed_search
-            self._programs[cfg] = make_distributed_search(
+            self._programs[key] = make_distributed_search(
                 self.mesh, cfg, self.stacked.max_depth,
                 self.stacked.tree, self.stacked.layout)
-        return self._programs[cfg]
+        return self._programs[key]
 
     def _offsets(self):
         return self.stacked.shard_offsets.reshape(self.stacked.num_shards, 1)

@@ -313,6 +313,13 @@ class AsyncChunkReader:
         # stage(); verified against the poisoned slot at recycle time
         self._sanitize = sanitize.sanitize_enabled()
         self._staged_tracks: list[tuple[int, np.ndarray, jax.Array]] = []
+        # The consumer surface (submit/get/stage) is single-owner by
+        # contract: slot views and self.stats are driven by exactly one
+        # thread, with the reader thread on the other side of the queues.
+        # Binds to the first consuming thread, not the constructor —
+        # building on main and consuming in a pool worker is legal.
+        # close() is exempt: __del__ may run it from any thread.
+        self._consumer = sanitize.ThreadAffinity(type(self).__name__)
         self._thread = threading.Thread(target=self._run,
                                         name=self.THREAD_NAME, daemon=True)
         self._thread.start()
@@ -353,6 +360,7 @@ class AsyncChunkReader:
             raise RuntimeError("reader stream already failed") from self._exc
 
     def submit(self, start: int, count: int, pad_to: int | None = None):
+        self._consumer.check("submit")
         self._check_alive()
         if count <= 0:
             raise ValueError(f"count must be positive, got {count}")
@@ -364,6 +372,7 @@ class AsyncChunkReader:
         self._requests.put((int(start), int(count), int(pad_to)))
 
     def get(self) -> np.ndarray:
+        self._consumer.check("get")
         self._check_alive()
         if self._pending <= 0:
             raise RuntimeError("get() without a pending submit()")
@@ -420,6 +429,7 @@ class AsyncChunkReader:
         ``get()`` (which recycles the slot the copy reads from) — the
         double-buffer loop uses this to overlap the copy with consumer
         compute."""
+        self._consumer.check("stage")
         dev = _staged_copy(view, device)
         if block:
             jax.block_until_ready(dev)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.sanitize import lockdep_task
 from repro.core.engine import OutOfCoreLocalBackend, _OutOfCoreBase
 from repro.core.search import SearchConfig
 from repro.distributed.compat import make_mesh, shard_map
@@ -341,13 +342,17 @@ class DistOutOfCoreBackend(_OutOfCoreBase):
         if len(plans) > 1:
             # one worker per shard: reads and refines overlap across the
             # mesh (each shard already overlaps read with compute via its
-            # own reader; this overlaps the shards with each other)
+            # own reader; this overlaps the shards with each other).
+            # Under REPRO_SANITIZE=1 lockdep asserts each work item enters
+            # and leaves lock-free — pool threads are recycled, so a
+            # carried lock would deadlock a later, unrelated item.
+            run = lockdep_task(
+                lambda ip: self._run_shard(ip[0], ip[1], q, valid_rows),
+                name="dist-ooc-shard")
             with ThreadPoolExecutor(max_workers=len(plans),
                                     thread_name_prefix="repro-dist-shard"
                                     ) as pool:
-                results = list(pool.map(
-                    lambda ip: self._run_shard(ip[0], ip[1], q, valid_rows),
-                    plans))
+                results = list(pool.map(run, plans))
         else:
             results = [self._run_shard(i, p, q, valid_rows)
                        for i, p in plans]

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitize import ThreadAffinity
 from repro.models import ModelDef
 from repro.models.arch import ArchConfig
 
@@ -34,15 +35,29 @@ class SlotQueue:
 
     Results are *claimed*: ``poll``/``drain``/``run`` hand each answer out
     exactly once and drop it from the engine, so a long-running serving
-    session does not accumulate its whole answer history in memory."""
+    session does not accumulate its whole answer history in memory.
+
+    The queue is lock-free **by contract**: exactly one thread drives
+    submit/step/drain/poll. Under ``REPRO_SANITIZE=1`` the contract is
+    enforced — the queue binds to the first touching thread and a foreign
+    touch raises ``ThreadOwnershipError`` with both stacks (lockdep's
+    ownership half). Use :meth:`rebind_owner` for an intentional handoff.
+    """
 
     def __init__(self):
         self._queue: list[dict] = []
         self._results: dict[int, Any] = {}
         self._next_id = 0
         self._served = 0
+        self._affinity = ThreadAffinity(type(self).__name__)
+
+    def rebind_owner(self) -> None:
+        """Hand the queue to another thread (releases the sanitizer's
+        thread binding; the next touch binds the new owner)."""
+        self._affinity.rebind()
 
     def _enqueue(self, payload: dict) -> int:
+        self._affinity.check("_enqueue")
         rid = self._next_id
         self._next_id += 1
         payload["id"] = rid
@@ -50,17 +65,21 @@ class SlotQueue:
         return rid
 
     def _take_wave(self, slots: int) -> list[dict]:
+        self._affinity.check("_take_wave")
         wave, self._queue = self._queue[:slots], self._queue[slots:]
         return wave
 
     def _requeue(self, wave: list[dict]) -> None:
+        self._affinity.check("_requeue")
         self._queue[:0] = wave
 
     def _complete(self, rid: int, result) -> None:
+        self._affinity.check("_complete")
         self._results[rid] = result
         self._served += 1
 
     def _collect(self) -> dict[int, Any]:
+        self._affinity.check("_collect")
         out, self._results = self._results, {}
         return out
 
@@ -71,6 +90,7 @@ class SlotQueue:
     def poll(self, rid: int):
         """Claim the result for ``rid``: returns it once, then None (also
         None while the request is still queued)."""
+        self._affinity.check("poll")
         return self._results.pop(rid, None)
 
 

@@ -8,12 +8,13 @@ slot for real and assert the REPRO_SANITIZE=1 canary trips at runtime.
 """
 import json
 import textwrap
+import threading
 
 import jax
 import numpy as np
 import pytest
 
-from repro.analysis import deadcode, herculint, sanitize
+from repro.analysis import callgraph, deadcode, herculint, sanitize
 from repro.analysis.__main__ import main as analysis_main
 from repro.analysis.herculint import lint_source
 
@@ -449,6 +450,15 @@ class TestEngine:
         assert analysis_main([str(bad), "--repo-root", str(tmp_path)]) == 1
         assert "alias-transfer" in capsys.readouterr().out
 
+    def test_cli_graph_emits_project_json(self, tmp_path, capsys):
+        out = tmp_path / "graph.json"
+        assert analysis_main(["--graph", str(out)]) == 0
+        assert "call graph written" in capsys.readouterr().out
+        blob = json.loads(out.read_text())
+        assert set(blob) >= {"modules", "imports", "functions", "calls",
+                             "telemetry"}
+        assert any(f["returns_tainted"] for f in blob["functions"].values())
+
     def test_fingerprint_stable_across_line_drift(self):
         src_a = """
             import jax
@@ -700,6 +710,28 @@ class TestPinnedFixes:
         finally:
             reader.close()
 
+    def test_sharded_plan_cache_keys_on_signature(self):
+        """ShardedBackend._run_for keyed compiled programs by cfg alone
+        while the producer baked in the mesh + stacked layout (the
+        plan-key-completeness catch): the cache key must carry the
+        backend's plan_signature."""
+        from repro.core import (BuildConfig, IndexConfig, SearchConfig,
+                                make_backend)
+        from repro.data import random_walks
+
+        data = random_walks(jax.random.PRNGKey(3), 256, 32)
+        cfg = IndexConfig(build=BuildConfig(leaf_capacity=32),
+                          search=SearchConfig(k=2, l_max=4, chunk=64,
+                                              scan_block=64))
+        backend = make_backend("sharded", data, index_config=cfg,
+                               num_shards=1)
+        sig = backend.plan_signature
+        assert sig[0] == backend.name
+        assert backend.stacked.num_shards in sig
+        program = backend._run_for(cfg.search)
+        assert (cfg.search, sig) in backend._programs
+        assert backend._run_for(cfg.search) is program   # same key → hit
+
     def test_journal_query_survives_reopen(self, tmp_path):
         """_merge_journal blocks now own their bytes: answers must remain
         exact after the segment mmaps are released."""
@@ -718,3 +750,479 @@ class TestPinnedFixes:
             brute = np.argsort(((all_rows[None] - q[:, None]) ** 2
                                 ).sum(-1), axis=1)[:, :1]
             np.testing.assert_array_equal(np.asarray(res.ids), brute)
+
+
+# ---------------------------------------------------------------------------
+# v2: call-graph summaries (repro.analysis.callgraph)
+# ---------------------------------------------------------------------------
+
+class TestCallGraph:
+    SRC = """
+        import numpy as np
+
+        def fetch_rows(reader):
+            chunk = reader.get()
+            return chunk[:16]
+
+        def snapshot_rows(reader):
+            view = reader.get()
+            return np.array(view[:16])
+
+        class Saved:
+            def window(self):
+                return self.lrd[0:10]
+
+            def stats(self):
+                return {"n": 1}
+
+        def guarded(state):
+            with state.lock:
+                state.n += 1
+    """
+
+    def index(self):
+        return callgraph.index_for_source(
+            textwrap.dedent(self.SRC), "scratch.py")
+
+    def test_taint_and_cleanse_summaries(self):
+        fns = self.index().functions
+        assert fns["scratch.py::fetch_rows"].returns_tainted
+        assert not fns["scratch.py::fetch_rows"].cleanses_return
+        assert fns["scratch.py::snapshot_rows"].cleanses_return
+        assert not fns["scratch.py::snapshot_rows"].returns_tainted
+
+    def test_self_view_and_lock_summaries(self):
+        fns = self.index().functions
+        assert fns["scratch.py::Saved.window"].returns_self_view
+        assert not fns["scratch.py::Saved.stats"].returns_self_view
+        assert "state.lock" in fns["scratch.py::guarded"].acquires_locks
+        assert "state.lock" in fns["scratch.py::guarded"].releases_locks
+
+    def test_call_verdict_votes_same_file_candidates(self):
+        import ast
+        index = self.index()
+        call = ast.parse("fetch_rows(r)", mode="eval").body
+        assert index.call_verdict(call, "scratch.py") == "tainted"
+        call = ast.parse("snapshot_rows(r)", mode="eval").body
+        assert index.call_verdict(call, "scratch.py") == "cleanses"
+
+    def test_unresolvable_bare_names_never_cross_files(self):
+        # `get` is in the unresolvable set: a project-wide match on such
+        # a generic name would poison every caller in the repo
+        index = callgraph.build_index({
+            "a.py": "def get():\n    return reader.get()\n",
+            "b.py": "def use(r):\n    return get()\n",
+        })
+        import ast
+        call = ast.parse("get()", mode="eval").body
+        # same-file resolution still works in a.py ...
+        assert index.candidates("get", "a.py")
+        # ... but b.py (no local def) must not reach a.py's `get`
+        assert not index.candidates("get", "b.py")
+
+    def test_project_graph_covers_repo(self, repo_root):
+        project = callgraph.build_project_graph(repo_root)
+        assert "repro.api" in project.modules
+        fns = project.index.functions
+        key = "src/repro/data/pipeline.py::AsyncChunkReader.get"
+        assert key in fns and fns[key].returns_tainted
+        assert project.index.telemetry.declared   # Telemetry fields seen
+        blob = project.to_json()
+        assert set(blob) >= {"modules", "imports", "functions", "calls",
+                             "telemetry"}
+
+
+# ---------------------------------------------------------------------------
+# v2: interprocedural meta-tests — v1 (empty index) provably misses what
+# the call-graph-aware engine flags
+# ---------------------------------------------------------------------------
+
+def v1_findings(src, rule, path="scratch.py"):
+    """Lint with summaries disabled — byte-for-byte the v1 engine."""
+    got, problems = lint_source(textwrap.dedent(src), path,
+                                summaries=callgraph.SummaryIndex.empty())
+    return [f for f in got + problems if f.rule == rule]
+
+
+class TestInterprocedural:
+    ALIAS_SRC = """
+        import jax
+
+        class Runner:
+            def _fetch(self):
+                chunk = self.reader.get()
+                return chunk[:16]
+
+            def _grab(self):
+                return self._fetch()
+
+            def run(self):
+                rows = self._grab()
+                return jax.device_put(rows)
+    """
+
+    def test_v2_flags_view_escaping_through_helpers(self):
+        got = findings_for(self.ALIAS_SRC, rule="alias-transfer")
+        assert got and any("device_put" in f.message for f in got)
+
+    def test_v1_misses_the_same_fixture(self):
+        assert v1_findings(self.ALIAS_SRC, "alias-transfer") == []
+
+    MMAP_SRC = """
+        class Saved:
+            def window(self):
+                return self.lrd[0:10]
+
+        def use(path):
+            with open_saved(path) as idx:
+                return idx.window()
+    """
+
+    def test_v2_flags_self_view_escaping_with_block(self):
+        got = findings_for(self.MMAP_SRC, rule="mmap-lifetime")
+        assert got and any("idx" in f.message for f in got)
+
+    def test_v1_misses_the_self_view_helper(self):
+        assert v1_findings(self.MMAP_SRC, "mmap-lifetime") == []
+
+    def test_cleansing_helper_overrides_view_name(self):
+        # helper is *named* like a view producer but provably copies:
+        # summaries must silence the name heuristic, not add to it
+        src = """
+            import jax
+            import numpy as np
+
+            def view_of(reader):
+                return np.array(reader.get())
+
+            def run(reader):
+                rows = view_of(reader)
+                return jax.device_put(rows)
+        """
+        assert findings_for(src, rule="alias-transfer") == []
+
+
+# ---------------------------------------------------------------------------
+# plan-key-completeness
+# ---------------------------------------------------------------------------
+
+class TestPlanKeyCompleteness:
+    def test_flags_cfg_field_outside_key(self):
+        src = """
+            class Engine:
+                def knn(self, q, cfg):
+                    key = (cfg.k, q.shape[1])
+                    if key not in self._plans:
+                        self._plans[key] = make_plan(cfg.k)
+                    block = cfg.scan_block
+                    return self._plans[key](q, block)
+        """
+        got = findings_for(src, rule="plan-key-completeness")
+        assert any("cfg.scan_block" in f.message for f in got)
+        assert not any("'cfg.k'" in f.message for f in got)
+
+    def test_flags_backend_state_without_signature(self):
+        src = """
+            class Backend:
+                def _run_for(self, cfg):
+                    if cfg not in self._programs:
+                        self._programs[cfg] = make_search(
+                            self.mesh, self.stacked, cfg)
+                    return self._programs[cfg]
+        """
+        got = findings_for(src, rule="plan-key-completeness")
+        assert any("self.mesh" in f.message for f in got)
+        assert any("plan_signature" in f.message for f in got)
+
+    def test_clean_with_whole_cfg_and_signature(self):
+        src = """
+            class Engine:
+                def knn(self, q, cfg):
+                    key = (cfg, q.shape[1], self.backend.plan_signature)
+                    if key not in self._plans:
+                        self._plans[key] = self.backend.make_plan(cfg)
+                    return self._plans[key](q)
+        """
+        assert findings_for(src, rule="plan-key-completeness") == []
+
+    def test_producer_callee_method_is_not_state(self):
+        # `self._build` is the factory being *called*, not state baked
+        # into the plan — flagging it would make every engine noisy
+        src = """
+            class Engine:
+                def knn(self, q, cfg):
+                    self._plans[(cfg,)] = self._build(cfg)
+                    return self._plans[(cfg,)](q)
+        """
+        assert findings_for(src, rule="plan-key-completeness") == []
+
+
+# ---------------------------------------------------------------------------
+# exactness-invariant
+# ---------------------------------------------------------------------------
+
+class TestExactnessInvariant:
+    def test_flags_decoded_value_against_bsf(self):
+        src = """
+            def refine(enc, q, codec, bsf):
+                dec = codec.decode(enc)
+                d = ((dec - q) ** 2).sum(-1)
+                if d[0] <= bsf:
+                    return True
+                return False
+        """
+        got = findings_for(src, rule="exactness-invariant")
+        assert got and any("float32" in f.message for f in got)
+
+    def test_certified_bound_comparison_is_clean(self):
+        src = """
+            def refine(enc, codec, theta):
+                lb_dec = codec.decode(enc)
+                ok = lb_dec[:, -1] >= theta
+                return ok
+        """
+        assert findings_for(src, rule="exactness-invariant") == []
+
+    def test_float32_recompute_is_clean(self):
+        src = """
+            import numpy as np
+
+            def refine(enc, q, codec, bsf, cand):
+                dec = codec.decode(enc)
+                pool = np.take(dec, cand, axis=0).astype(np.float32)
+                d = ((pool - q) ** 2).sum(-1)
+                if d[0] <= bsf:
+                    return True
+                return False
+        """
+        assert findings_for(src, rule="exactness-invariant") == []
+
+
+# ---------------------------------------------------------------------------
+# telemetry-contract
+# ---------------------------------------------------------------------------
+
+class TestTelemetryContract:
+    def test_flags_bump_of_undeclared_key(self):
+        src = """
+            import dataclasses
+
+            @dataclasses.dataclass
+            class ScanTelemetry:
+                calls: int = 0
+
+            class Backend:
+                def __init__(self):
+                    self._t = {"calls": 0}
+
+                def run(self):
+                    self._t["callz"] += 1
+
+                def telemetry(self):
+                    return ScanTelemetry(calls=self._t["calls"])
+        """
+        got = findings_for(src, rule="telemetry-contract")
+        assert any("callz" in f.message for f in got)
+
+    def test_flags_declared_field_never_fed(self):
+        src = """
+            import dataclasses
+
+            @dataclasses.dataclass
+            class ScanTelemetry:
+                pruned: int = 0
+                ghost: int = 0
+
+            class Backend:
+                def __init__(self):
+                    self._t = {"pruned": 0}
+
+                def run(self):
+                    self._t["pruned"] += 1
+
+                def telemetry(self):
+                    return ScanTelemetry(pruned=self._t["pruned"])
+        """
+        got = findings_for(src, rule="telemetry-contract")
+        assert any("ghost" in f.message for f in got)
+        assert not any("'pruned'" in f.message for f in got)
+
+    def test_matched_counters_are_clean(self):
+        src = """
+            import dataclasses
+
+            @dataclasses.dataclass
+            class ScanTelemetry:
+                calls: int = 0
+
+            class Backend:
+                def __init__(self):
+                    self._t = {"calls": 0}
+
+                def run(self):
+                    self._t["calls"] += 1
+
+                def telemetry(self):
+                    return ScanTelemetry(calls=self._t["calls"])
+        """
+        assert findings_for(src, rule="telemetry-contract") == []
+
+    def test_inert_without_declared_fields(self):
+        assert findings_for(
+            "x = {'anything': 1}\nx['other'] = 2\n",
+            rule="telemetry-contract") == []
+
+
+# ---------------------------------------------------------------------------
+# lockdep runtime sanitizer
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def lockdep(sanitized):
+    sanitize.LOCKDEP.reset()
+    yield sanitize.LOCKDEP
+    sanitize.LOCKDEP.reset()
+
+
+class TestLockdep:
+    def test_abba_cycle_raises_with_both_stacks(self, lockdep):
+        a = sanitize.wrap_lock(threading.Lock(), "A")
+        b = sanitize.wrap_lock(threading.Lock(), "B")
+        with a:
+            with b:
+                pass
+        with b:
+            with pytest.raises(sanitize.LockOrderError) as exc:
+                with a:
+                    pass
+        msg = str(exc.value)
+        assert "lock-order cycle" in msg
+        assert "Acquisition stack establishing the opposite order" in msg
+        assert "Current acquisition stack" in msg
+        assert isinstance(exc.value, sanitize.SanitizerError)
+
+    def test_transitive_cycle_is_caught(self, lockdep):
+        a = sanitize.wrap_lock(threading.Lock(), "A")
+        b = sanitize.wrap_lock(threading.Lock(), "B")
+        c = sanitize.wrap_lock(threading.Lock(), "C")
+        with a:
+            with b:
+                pass
+        with b:
+            with c:
+                pass
+        with c:
+            with pytest.raises(sanitize.LockOrderError):
+                with a:
+                    pass
+
+    def test_consistent_order_is_clean(self, lockdep):
+        a = sanitize.wrap_lock(threading.Lock(), "A")
+        b = sanitize.wrap_lock(threading.Lock(), "B")
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+
+    def test_wrap_lock_is_passthrough_when_disabled(self, monkeypatch):
+        monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+        raw = threading.Lock()
+        assert sanitize.wrap_lock(raw, "A") is raw
+
+    def test_task_wrapper_rejects_held_lock_on_entry(self, lockdep):
+        a = sanitize.wrap_lock(threading.Lock(), "A")
+        task = sanitize.lockdep_task(lambda: None, name="t")
+        with a:
+            with pytest.raises(sanitize.HeldLockError,
+                               match="entered while holding"):
+                task()
+        task()      # clean outside the critical section
+
+    def test_task_wrapper_rejects_leaked_lock_on_exit(self, lockdep):
+        a = sanitize.wrap_lock(threading.Lock(), "A")
+        task = sanitize.lockdep_task(a.acquire, name="t")
+        with pytest.raises(sanitize.HeldLockError,
+                           match="still holding"):
+            task()
+
+    def test_thread_affinity_flags_foreign_touch(self, lockdep):
+        aff = sanitize.ThreadAffinity("SlotQueue")
+        aff.check("poll")           # binds the current thread
+        caught = []
+
+        def foreign():
+            try:
+                aff.check("submit")
+            except sanitize.ThreadOwnershipError as e:
+                caught.append(e)
+
+        t = threading.Thread(target=foreign)
+        t.start()
+        t.join()
+        assert caught, "foreign touch must raise ThreadOwnershipError"
+        msg = str(caught[0])
+        assert "Binding stack" in msg and "Foreign touch stack" in msg
+        assert "lock-free by contract" in msg
+
+    def test_thread_affinity_rebind_allows_handoff(self, lockdep):
+        aff = sanitize.ThreadAffinity("SlotQueue")
+        aff.check("poll")
+        aff.rebind()
+        out = []
+
+        def new_owner():
+            aff.check("poll")
+            out.append("ok")
+
+        t = threading.Thread(target=new_owner)
+        t.start()
+        t.join()
+        assert out == ["ok"]
+
+    def test_slot_queue_enforces_single_driver(self, lockdep):
+        from repro.serve.engine import SlotQueue
+
+        q = SlotQueue()
+        q._enqueue({"payload": 0})
+        caught = []
+
+        def foreign():
+            try:
+                q._enqueue({"payload": 1})
+            except sanitize.ThreadOwnershipError as e:
+                caught.append(e)
+
+        t = threading.Thread(target=foreign)
+        t.start()
+        t.join()
+        assert caught
+        q.rebind_owner()            # explicit handoff clears the binding
+        done = []
+        t2 = threading.Thread(
+            target=lambda: done.append(q._enqueue({"payload": 2})))
+        t2.start()
+        t2.join()
+        assert done
+
+    def test_async_reader_enforces_consumer_affinity(self, lockdep):
+        from repro.data import pipeline
+
+        rows = np.arange(64, dtype=np.float32).reshape(8, 8)
+        reader = pipeline.AsyncChunkReader(rows, 4, 8)
+        try:
+            reader.submit(0, 4)
+            reader.get()            # binds main as the consumer
+            caught = []
+
+            def foreign():
+                try:
+                    reader.submit(4, 4)
+                except sanitize.ThreadOwnershipError as e:
+                    caught.append(e)
+
+            t = threading.Thread(target=foreign)
+            t.start()
+            t.join()
+            assert caught
+        finally:
+            reader.close()          # close is exempt: any thread may close

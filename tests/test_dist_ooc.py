@@ -483,3 +483,61 @@ def test_dist_ooc_mesh_subprocess():
                          cwd="/root/repo", capture_output=True, text=True,
                          timeout=600)
     assert "DIST_OOC_MESH_OK" in res.stdout, res.stderr[-3000:]
+
+
+# the lean always-on leg: 2 forced host devices, sanitizers armed — every
+# machine exercises a real multi-device mesh even where the 8-device
+# matrix above is skipped
+_MESH2_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    os.environ["REPRO_SANITIZE"] = "1"
+    import sys; sys.path.insert(0, "src")
+    import warnings; warnings.simplefilter("ignore", RuntimeWarning)
+    import tempfile
+    import numpy as np
+    from repro import api
+
+    rng = np.random.default_rng(11)
+    data = rng.standard_normal((400, 32)).astype(np.float32)
+    extra = rng.standard_normal((24, 32)).astype(np.float32)
+    q = rng.standard_normal((3, 32)).astype(np.float32)
+    base = rng.standard_normal((50, 32)).astype(np.float32)
+    dup = np.repeat(base, 4, axis=0)
+    qt = (base[:2] + 1e-3).astype(np.float32)
+
+    def same(a, b):
+        assert np.array_equal(np.asarray(a.dists), np.asarray(b.dists))
+        assert np.array_equal(np.asarray(a.positions),
+                              np.asarray(b.positions))
+        assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+    with tempfile.TemporaryDirectory() as d:
+        with api.Hercules.create(d + "/i", api.IndexConfig(),
+                                 data=data) as hx:
+            hx.append(extra)        # journal rows merge on every path
+            ref = hx.query(q, k=5, backend="local")
+            for prefetch in ("sync", "thread"):
+                for wave in (False, True):
+                    res = hx.query(q, k=5, backend="dist-ooc", shards=2,
+                                   memory_budget_mb=8, prefetch=prefetch,
+                                   wave=wave)
+                    same(ref, res)
+        # tie determinism on the 2-device mesh (duplicated rows)
+        with api.Hercules.create(d + "/dup", api.IndexConfig(),
+                                 data=dup) as hx:
+            ref = hx.engine("local").knn(qt, k=8)
+            dd = np.asarray(ref.dists)
+            assert any((dd[i, :-1] == dd[i, 1:]).any()
+                       for i in range(dd.shape[0]))
+            same(ref, hx.engine("dist-ooc", shards=2,
+                                memory_budget_mb=8).knn(qt, k=8))
+    print("DIST_OOC_MESH2_OK")
+""")
+
+
+def test_dist_ooc_two_device_subprocess():
+    res = subprocess.run([sys.executable, "-c", _MESH2_SCRIPT],
+                         cwd="/root/repo", capture_output=True, text=True,
+                         timeout=600)
+    assert "DIST_OOC_MESH2_OK" in res.stdout, res.stderr[-3000:]
